@@ -1,0 +1,210 @@
+"""Benchmarks reproducing the paper's tables/figures.
+
+Each function writes a CSV under bench_out/ and returns summary rows.
+Budgets default to CI scale (the paper used 20 000 evals/workload; pass
+--budget 20000 for the full setting — the jit-vectorized evaluator makes
+that feasible too).
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.configs.paper_workloads import (all_workloads, by_name,
+                                           conv_workloads, mm_workloads)
+from repro.core import accel, search
+from repro.core.workload import spmm
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "bench_out")
+
+
+def _write_csv(name: str, header: Sequence[str], rows: List[Sequence]):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+# ----------------------------------------------------------- Fig. 17
+
+
+def fig17_baselines(budget: int = 1500, seeds: Sequence[int] = (0,),
+                    workload_names: Sequence[str] = ("conv2", "conv4",
+                                                     "conv5", "conv7"),
+                    platform: str = "cloud") -> List[Dict]:
+    """Fig. 17(a)/(b): SparseMap vs classical optimizers on pruned-VGG16
+    layers (EDP + valid-point fraction under the same budget)."""
+    methods = ["sparsemap", "pso", "mcts", "tbpsa", "ppo", "dqn"]
+    rows, out = [], []
+    for wname in workload_names:
+        wl = by_name(wname)
+        for method in methods:
+            edps, valids = [], []
+            for seed in seeds:
+                t0 = time.time()
+                res = search.run(method, wl, platform, budget=budget,
+                                 seed=seed)
+                edps.append(res.best_edp)
+                valids.append(res.valid_fraction)
+            rec = dict(workload=wname, method=method,
+                       edp=float(np.min(edps)),
+                       valid_frac=float(np.mean(valids)),
+                       budget=budget, seconds=round(time.time() - t0, 1))
+            out.append(rec)
+            rows.append([wname, method, rec["edp"], rec["valid_frac"],
+                         budget])
+    _write_csv("fig17.csv",
+               ["workload", "method", "best_edp", "valid_frac", "budget"],
+               rows)
+    return out
+
+
+# ----------------------------------------------------------- Table IV
+
+
+def table_iv(budget: int = 1500, seed: int = 0,
+             platforms: Sequence[str] = ("edge", "mobile", "cloud"),
+             workload_names: Sequence[str] = None) -> List[Dict]:
+    """Table IV: ours vs Sparseloop-Mapper-like vs SAGE-like across the
+    28 workloads x 3 platforms."""
+    wls = all_workloads() if workload_names is None else \
+        [by_name(n) for n in workload_names]
+    methods = ["random_mapper", "sage_like", "sparsemap"]
+    rows, out = [], []
+    for wl in wls:
+        for plat in platforms:
+            rec = dict(workload=wl.name, platform=plat)
+            for method in methods:
+                res = search.run(method, wl, plat, budget=budget,
+                                 seed=seed)
+                rec[method] = res.best_edp
+            rec["speedup_vs_sparseloop"] = (
+                rec["random_mapper"] / rec["sparsemap"]
+                if np.isfinite(rec["sparsemap"]) else float("nan"))
+            rec["speedup_vs_sage"] = (
+                rec["sage_like"] / rec["sparsemap"]
+                if np.isfinite(rec["sparsemap"]) else float("nan"))
+            out.append(rec)
+            rows.append([wl.name, plat, rec["random_mapper"],
+                         rec["sage_like"], rec["sparsemap"],
+                         rec["speedup_vs_sparseloop"],
+                         rec["speedup_vs_sage"]])
+    _write_csv("table_iv.csv",
+               ["workload", "platform", "sparseloop_like", "sage_like",
+                "sparsemap", "speedup_vs_sparseloop", "speedup_vs_sage"],
+               rows)
+    return out
+
+
+# ----------------------------------------------------------- Fig. 18
+
+
+def fig18_ablation(budget: int = 3000, seed: int = 0,
+                   workload_names: Sequence[str] = ("mm3", "conv4"),
+                   platform: str = "cloud") -> List[Dict]:
+    """Fig. 18: standard ES (direct encoding) vs +PFCE vs full SparseMap
+    (+CEOI); convergence curves to CSV."""
+    methods = ["standard_es", "pfce_es", "sparsemap"]
+    rows, out = [], []
+    for wname in workload_names:
+        wl = by_name(wname)
+        for method in methods:
+            res = search.run(method, wl, platform, budget=budget,
+                             seed=seed)
+            # subsample history to 100 points
+            h = res.history
+            idx = np.linspace(0, len(h) - 1, 100).astype(int)
+            for i in idx:
+                rows.append([wname, method, int(i), h[i]])
+            out.append(dict(workload=wname, method=method,
+                            best_edp=res.best_edp,
+                            valid_frac=res.valid_fraction))
+    _write_csv("fig18.csv", ["workload", "method", "eval", "best_edp"],
+               rows)
+    return out
+
+
+# ----------------------------------------------------------- Fig. 2
+
+
+def fig2_interaction(platform: str = "mobile") -> List[Dict]:
+    """Fig. 2: no single (mapping x format) wins across sparsity — we
+    sweep OS/IS mappings x {CSR-like, RLE} formats over densities."""
+    from repro.core.cost_model import Design, evaluate, make_tensor_format
+    from repro.core.encoding import GenomeSpec
+    from repro.core.mapping import Mapping, balanced_mapping
+    from repro.core.sparse import SparseStrategy
+
+    plat = accel.PLATFORMS[platform]
+    rows, out = [], []
+    for dens in (0.05, 0.1, 0.2, 0.4, 0.8):
+        wl = spmm(f"fig2_d{dens}", 256, 512, 256, dens, dens)
+        spec = GenomeSpec(wl)
+        for mapping_name in ("OS", "IS"):
+            mp = balanced_mapping(wl, plat.n_pe, plat.macs_per_pe)
+            if mapping_name == "IS":
+                # input stationary: move contraction dims outermost
+                perms = tuple(
+                    tuple(reversed(p)) for p in mp.perms)
+                mp = Mapping(workload=wl, factors=mp.factors, perms=perms)
+            for fmt_name, genes in (("CSR", (0, 0, 0, 4, 3)),
+                                    ("RLE", (0, 0, 0, 0, 2))):
+                fmts = {t.name: make_tensor_format(mp, t.name, genes)
+                        for t in wl.tensors}
+                fmts["Z"] = make_tensor_format(mp, "Z", (0, 0, 0, 0, 0))
+                st = SparseStrategy(formats=fmts,
+                                    sg={"L2": 0, "L3": 0, "C": 3})
+                rep = evaluate(Design(mp, st), plat)
+                rec = dict(density=dens, mapping=mapping_name,
+                           fmt=fmt_name, valid=rep.valid,
+                           edp=rep.edp if rep.valid else float("inf"),
+                           latency=rep.cycles if rep.valid else
+                           float("inf"),
+                           energy=rep.energy_pj if rep.valid else
+                           float("inf"))
+                out.append(rec)
+                rows.append([dens, mapping_name, fmt_name, rep.valid,
+                             rec["edp"], rec["latency"], rec["energy"]])
+    _write_csv("fig2.csv", ["density", "mapping", "format", "valid",
+                            "edp", "latency_cycles", "energy_pj"], rows)
+    return out
+
+
+# ----------------------------------------------------------- Fig. 7
+
+
+def fig7_space(n_samples: int = 1000, platform: str = "cloud",
+               seed: int = 0) -> Dict:
+    """Fig. 7: random design points; valid points are a small colored
+    island in a sea of invalid ones.  PCA over mapping/sparse gene
+    blocks reproduces the scatter structure."""
+    wl = by_name("mm3")
+    spec, ev = search.get_evaluator(wl, platform)
+    rng = np.random.default_rng(seed)
+    G = spec.random_genomes(rng, n_samples)
+    res = ev(G)
+    valid = np.asarray(res["valid"])
+    edp = np.asarray(res["edp"])
+
+    def pca1(block: np.ndarray) -> np.ndarray:
+        x = block.astype(np.float64)
+        x = (x - x.mean(0)) / (x.std(0) + 1e-9)
+        cov = x.T @ x / len(x)
+        w, v = np.linalg.eigh(cov)
+        return x @ v[:, -1]
+
+    map_end = spec.segments["tiling"].stop
+    xs = pca1(G[:, :map_end])
+    ys = pca1(G[:, map_end:])
+    rows = [[xs[i], ys[i], bool(valid[i]),
+             edp[i] if valid[i] else ""] for i in range(n_samples)]
+    _write_csv("fig7.csv", ["pca_mapping", "pca_sparse", "valid", "edp"],
+               rows)
+    return dict(n=n_samples, valid_frac=float(valid.mean()))

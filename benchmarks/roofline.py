@@ -1,0 +1,96 @@
+"""Roofline table from the dry-run JSONL (EXPERIMENTS.md §Roofline).
+
+Reads bench_out/dryrun.jsonl (written by repro.launch.sweep / dryrun) and
+emits the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck, MODEL_FLOPS/HLO ratio, and a markdown table.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "bench_out")
+
+
+def load(path: Optional[str] = None) -> List[Dict]:
+    path = path or os.path.join(OUT_DIR, "dryrun.jsonl")
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            # last record wins (reruns after fixes)
+            if r.get("status") in ("ok", "skipped") or key not in recs:
+                recs[key] = r
+    return list(recs.values())
+
+
+def table(recs: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             status="skipped", reason=r.get("reason", "")))
+            continue
+        if r.get("status") != "ok":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             status="error", reason=r.get("error", "")))
+            continue
+        terms = dict(compute=r["t_compute_s"], memory=r["t_memory_s"],
+                     collective=r["t_collective_s"])
+        dom = max(terms, key=terms.get)
+        t_bound = max(terms.values())
+        frac = terms["compute"] / t_bound if t_bound > 0 else 0.0
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], status="ok",
+            t_compute_s=r["t_compute_s"], t_memory_s=r["t_memory_s"],
+            t_collective_s=r["t_collective_s"], bottleneck=dom,
+            roofline_fraction=frac,
+            useful_flops_ratio=r.get("useful_flops_ratio", 0.0),
+            state_gb=r.get("state_bytes_per_device", 0) / 1e9,
+            compile_s=r.get("compile_s", 0)))
+    return rows
+
+
+def markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | comp/roof | 6ND/HLO | state GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']}: {r.get('reason','')[:60]} | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['bottleneck']}** | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['state_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skipped"]
+    print(f"dryrun records: {len(recs)} ({len(ok)} ok, {len(sk)} skipped)")
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(recs, mesh)
+        name = f"roofline_{mesh.replace('x','_')}.md"
+        path = os.path.join(OUT_DIR, name)
+        with open(path, "w") as f:
+            f.write(markdown(rows) + "\n")
+        print(f"wrote {path} ({len(rows)} rows)")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

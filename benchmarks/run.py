@@ -1,0 +1,128 @@
+"""Benchmark harness: one benchmark per paper table/figure + the roofline
+table from the dry-run.  Prints ``name,seconds,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--budget N] [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only fig18
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal budgets (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (20k evals/workload)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig2,fig7,fig17,fig18,"
+                         "table_iv,roofline,arch_dse")
+    args = ap.parse_args(argv)
+
+    budget = args.budget or (300 if args.quick else
+                             20000 if args.full else 10000)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import paper_tables, roofline
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,seconds,derived")
+
+    if want("fig2"):
+        t0 = time.time()
+        rows = paper_tables.fig2_interaction()
+        # derived: does the best (mapping,fmt) change across densities?
+        best = {}
+        for r in rows:
+            if not r["valid"]:
+                continue
+            key = r["density"]
+            if key not in best or r["edp"] < best[key][1]:
+                best[key] = ((r["mapping"], r["fmt"]), r["edp"])
+        winners = {v[0] for v in best.values()}
+        print(f"fig2_interaction,{time.time()-t0:.1f},"
+              f"distinct_winners={len(winners)}")
+
+    if want("fig7"):
+        t0 = time.time()
+        info = paper_tables.fig7_space(n_samples=1000)
+        print(f"fig7_space,{time.time()-t0:.1f},"
+              f"valid_frac={info['valid_frac']:.4f}")
+
+    if want("fig17"):
+        t0 = time.time()
+        wl_names = ("conv2", "conv4") if args.quick else \
+            ("conv2", "conv4", "conv5", "conv7")
+        out = paper_tables.fig17_baselines(budget=budget,
+                                           workload_names=wl_names)
+        ours = {r["workload"]: r["edp"] for r in out
+                if r["method"] == "sparsemap"}
+        ratios = []
+        for w, o in ours.items():
+            b = min(r["edp"] for r in out
+                    if r["workload"] == w and r["method"] != "sparsemap")
+            if np.isfinite(b) and np.isfinite(o) and o > 0:
+                ratios.append(b / o)
+        gm = float(np.exp(np.mean(np.log(ratios)))) if ratios else 0.0
+        print(f"fig17_baselines,{time.time()-t0:.1f},"
+              f"geomean_best_baseline_over_ours={gm:.2f}x")
+
+    if want("fig18"):
+        t0 = time.time()
+        out = paper_tables.fig18_ablation(budget=max(budget, 2000))
+        summary = {(r['workload'], r['method']): r['best_edp']
+                   for r in out}
+        ok = all(
+            summary[(w, 'sparsemap')] <= summary[(w, 'pfce_es')] * 1.5
+            for w in ('mm3', 'conv4'))
+        print(f"fig18_ablation,{time.time()-t0:.1f},ordering_holds={ok}")
+
+    if want("table_iv"):
+        t0 = time.time()
+        wl_names = None
+        if args.quick:
+            wl_names = ["mm1", "mm3", "conv2", "conv4"]
+        out = paper_tables.table_iv(budget=budget,
+                                    workload_names=wl_names)
+        sp = [r["speedup_vs_sparseloop"] for r in out
+              if np.isfinite(r.get("speedup_vs_sparseloop", np.nan))]
+        sg = [r["speedup_vs_sage"] for r in out
+              if np.isfinite(r.get("speedup_vs_sage", np.nan))]
+        gm_sp = float(np.exp(np.mean(np.log(np.maximum(sp, 1e-9))))) \
+            if sp else 0.0
+        gm_sg = float(np.exp(np.mean(np.log(np.maximum(sg, 1e-9))))) \
+            if sg else 0.0
+        print(f"table_iv,{time.time()-t0:.1f},"
+              f"geomean_edp_reduction_vs_sparseloop={gm_sp:.2f}x;"
+              f"vs_sage={gm_sg:.2f}x")
+
+    if want("arch_dse"):
+        t0 = time.time()
+        from repro.configs.paper_workloads import arch_gemms
+        from repro.core import search as search_lib
+        rows = []
+        for arch in ("mistral-nemo-12b", "kimi-k2-1t-a32b"):
+            for wl in arch_gemms(arch)[:2]:
+                res = search_lib.run("sparsemap", wl, "cloud",
+                                     budget=budget, seed=0)
+                rows.append((wl.name, res.best_edp))
+        print(f"arch_dse,{time.time()-t0:.1f},"
+              f"searched={len(rows)}_arch_gemms")
+
+    if want("roofline"):
+        t0 = time.time()
+        recs = roofline.main()
+        ok = sum(1 for r in recs if r.get("status") == "ok")
+        print(f"roofline,{time.time()-t0:.1f},cells_ok={ok}")
+
+
+if __name__ == "__main__":
+    main()

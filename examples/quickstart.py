@@ -1,0 +1,49 @@
+"""Quickstart: run SparseMap's joint mapping x sparse-strategy search on
+one paper workload, print the winning accelerator design, then train a
+reduced LM for a few steps with the surrounding framework.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import numpy as np
+
+
+def main():
+    # ---------------- 1. the paper's DSE ----------------
+    from repro.core import search
+    from repro.core.workload import spmm
+    from repro.configs.paper_workloads import by_name
+
+    wl = by_name("conv4")       # pruned VGG16 layer (Table III)
+    print(f"workload {wl.name}: dims={wl.orig_dim_sizes} "
+          f"densities=({wl.tensors[0].density:.2f}, "
+          f"{wl.tensors[1].density:.2f})")
+
+    t0 = time.time()
+    res = search.run("sparsemap", wl, "cloud", budget=2000, seed=0)
+    print(f"SparseMap: best EDP {res.best_edp:.3e} "
+          f"(valid {100 * res.valid_fraction:.0f}% of "
+          f"{res.evals} evals, {time.time() - t0:.1f}s)")
+
+    base = search.run("random_mapper", wl, "cloud", budget=2000, seed=0)
+    print(f"Sparseloop-Mapper-like baseline: {base.best_edp:.3e} "
+          f"({base.best_edp / res.best_edp:.1f}x worse)")
+
+    design = search.decode_best(wl, res)
+    print("\nwinning mapping:")
+    print(design.mapping.describe())
+    print("sparse strategy:",
+          {t: [f for f in fmt.formats] for t, fmt in
+           design.strategy.formats.items()},
+          "S/G:", design.strategy.sg)
+
+    # ---------------- 2. train a small LM ----------------
+    from repro.launch import train
+    print("\ntraining xlstm-350m (smoke config) for 30 steps...")
+    train.main(["--arch", "xlstm-350m", "--smoke", "--steps", "30",
+                "--batch", "4", "--seq", "64", "--log-every", "10"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Fault-tolerant checkpointing: per-leaf npz shards, atomic commit,
+elastic re-sharding on restore.
+
+Layout:
+    <dir>/step_000123.tmp-<nonce>/   (staging)
+        meta.json                    (step, tree structure, shapes, dtypes)
+        leaf_00000.npy ...
+    <dir>/step_000123/               (atomic rename = commit)
+
+Restore is shape-checked against the target tree; because every leaf is
+stored UNSHARDED (gathered) and re-sharding happens at device_put time,
+the same checkpoint restores onto ANY mesh — elastic shrink/grow is a
+restore with different shardings (tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = ["/".join(str(k) for k in path)
+             for path, _ in leaves_with_paths]
+    leaves = [leaf for _, leaf in leaves_with_paths]
+    return paths, leaves
+
+
+def save(directory: str, step: int, tree: Any,
+         keep_last: int = 3) -> str:
+    """Write a checkpoint atomically; prune old ones; return its path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    staging = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-",
+                               dir=directory)
+    paths, leaves = _flatten_with_paths(tree)
+    meta = {"step": step, "paths": paths,
+            "shapes": [list(np.shape(x)) for x in leaves],
+            "dtypes": [str(jnp.asarray(x).dtype) for x in leaves],
+            "time": time.time()}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "fiub":        # ml_dtypes (bf16, fp8...)
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                           else np.uint8)
+        np.save(os.path.join(staging, f"leaf_{i:05d}.npy"), arr)
+    with open(os.path.join(staging, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    os.rename(staging, final)           # atomic commit
+    _prune(directory, keep_last)
+    return final
+
+
+def _prune(directory: str, keep_last: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and ".tmp-" not in d)
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    # remove stale staging dirs (crashed writers)
+    for d in os.listdir(directory):
+        if ".tmp-" in d:
+            full = os.path.join(directory, d)
+            if time.time() - os.path.getmtime(full) > 3600:
+                shutil.rmtree(full, ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and ".tmp-" not in d]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, target_tree: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``target_tree``; if ``shardings``
+    (a matching tree of jax.sharding.Sharding) is given, leaves are
+    device_put with those shardings — restoring onto a different mesh
+    than the one that saved is exactly this path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    t_paths, t_leaves = _flatten_with_paths(target_tree)
+    by_path = {p: i for i, p in enumerate(meta["paths"])}
+    out_leaves = []
+    sh_leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "device_set")) \
+        if shardings is not None else [None] * len(t_leaves)
+    for tp, tl, sh in zip(t_paths, t_leaves, sh_leaves):
+        if tp not in by_path:
+            raise KeyError(f"checkpoint missing leaf {tp}")
+        i = by_path[tp]
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        want = tuple(np.shape(tl))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{tp}: checkpoint shape {arr.shape} != "
+                             f"target {want}")
+        saved_dtype = meta["dtypes"][i]
+        if arr.dtype.kind == "u" and saved_dtype in (
+                "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            arr = arr.view(jnp.dtype(saved_dtype))   # restore raw bits
+        tgt = tl.dtype if hasattr(tl, "dtype") else np.asarray(tl).dtype
+        if arr.dtype != tgt:
+            arr = np.asarray(jnp.asarray(arr).astype(tgt))
+        if sh is not None:
+            out_leaves.append(jax.device_put(arr, sh))
+        else:
+            out_leaves.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(target_tree)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

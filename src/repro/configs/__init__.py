@@ -1,0 +1,2 @@
+from .archs import ARCHS, get_config, smoke_config
+from .shapes import LONG_CONTEXT_ARCHS, SHAPES, all_cells, applicable

@@ -1,0 +1,17 @@
+"""SparseMap core: joint mapping x sparse-strategy DSE for sparse tensor
+accelerators via an enhanced evolution strategy (Zhao et al., 2025).
+
+Public entry points:
+    repro.core.workload   — SpMM/SpConv workload definitions (Table III)
+    repro.core.accel      — platform models (Table II) + TPU constants
+    repro.core.search     — run("sparsemap"| baselines, workload, platform)
+    repro.core.evolution  — the ES engine (HSHI, annealing mutation, SAC)
+    repro.core.autoshard  — beyond-paper: the same ES over the distributed
+                            sharding space of this framework
+"""
+from . import accel, workload
+from .cost_model import CostReport, Design, evaluate
+from .encoding import GenomeSpec
+from .evolution import ESConfig, SearchResult, evolve
+from .jax_cost import JaxCostModel
+from .workload import Workload, batched_spmm, spconv, spmm

@@ -1,0 +1,229 @@
+"""Sparseloop-class analytical cost model (SparseMap §IV.I "Evaluation
+Environment"; Sparseloop/TimeloopV2 methodology).
+
+Given (Workload, Mapping, SparseStrategy, Platform) it returns energy (pJ),
+latency (cycles), EDP (cycles * pJ) and a validity verdict.  The paper uses
+the TimeloopV2 binary; this is a faithful re-implementation of its published
+accounting (per-level access counts from loop-nest reuse analysis, density-
+scaled by the sparse strategy, per-access energy tables) — see DESIGN.md §5
+for the assumptions.
+
+Traffic edges and the S/G site that filters each edge:
+
+    DRAM -> GLB       : compression only (no S/G)
+    GLB  -> PE buffer : "L2" S/G site
+    PEbuf-> MAC regs  : "L3" S/G site
+    MAC ops           : "C"  S/G site
+
+Skip scales energy AND cycles; Gate scales energy only (Fig. 6).  A skip
+anywhere whose leader is tensor T multiplies the effectual compute-cycle
+fraction by density(T) (the paper's Fig. 14: skipping empty P rows at the
+GLB skips the whole corresponding compute iterations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .accel import Platform
+from .mapping import Mapping, N_LEVELS, SPATIAL_LEVELS
+from .sparse import (FMT_U, SparseStrategy, TensorFormat, effective_bytes,
+                     followers, is_gate, is_skip, leaders)
+from .workload import WORD_BYTES, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class Design:
+    mapping: Mapping
+    strategy: SparseStrategy
+
+
+@dataclasses.dataclass
+class CostReport:
+    valid: bool
+    reason: str = ""
+    energy_pj: float = 0.0
+    cycles: float = 0.0
+    edp: float = float("inf")
+    # --- breakdowns for analysis/benchmarks ---
+    energy_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+    traffic_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    compute_cycles: float = 0.0
+    dram_cycles: float = 0.0
+    glb_occupancy_bytes: float = 0.0
+    pebuf_occupancy_bytes: float = 0.0
+
+    @property
+    def fitness(self) -> float:
+        return 0.0 if not self.valid else 1.0 / max(self.edp, 1e-30)
+
+
+def tiled_subdims(mapping: Mapping, tensor_name: str
+                  ) -> Tuple[Tuple[int, str, int], ...]:
+    """Tiled sub-dimensions of a tensor, outer->inner: (level, dim, size),
+    keeping only factors > 1 (paper Fig. 13: formats are specified for the
+    sub-dimensions that actually exist)."""
+    t = mapping.workload.tensor(tensor_name)
+    out = []
+    for lvl in range(N_LEVELS):
+        for d in mapping.perms[lvl]:
+            if d in t.dims:
+                f = mapping.factors[lvl].get(d, 1)
+                if f > 1:
+                    out.append((lvl, d, f))
+    return tuple(out)
+
+
+def spatial_subdim_indices(mapping: Mapping, tensor_name: str
+                           ) -> Tuple[int, ...]:
+    subs = tiled_subdims(mapping, tensor_name)
+    return tuple(i for i, (lvl, _, _) in enumerate(subs)
+                 if lvl in SPATIAL_LEVELS)
+
+
+def make_tensor_format(mapping: Mapping, tensor_name: str,
+                       fmt_genes: Tuple[int, ...]) -> TensorFormat:
+    """Apply the paper's gene->format rule: the sub-segment has
+    ``MAX_FMT_GENES`` genes; the LAST k genes map to the k tiled
+    sub-dimensions; sub-dimensions beyond the first 5 stay uncompressed."""
+    subs = tiled_subdims(mapping, tensor_name)
+    k = len(subs)
+    ng = len(fmt_genes)
+    if k <= ng:
+        fmts = tuple(fmt_genes[ng - k:])
+    else:
+        fmts = tuple(fmt_genes) + tuple([FMT_U] * (k - ng))
+    return TensorFormat(tensor=tensor_name, formats=fmts,
+                        fiber_lens=tuple(s for _, _, s in subs))
+
+
+# --------------------------------------------------------------------------
+
+
+def evaluate(design: Design, platform: Platform) -> CostReport:
+    mp = design.mapping
+    st = design.strategy
+    wl = mp.workload
+
+    # ---------- validity: spatial fanout ----------
+    if mp.spatial_fanout(2) > platform.n_pe:
+        return CostReport(False, f"L2_S fanout {mp.spatial_fanout(2)} "
+                                 f"> {platform.n_pe} PEs")
+    if mp.spatial_fanout(4) > platform.macs_per_pe:
+        return CostReport(False, f"L3_S fanout {mp.spatial_fanout(4)} "
+                                 f"> {platform.macs_per_pe} MACs/PE")
+
+    # ---------- validity: sparse strategy ----------
+    spatial_subs = {t.name: spatial_subdim_indices(mp, t.name)
+                    for t in wl.tensors}
+    ok, why = st.valid(spatial_subs)
+    if not ok:
+        return CostReport(False, why)
+
+    dens = {t.name: wl.density_of(t.name) for t in wl.tensors}
+
+    def tile_bytes(store: str, tname: str) -> float:
+        n = mp.tensor_tile_elems(store, tname)
+        return effective_bytes(st.formats[tname], dens[tname], n, WORD_BYTES)
+
+    # ---------- validity: buffer capacities ----------
+    glb_occ = sum(tile_bytes("glb", t.name) for t in wl.tensors)
+    if glb_occ > platform.glb_bytes:
+        return CostReport(False, f"GLB overflow {glb_occ:.0f}B "
+                                 f"> {platform.glb_bytes}B")
+    pe_occ = sum(tile_bytes("pebuf", t.name) for t in wl.tensors)
+    if pe_occ > platform.pe_buffer_bytes:
+        return CostReport(False, f"PE buffer overflow {pe_occ:.0f}B "
+                                 f"> {platform.pe_buffer_bytes}B")
+
+    # ---------- per-tensor average bytes per dense position ----------
+    def comp_ratio(tname: str) -> float:
+        full = wl.tensor(tname).size(wl.dim_sizes)
+        return effective_bytes(st.formats[tname], dens[tname], full,
+                               WORD_BYTES) / max(full * WORD_BYTES, 1)
+
+    ratio = {t.name: comp_ratio(t.name) for t in wl.tensors}
+
+    # ---------- S/G filter fractions per edge ----------
+    # edge "glb" (DRAM->GLB): no S/G.  edge "pebuf": site L2.
+    # edge "reg": site L3.  compute: site C.
+    def edge_fraction(site: str, tname: str, energy: bool) -> float:
+        sg = st.sg[site]
+        if tname not in followers(sg):
+            return 1.0
+        if is_skip(sg) or (energy and is_gate(sg)):
+            f = 1.0
+            for ld in leaders(sg):
+                if ld != tname:
+                    f *= dens[ld]
+            return f
+        return 1.0
+
+    # ---------- traffic ----------
+    z_name = wl.output.name
+    traffic_e: Dict[str, float] = {}     # energy-relevant bytes
+    traffic_t: Dict[str, float] = {}     # time-relevant bytes (DRAM only)
+    edges = (("glb", None), ("pebuf", "L2"), ("reg", "L3"))
+    for store, site in edges:
+        for t in wl.tensors:
+            fills = mp.fills(store, t.name)
+            if t.name == z_name:
+                total = wl.output.size(wl.dim_sizes)
+                # read-modify-write; write-once when fully accumulated
+                fills = max(2.0 * fills - total, float(total))
+            bytes_dense = fills * WORD_BYTES * ratio[t.name]
+            fe = ft = 1.0
+            if site is not None:
+                fe = edge_fraction(site, t.name, energy=True)
+                ft = edge_fraction(site, t.name, energy=False)
+            traffic_e[f"{store}:{t.name}"] = bytes_dense * fe
+            traffic_t[f"{store}:{t.name}"] = bytes_dense * ft
+
+    # ---------- compute ----------
+    macs_dense = float(wl.macs)
+    cycle_leaders = set()
+    energy_leaders = set()
+    for site in ("L2", "L3", "C"):
+        sg = st.sg[site]
+        if is_skip(sg):
+            cycle_leaders.update(leaders(sg))
+            energy_leaders.update(leaders(sg))
+        elif is_gate(sg):
+            energy_leaders.update(leaders(sg))
+    cyc_frac = 1.0
+    for ld in cycle_leaders:
+        cyc_frac *= dens[ld]
+    e_frac = 1.0
+    for ld in energy_leaders:
+        e_frac *= dens[ld]
+
+    compute_cycles = float(mp.temporal_iterations()) * cyc_frac
+
+    # ---------- energy ----------
+    e_glb = platform.scaled_glb_energy()
+    e_pe = platform.scaled_pebuf_energy()
+    br: Dict[str, float] = {}
+    br["dram"] = sum(v for k, v in traffic_e.items()
+                     if k.startswith("glb:")) * platform.e_dram_per_byte
+    br["glb"] = sum(v for k, v in traffic_e.items()
+                    if k.startswith("pebuf:")) * (e_glb + platform.e_noc_per_byte)
+    br["pebuf"] = sum(v for k, v in traffic_e.items()
+                      if k.startswith("reg:")) * e_pe
+    br["reg"] = sum(v for k, v in traffic_e.items()
+                    if k.startswith("reg:")) * platform.e_reg_per_byte
+    br["mac"] = macs_dense * e_frac * platform.e_mac
+    energy = sum(br.values())
+
+    # ---------- latency ----------
+    dram_bytes_t = sum(v for k, v in traffic_t.items() if k.startswith("glb:"))
+    dram_cycles = dram_bytes_t / platform.dram_bytes_per_cycle
+    cycles = max(compute_cycles, dram_cycles)
+    edp = cycles * energy
+
+    return CostReport(
+        valid=True, energy_pj=energy, cycles=cycles, edp=edp,
+        energy_breakdown=br, traffic_bytes=traffic_e,
+        compute_cycles=compute_cycles, dram_cycles=dram_cycles,
+        glb_occupancy_bytes=glb_occ, pebuf_occupancy_bytes=pe_occ,
+    )

@@ -1,0 +1,188 @@
+"""Direct value encoding — the ablation counterpoint to prime-factor +
+cantor encoding (SparseMap §IV.B, Fig. 10, Fig. 18 curve "ES").
+
+Genome layout:
+
+    [ perm x5 (RANDOM code->permutation table, Fig. 10a)
+      | factor values, d dims x 5 levels, each in [1 .. size(dim)]
+      | P fmt x5 | Q fmt x5 | Z fmt x5 | SG x3 ]
+
+The dimension-tiling constraint (prod_l factor[d,l] == size(d)) is NOT
+guaranteed by the encoding; genomes violating it are invalid — which is the
+paper's point: only ~0.000023 % of direct-encoded combinations are valid
+tilings.  Sampling and mutation draw factor values from the divisors of the
+dimension size (a generous implementation choice; uniform integers would
+never produce a single valid point at CI budgets).
+
+Valid direct genomes are translated to the canonical `GenomeSpec` genome
+and costed with the same JAX batch evaluator, so the comparison isolates
+*encoding*, not the cost model.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .encoding import GenomeSpec, all_permutations, cantor_encode
+from .mapping import N_LEVELS
+from .sparse import MAX_FMT_GENES, N_SG
+from .workload import Workload
+
+
+def divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+class DirectValueSpec:
+    """Direct-value genome with a scrambled permutation code table."""
+
+    def __init__(self, canonical: GenomeSpec, seed: int = 1234):
+        self.canonical = canonical
+        wl = canonical.workload
+        self.workload = wl
+        self.d = wl.ndims
+        rng = np.random.default_rng(seed)
+        nperm = math.factorial(self.d)
+        # random encoding: code -> arbitrary permutation (Fig. 10a)
+        self.scramble = rng.permutation(nperm)
+        self._perm_table = all_permutations(self.d)
+        self.div: Dict[str, List[int]] = {
+            dim: divisors(wl.dim_sizes[dim]) for dim in wl.dim_order}
+
+        self.n_factor_genes = self.d * N_LEVELS
+        self.length = (N_LEVELS + self.n_factor_genes +
+                       MAX_FMT_GENES * 3 + 3)
+        self.perm_sl = slice(0, N_LEVELS)
+        self.fact_sl = slice(N_LEVELS, N_LEVELS + self.n_factor_genes)
+        self.tail_sl = slice(N_LEVELS + self.n_factor_genes, self.length)
+        self.n_perm_codes = nperm
+
+    # -------------------------------------------------------- sampling
+    def random_genomes(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        g = np.zeros((n, self.length), dtype=np.int64)
+        g[:, self.perm_sl] = rng.integers(0, self.n_perm_codes,
+                                          (n, N_LEVELS))
+        col = self.fact_sl.start
+        for dim in self.workload.dim_order:
+            dv = np.asarray(self.div[dim])
+            for lvl in range(N_LEVELS):
+                g[:, col] = dv[rng.integers(0, len(dv), n)]
+                col += 1
+        tail = self.canonical.length - self.canonical.segments["fmt_P"].start
+        tail_ub = self.canonical.gene_ub[-tail:]
+        g[:, self.tail_sl] = (rng.random((n, tail)) *
+                              tail_ub[None, :]).astype(np.int64)
+        return g
+
+    def mutate_gene(self, g: np.ndarray, i: int, j: int,
+                    rng: np.random.Generator) -> None:
+        if j < self.perm_sl.stop:
+            g[i, j] = rng.integers(0, self.n_perm_codes)
+        elif j < self.fact_sl.stop:
+            rel = j - self.fact_sl.start
+            dim = self.workload.dim_order[rel // N_LEVELS]
+            dv = self.div[dim]
+            g[i, j] = dv[rng.integers(0, len(dv))]
+        else:
+            rel = j - self.tail_sl.start
+            ub = self.canonical.gene_ub[
+                self.canonical.segments["fmt_P"].start + rel]
+            g[i, j] = rng.integers(0, ub)
+
+    # -------------------------------------------------------- decode
+    def to_canonical(self, g: np.ndarray) -> Optional[np.ndarray]:
+        """Translate to the canonical genome; None if the tiling constraint
+        is violated (invalid individual)."""
+        wl = self.workload
+        factors = g[self.fact_sl].reshape(self.d, N_LEVELS)
+        for i, dim in enumerate(wl.dim_order):
+            if int(np.prod(factors[i])) != wl.dim_sizes[dim]:
+                return None
+        out = np.zeros(self.canonical.length, dtype=np.int64)
+        # perms: scrambled code -> permutation -> cantor code
+        for lvl in range(N_LEVELS):
+            code = int(self.scramble[g[self.perm_sl][lvl]])
+            out[self.canonical.segments["perm"].start + lvl] = code
+        # tiling: distribute primes of each dim over levels per the factors
+        from .workload import prime_factorize
+        tpos = self.canonical.segments["tiling"].start
+        remaining = {dim: list(factors[i])
+                     for i, dim in enumerate(wl.dim_order)}
+        for k, (dim, p) in enumerate(self.canonical.primes):
+            for lvl in range(N_LEVELS):
+                if remaining[dim][lvl] % p == 0 and remaining[dim][lvl] > 1:
+                    remaining[dim][lvl] //= p
+                    out[tpos + k] = lvl
+                    break
+            else:
+                return None
+        out[self.canonical.segments["fmt_P"].start:] = g[self.tail_sl]
+        return out
+
+    def make_batch_eval(self, canonical_eval):
+        """Wrap the canonical batch evaluator: direct genomes that violate
+        the tiling constraint are invalid without costing."""
+        def _eval(genomes: np.ndarray) -> Dict[str, np.ndarray]:
+            n = len(genomes)
+            valid = np.zeros(n, dtype=bool)
+            edp = np.full(n, np.inf)
+            canon = []
+            index = []
+            for i in range(n):
+                c = self.to_canonical(genomes[i])
+                if c is not None:
+                    canon.append(c)
+                    index.append(i)
+            if canon:
+                out = canonical_eval(np.stack(canon))
+                v = np.asarray(out["valid"])
+                e = np.asarray(out["edp"], dtype=np.float64)
+                for k, i in enumerate(index):
+                    valid[i] = bool(v[k])
+                    edp[i] = e[k] if v[k] else np.inf
+            return dict(valid=valid, edp=edp,
+                        log10_edp=np.log10(np.maximum(edp, 1e-30)))
+        return _eval
+
+
+def direct_standard_es(canonical_spec: GenomeSpec, canonical_eval,
+                       budget: int, seed: int, platform=None,
+                       pop_size: int = 100, parent_frac: float = 0.4,
+                       elite_frac: float = 0.1,
+                       p_mut: float = 0.9) -> "SearchResult":
+    """Standard ES on the direct encoding (Fig. 18 curve 'ES'): LHS-style
+    init, uniform single-point crossover, uniform mutation."""
+    from .evolution import SearchResult, _Budget
+    rng = np.random.default_rng(seed)
+    spec = DirectValueSpec(canonical_spec)
+    ev = spec.make_batch_eval(canonical_eval)
+    tracker = _Budget(budget)
+
+    pop = spec.random_genomes(rng, pop_size)
+    edp = tracker.register(pop, ev(pop))
+    n_parents = max(2, int(pop_size * parent_frac))
+    n_elite = max(1, int(pop_size * elite_frac))
+    while not tracker.exhausted:
+        order = np.argsort(edp)
+        parents = pop[order[:n_parents]]
+        elites = pop[order[:n_elite]].copy()
+        elite_edp = edp[order[:n_elite]].copy()
+        kids = np.empty((pop_size - n_elite, spec.length), dtype=np.int64)
+        for i in range(len(kids)):
+            a, b = rng.integers(0, len(parents), 2)
+            cut = rng.integers(1, spec.length)
+            kids[i, :cut] = parents[a, :cut]
+            kids[i, cut:] = parents[b, cut:]
+            if rng.random() < p_mut:
+                for _ in range(2):
+                    spec.mutate_gene(kids, i, rng.integers(0, spec.length),
+                                     rng)
+        kedp = tracker.register(kids, ev(kids))
+        pop = np.concatenate([elites, kids])
+        edp = np.concatenate([elite_edp, kedp])
+    return SearchResult(best_edp=tracker.best, best_genome=tracker.best_genome,
+                        history=np.asarray(tracker.hist),
+                        evals=tracker.evals, valid_evals=tracker.valid,
+                        extras=dict(method="direct_standard_es"))

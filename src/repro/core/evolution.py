@@ -1,0 +1,346 @@
+"""SparseMap's evolution strategy (§IV.D, §IV.E, §IV.H, Fig. 16).
+
+Components:
+* **High-Sensitivity Hypercube Initialization (HSHI)** — the design space is
+  partitioned into ~pop_size hypercubes along the high-sensitivity genes; a
+  small random-search budget per cube finds one valid individual, with
+  low-sensitivity genes seeded from the valid combinations collected during
+  sensitivity calibration.
+* **Annealing mutation** — Eq. (6)/(7): P_h(g) = 0.8*exp(-phi)*(1-phi),
+  phi = g/G, shifting mutation mass from high- to low-sensitivity segments.
+* **Sensitivity-aware crossover** — single-point crossover whose cut points
+  are restricted to the natural boundaries of high-sensitivity segments, so
+  high-sensitivity gene runs are never fragmented.
+* **Evaluation & selection** — population fitness from the batch cost model
+  (invalid individuals have fitness 0); elitist truncation selection.
+
+`evolve` also implements the ablation variants of Fig. 18: standard ES with
+LHS init, uniform crossover/mutation (``use_hshi=False, use_custom_ops=False``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .encoding import GenomeSpec
+from .sensitivity import SensitivityResult, calibrate
+
+
+@dataclasses.dataclass
+class ESConfig:
+    pop_size: int = 100
+    budget: int = 20_000            # total cost-model evaluations
+    parent_frac: float = 0.4
+    elite_frac: float = 0.1
+    p_mutation: float = 0.9
+    genes_per_mutation: int = 2
+    # ablation switches (Fig. 18)
+    use_hshi: bool = True
+    use_custom_ops: bool = True     # annealing mutation + SA crossover
+    # HSHI parameters (§IV.D: ~100 cubes, budget 20 random tries each)
+    n_cubes: Optional[int] = None   # default: pop_size
+    cube_budget: int = 20
+    # sensitivity calibration
+    calib_contexts: int = 6
+    calib_samples: int = 12
+    # beyond-paper: restart on stagnation
+    stagnation_restart: int = 0     # 0 = off; else #gens with no improvement
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_edp: float
+    best_genome: Optional[np.ndarray]
+    history: np.ndarray             # best-so-far EDP after each evaluation
+    evals: int
+    valid_evals: int
+    extras: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def valid_fraction(self) -> float:
+        return self.valid_evals / max(self.evals, 1)
+
+
+class _Budget:
+    """Tracks best-so-far vs evaluation count across batched evals."""
+
+    def __init__(self, budget: int):
+        self.budget = budget
+        self.evals = 0
+        self.valid = 0
+        self.best = np.inf
+        self.best_genome: Optional[np.ndarray] = None
+        self.hist: List[float] = []
+
+    def register(self, genomes: np.ndarray, out: Dict) -> np.ndarray:
+        """Record a batch; returns EDP array (inf where invalid).
+        Truncates the batch if it would exceed the budget."""
+        n = min(len(genomes), self.budget - self.evals)
+        valid = np.asarray(out["valid"])[:n]
+        edp = np.asarray(out["edp"], dtype=np.float64)[:n].copy()
+        edp[~valid] = np.inf
+        for i in range(n):
+            if edp[i] < self.best:
+                self.best = float(edp[i])
+                self.best_genome = genomes[i].copy()
+            self.hist.append(self.best)
+        self.evals += n
+        self.valid += int(valid.sum())
+        full = np.full(len(genomes), np.inf)
+        full[:n] = edp
+        return full
+
+    @property
+    def exhausted(self) -> bool:
+        return self.evals >= self.budget
+
+
+# ---------------------------------------------------------------- HSHI
+
+
+def hshi_init(spec: GenomeSpec, batch_eval, sens: SensitivityResult,
+              rng: np.random.Generator, pop_size: int,
+              n_cubes: Optional[int], cube_budget: int,
+              tracker: _Budget) -> np.ndarray:
+    """High-sensitivity hypercube initialization (Fig. 11)."""
+    L = spec.length
+    ub = spec.gene_ub
+    n_cubes = n_cubes or pop_size
+    hi = sens.high_indices
+    H = len(hi)
+
+    # per-gene bin counts whose product ~ n_cubes
+    bins = np.ones(L, dtype=np.int64)
+    if H > 0:
+        per = max(1, int(round(n_cubes ** (1.0 / H))))
+        for g in hi:
+            bins[g] = min(per, ub[g])
+
+    def sample_in_cube(cube_coords: Dict[int, int], n: int) -> np.ndarray:
+        g = spec.random_genomes(rng, n)
+        # low-sensitivity genes: seed from the calibration valid pool
+        if len(sens.valid_pool) > 0:
+            take = rng.random(n) < 0.5
+            rows = rng.integers(0, len(sens.valid_pool), n)
+            low = sens.low_indices
+            for i in range(n):
+                if take[i]:
+                    g[i, low] = sens.valid_pool[rows[i], low]
+        for gene, b in cube_coords.items():
+            lowv = (ub[gene] * b) // bins[gene]
+            highv = max(lowv + 1, (ub[gene] * (b + 1)) // bins[gene])
+            g[:, gene] = lowv + (rng.random(n) *
+                                 (highv - lowv)).astype(np.int64)
+        return spec.clip(g)
+
+    # enumerate cube coordinates (mixed radix over high-sens genes)
+    pop: List[np.ndarray] = []
+    cube_list: List[Dict[int, int]] = []
+    total = int(np.prod([bins[g] for g in hi])) if H else 1
+    for c in range(max(n_cubes, pop_size)):
+        coords = {}
+        cc = c % max(total, 1)
+        for g in hi:
+            coords[g] = cc % bins[g]
+            cc //= bins[g]
+        cube_list.append(coords)
+
+    # batched cube search: each round evaluates one candidate per cube
+    # (constant batch size, so jit compiles a single shape)
+    found: Dict[int, np.ndarray] = {}
+    found_edp: Dict[int, float] = {}
+    fallback: Dict[int, np.ndarray] = {}
+    for _ in range(cube_budget):
+        if len(found) == len(cube_list) or tracker.exhausted:
+            break
+        cands = np.concatenate(
+            [sample_in_cube(c, 1) for c in cube_list], axis=0)
+        out = batch_eval(cands)
+        edp = tracker.register(cands, out)
+        for j in range(len(cube_list)):
+            fallback[j] = cands[j]
+            if np.isfinite(edp[j]) and edp[j] < found_edp.get(j, np.inf):
+                found[j] = cands[j]
+                found_edp[j] = float(edp[j])
+
+    for c in range(len(cube_list)):
+        pop.append(found.get(c, fallback.get(
+            c, spec.random_genomes(rng, 1)[0])))
+        if len(pop) >= pop_size:
+            break
+    while len(pop) < pop_size:
+        pop.append(spec.random_genomes(rng, 1)[0])
+    return np.stack(pop[:pop_size])
+
+
+def lhs_init(spec: GenomeSpec, rng: np.random.Generator,
+             pop_size: int) -> np.ndarray:
+    """Latin hypercube sampling over all genes (standard-ES baseline)."""
+    L = spec.length
+    g = np.empty((pop_size, L), dtype=np.int64)
+    for j in range(L):
+        strata = (np.arange(pop_size) + rng.random(pop_size)) / pop_size
+        rng.shuffle(strata)
+        g[:, j] = (strata * spec.gene_ub[j]).astype(np.int64)
+    return spec.clip(g)
+
+
+# ---------------------------------------------------------------- operators
+
+
+def annealing_p_high(gen: int, total_gens: int) -> float:
+    """Eq. (6): P_h(g) = 0.8 * exp(-phi) * (1 - phi), phi = g/G."""
+    phi = gen / max(total_gens, 1)
+    return 0.8 * math.exp(-phi) * (1.0 - phi)
+
+
+def mutate(genomes: np.ndarray, spec: GenomeSpec, rng: np.random.Generator,
+           p_mut: float, genes_per: int,
+           sens: Optional[SensitivityResult], p_high: float) -> np.ndarray:
+    """Annealing mutation (sens given) or uniform mutation (sens=None)."""
+    out = genomes.copy()
+    L = spec.length
+    for i in range(len(out)):
+        if rng.random() >= p_mut:
+            continue
+        if sens is not None:
+            seg = sens.high_indices if rng.random() < p_high \
+                else sens.low_indices
+            if len(seg) == 0:
+                seg = np.arange(L)
+        else:
+            seg = np.arange(L)
+        for _ in range(genes_per):
+            g = int(seg[rng.integers(0, len(seg))])
+            out[i, g] = rng.integers(0, spec.gene_ub[g])
+    return out
+
+
+def crossover(parents: np.ndarray, n_children: int, spec: GenomeSpec,
+              rng: np.random.Generator,
+              sens: Optional[SensitivityResult]) -> np.ndarray:
+    """Single-point crossover.  With ``sens``: sensitivity-aware — cut
+    points restricted to high-sensitivity segment boundaries (plus genome
+    ends), never splitting a high-sensitivity run."""
+    L = spec.length
+    if sens is not None:
+        pts = {0, L}
+        for a, b in sens.high_segments():
+            pts.add(a)
+            pts.add(b)
+        cut_points = sorted(pts - {0, L}) or [L // 2]
+    else:
+        cut_points = list(range(1, L))
+    kids = np.empty((n_children, L), dtype=parents.dtype)
+    for i in range(n_children):
+        a, b = rng.integers(0, len(parents), 2)
+        cut = cut_points[rng.integers(0, len(cut_points))]
+        kids[i, :cut] = parents[a, :cut]
+        kids[i, cut:] = parents[b, cut:]
+    return kids
+
+
+# ---------------------------------------------------------------- main loop
+
+
+def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
+           sens: Optional[SensitivityResult] = None,
+           fixed_genes: Optional[Dict[int, int]] = None,
+           seeds: Optional[np.ndarray] = None) -> SearchResult:
+    """Run SparseMap's ES (or an ablation variant) under an eval budget.
+
+    ``fixed_genes`` pins gene indices to values (used by the SAGE-like
+    baseline to freeze the mapping segment).  ``seeds`` (n, L) are injected
+    into the initial population verbatim.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    tracker = _Budget(cfg.budget)
+
+    def apply_fixed(g: np.ndarray) -> np.ndarray:
+        if fixed_genes:
+            for k, v in fixed_genes.items():
+                g[..., k] = v
+        return g
+
+    # ---- sensitivity calibration (needed by HSHI + custom operators) ----
+    # The paper keeps init+calibration under ~10% of total search time; we
+    # shrink the per-gene sampling to respect that at small CI budgets.
+    if (cfg.use_hshi or cfg.use_custom_ops) and sens is None:
+        calib_target = max(int(0.10 * cfg.budget), 2 * spec.length)
+        n_ctx = cfg.calib_contexts
+        n_smp = cfg.calib_samples
+        while n_ctx * n_smp * spec.length > calib_target and n_ctx > 2:
+            n_ctx -= 1
+        while n_ctx * n_smp * spec.length > calib_target and n_smp > 4:
+            n_smp -= 1
+        sens = calibrate(spec, batch_eval, rng,
+                         n_contexts=n_ctx, n_samples=n_smp)
+        tracker.evals += sens.evals_used        # calibration counts
+        tracker.hist.extend([tracker.best] * sens.evals_used)
+
+    # ---- initialization ----
+    if cfg.use_hshi and sens is not None:
+        n_cubes = cfg.n_cubes or cfg.pop_size
+        cube_budget = min(cfg.cube_budget,
+                          max(2, int(0.15 * cfg.budget) // max(n_cubes, 1)))
+        pop = hshi_init(spec, batch_eval, sens, rng, cfg.pop_size,
+                        n_cubes, cube_budget, tracker)
+    else:
+        pop = lhs_init(spec, rng, cfg.pop_size)
+    if seeds is not None and len(seeds):
+        pop[: len(seeds)] = seeds[: len(pop)]
+    pop = apply_fixed(pop)
+    out = batch_eval(pop)
+    edp = tracker.register(pop, out)
+
+    op_sens = sens if cfg.use_custom_ops else None
+    n_parents = max(2, int(cfg.pop_size * cfg.parent_frac))
+    n_elite = max(1, int(cfg.pop_size * cfg.elite_frac))
+    total_gens = max(1, (cfg.budget - tracker.evals) // cfg.pop_size)
+
+    gen = 0
+    since_improve = 0
+    last_best = tracker.best
+    while not tracker.exhausted:
+        order = np.argsort(edp)
+        parents = pop[order[:n_parents]]
+        elites = pop[order[:n_elite]].copy()
+        elite_edp = edp[order[:n_elite]].copy()
+
+        p_high = annealing_p_high(gen, total_gens)
+        kids = crossover(parents, cfg.pop_size - n_elite, spec, rng, op_sens)
+        kids = mutate(kids, spec, rng, cfg.p_mutation,
+                      cfg.genes_per_mutation, op_sens, p_high)
+        kids = apply_fixed(spec.clip(kids))
+        kout = batch_eval(kids)
+        kedp = tracker.register(kids, kout)
+
+        pop = np.concatenate([elites, kids], axis=0)
+        edp = np.concatenate([elite_edp, kedp])
+        gen += 1
+
+        if tracker.best < last_best:
+            last_best = tracker.best
+            since_improve = 0
+        else:
+            since_improve += 1
+        if cfg.stagnation_restart and since_improve >= cfg.stagnation_restart:
+            # beyond-paper: re-seed the non-elite population
+            fresh = lhs_init(spec, rng, cfg.pop_size - n_elite)
+            fresh = apply_fixed(fresh)
+            fout = batch_eval(fresh)
+            fedp = tracker.register(fresh, fout)
+            pop = np.concatenate([elites, fresh], axis=0)
+            edp = np.concatenate([elite_edp, fedp])
+            since_improve = 0
+
+    return SearchResult(
+        best_edp=tracker.best, best_genome=tracker.best_genome,
+        history=np.asarray(tracker.hist), evals=tracker.evals,
+        valid_evals=tracker.valid,
+        extras=dict(generations=gen,
+                    sensitivity=None if sens is None else sens.scores))

@@ -1,0 +1,328 @@
+"""JAX batch evaluator for the SparseMap cost model.
+
+A jit-compiled, vmap-vectorized re-implementation of
+:mod:`repro.core.cost_model` that evaluates a whole *population* of genomes
+in one XLA call.  The numpy implementation is the exact oracle; this one is
+float32 and property-tested against it (tests/test_cost_agreement.py).
+
+Compilation strategy: all workload- and platform-specific quantities
+(primes, densities, tensor sizes, energy/capacity constants) are *traced
+arguments*, and the prime list is padded to a bucket size — so a single
+compilation is shared by every workload with the same (ndims, bucket)
+signature and every platform.  Batches are padded to powers of two.
+
+The decode is fully tensorized: tiling factors via masked products over the
+prime list, permutations via a (d!, d) lookup table, loop-nest reuse via
+reverse cumulative products over the fixed 5*d loop-slot axis, and the
+fiber-tree byte accounting via a lax.scan over the loop slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache, partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .accel import Platform
+from .encoding import GenomeSpec, all_permutations
+from .mapping import N_LEVELS
+from .sparse import MAX_FMT_GENES
+from .workload import WORD_BYTES
+
+# store indices
+GLB, PEBUF, REG = 0, 1, 2
+STORE_OUTER = np.zeros((3, N_LEVELS), dtype=bool)
+STORE_OUTER[GLB, [0]] = True
+STORE_OUTER[PEBUF, [0, 1, 2]] = True
+STORE_OUTER[REG, [0, 1, 2, 3, 4]] = True
+STORE_INNER = np.zeros((3, N_LEVELS), dtype=bool)
+STORE_INNER[GLB, [1, 2, 3, 4]] = True
+STORE_INNER[PEBUF, [3, 4]] = True
+IS_SPATIAL_LEVEL = np.array([False, False, True, False, True])
+
+# S/G lookup tables over gene value 0..6
+_V = np.arange(7)
+SG_LEADER_P = np.isin(_V, [2, 3, 5, 6])
+SG_LEADER_Q = np.isin(_V, [1, 3, 4, 6])
+SG_FOLLOW_P = np.isin(_V, [1, 3, 4, 6])
+SG_FOLLOW_Q = np.isin(_V, [2, 3, 5, 6])
+SG_IS_SKIP = _V >= 4
+SG_IS_GATE = (_V >= 1) & (_V <= 3)
+
+FMT_U, FMT_B, FMT_RLE, FMT_CP, FMT_UOP = range(5)
+
+# platform vector layout
+PLAT_FIELDS = ("n_pe", "macs_per_pe", "glb_bytes", "pe_buffer_bytes",
+               "dram_bytes_per_cycle", "e_dram", "e_glb", "e_noc",
+               "e_pebuf", "e_reg", "e_mac")
+
+
+def platform_vector(p: Platform) -> np.ndarray:
+    return np.asarray([
+        p.n_pe, p.macs_per_pe, p.glb_bytes, p.pe_buffer_bytes,
+        p.dram_bytes_per_cycle, p.e_dram_per_byte, p.scaled_glb_energy(),
+        p.e_noc_per_byte, p.scaled_pebuf_energy(), p.e_reg_per_byte,
+        p.e_mac], dtype=np.float32)
+
+
+def _bucket(n: int, size: int = 16) -> int:
+    return ((n + size - 1) // size) * size
+
+
+# ---------------------------------------------------------------- kernel
+
+
+@lru_cache(maxsize=16)
+def _jitted_eval(d: int, n_primes_pad: int):
+    """Build the jitted batch evaluator for (ndims=d, padded prime count)."""
+    nl = N_LEVELS * d
+    perm_table = jnp.asarray(all_permutations(d), jnp.int32)
+    store_outer_lv = jnp.asarray(STORE_OUTER)       # (3 stores, 5 levels)
+    store_inner_lv = jnp.asarray(STORE_INNER)
+    spatial_lv = jnp.asarray(IS_SPATIAL_LEVEL)
+    lvl_of = jnp.repeat(jnp.arange(N_LEVELS), d)    # (nl,)
+    wb = float(WORD_BYTES)
+
+    def eval_one(perm_genes, assign, fmt_genes, sg,
+                 primes, prime_dim, relevance, densities, full_elems,
+                 total_macs, z_onehot, plat):
+        # ---- tiling factors (5, d) ----
+        lvl_eq = assign[None, :] == jnp.arange(N_LEVELS,
+                                               dtype=jnp.int32)[:, None]
+        dim_eq = prime_dim[None, :] == jnp.arange(d, dtype=jnp.int32)[:, None]
+        mask = lvl_eq[:, None, :] & dim_eq[None, :, :]     # (5, d, np)
+        factors = jnp.prod(jnp.where(mask, primes[None, None, :], 1.0),
+                           axis=-1)                        # (5, d) float32
+
+        # ---- flattened loops ----
+        loop_dims = perm_table[perm_genes]                 # (5, d)
+        dims_flat = loop_dims.reshape(-1)                  # (nl,)
+        bounds = factors[lvl_of, dims_flat]
+        spatial_flat = spatial_lv[lvl_of]
+
+        fanout2 = jnp.prod(factors[2])
+        fanout4 = jnp.prod(factors[4])
+        rel_flat = relevance[:, dims_flat]                 # (3, nl)
+        transparent = bounds <= 1.0
+
+        store_outer = store_outer_lv[:, lvl_of]            # (3, nl)
+
+        def fills_for(s, t):
+            active = store_outer[s]
+            irrel = ~rel_flat[t]
+            passthru = jnp.where(active, irrel | transparent, True)
+            in_suffix = jnp.flip(jnp.cumprod(
+                jnp.flip(passthru.astype(jnp.float32)))) > 0.5
+            contrib = jnp.where(rel_flat[t], bounds,
+                                jnp.where(~spatial_flat, bounds, 1.0))
+            mult = jnp.prod(jnp.where(active & ~in_suffix, contrib, 1.0))
+            tile = jnp.prod(jnp.where(
+                store_inner_lv[s][:, None] & relevance[t][None, :],
+                factors, 1.0))
+            return tile * mult
+
+        fills = jnp.stack([jnp.stack([fills_for(s, t) for t in range(3)])
+                           for s in range(3)])             # (3, 3)
+
+        # ---- fiber-tree format accounting per tensor ----
+        def clog2(x):
+            return jnp.maximum(1.0, jnp.ceil(jnp.log2(jnp.maximum(x, 2.0))))
+
+        def tensor_format(t):
+            genes = fmt_genes[t]
+            is_sub = rel_flat[t] & (bounds > 1.0)
+            k = jnp.sum(is_sub.astype(jnp.int32))
+            rank = jnp.cumsum(is_sub.astype(jnp.int32)) - 1
+            gidx = rank + jnp.maximum(MAX_FMT_GENES - k, 0)
+            fmt = jnp.where(is_sub & (gidx < MAX_FMT_GENES) & (gidx >= 0),
+                            genes[jnp.clip(gidx, 0, MAX_FMT_GENES - 1)],
+                            FMT_U)
+            dens = densities[t]
+            sub_bounds = jnp.where(is_sub, bounds, 1.0)
+            suffix_prod = jnp.flip(jnp.cumprod(jnp.flip(sub_bounds)))
+            elems_below = suffix_prod / sub_bounds
+            occ = 1.0 - jnp.power(1.0 - dens, jnp.maximum(elems_below, 1.0))
+            kept = sub_bounds * occ
+            full = full_elems[t]
+
+            def body(carry, xs):
+                n_fibers, meta_bits = carry
+                L, f, kp, sub = xs
+                mb = jnp.select(
+                    [f == FMT_B, f == FMT_RLE, f == FMT_CP, f == FMT_UOP],
+                    [n_fibers * L,
+                     n_fibers * kp * clog2(L),
+                     n_fibers * kp * clog2(L),
+                     n_fibers * (L + 1.0) * clog2(jnp.maximum(full, 2.0))],
+                    0.0)
+                meta_bits = meta_bits + jnp.where(sub > 0.5, mb, 0.0)
+                nf_next = jnp.where(f == FMT_U, n_fibers * L, n_fibers * kp)
+                n_fibers = jnp.where(sub > 0.5, nf_next, n_fibers)
+                return (n_fibers, meta_bits), None
+
+            (_, meta_bits), _ = jax.lax.scan(
+                body, (jnp.float32(1.0), jnp.float32(0.0)),
+                (sub_bounds, fmt, kept, is_sub.astype(jnp.float32)))
+            compressed = jnp.any(jnp.where(is_sub, fmt != FMT_U, False))
+            data_b = jnp.where(compressed, full * dens * wb, full * wb)
+            ratio = (data_b + meta_bits / 8.0) / jnp.maximum(full * wb, 1.0)
+
+            comp_here = jnp.where(is_sub, (fmt != FMT_U).astype(jnp.float32),
+                                  0.0)
+            comp_after = jnp.flip(jnp.cumsum(jnp.flip(comp_here))) - comp_here
+            uop_bad = jnp.any(is_sub & (fmt == FMT_UOP) & (comp_after < 0.5))
+            spat_bad = jnp.any(is_sub & spatial_flat & (fmt != FMT_U))
+            return ratio, compressed, uop_bad | spat_bad
+
+        rs, comps, bads = zip(*[tensor_format(t) for t in range(3)])
+        ratios = jnp.stack(rs)
+        fmt_invalid = bads[0] | bads[1] | bads[2]
+        p_comp, q_comp = comps[0], comps[1]
+
+        # ---- S/G ----
+        lead_p = jnp.asarray(SG_LEADER_P)[sg]
+        lead_q = jnp.asarray(SG_LEADER_Q)[sg]
+        fol_p = jnp.asarray(SG_FOLLOW_P)[sg]
+        fol_q = jnp.asarray(SG_FOLLOW_Q)[sg]
+        skips = jnp.asarray(SG_IS_SKIP)[sg]
+        gates = jnp.asarray(SG_IS_GATE)[sg]
+        d_p, d_q = densities[0], densities[1]
+        sg_invalid = jnp.any(skips & ((lead_p & ~p_comp) |
+                                      (lead_q & ~q_comp)))
+        frac_e_p = jnp.where(fol_p & (skips | gates), d_q, 1.0)
+        frac_e_q = jnp.where(fol_q & (skips | gates), d_p, 1.0)
+        frac_t_p = jnp.where(fol_p & skips, d_q, 1.0)
+        frac_t_q = jnp.where(fol_q & skips, d_p, 1.0)
+        cyc_frac = jnp.where(jnp.any(skips & lead_p), d_p, 1.0) * \
+            jnp.where(jnp.any(skips & lead_q), d_q, 1.0)
+        e_frac = jnp.where(jnp.any((skips | gates) & lead_p), d_p, 1.0) * \
+            jnp.where(jnp.any((skips | gates) & lead_q), d_q, 1.0)
+
+        # ---- traffic ----
+        total_z = jnp.sum(full_elems * z_onehot)
+        is_z = z_onehot                                     # (3,)
+        fe = jnp.stack([jnp.stack([1.0, 1.0, 1.0]),
+                        jnp.stack([frac_e_p[0], frac_e_q[0], 1.0]),
+                        jnp.stack([frac_e_p[1], frac_e_q[1], 1.0])])
+        ft = jnp.stack([jnp.stack([1.0, 1.0, 1.0]),
+                        jnp.stack([frac_t_p[0], frac_t_q[0], 1.0]),
+                        jnp.stack([frac_t_p[1], frac_t_q[1], 1.0])])
+        f_rmw = jnp.maximum(2.0 * fills - total_z, total_z)
+        fills_adj = jnp.where(is_z[None, :] > 0.5, f_rmw, fills)
+        byt = fills_adj * wb * ratios[None, :]              # (3 store, 3 t)
+        tr_e = byt * fe
+        tr_t = byt * ft
+
+        # ---- capacities ----
+        def tile_bytes(s):
+            tiles = jnp.stack([
+                jnp.prod(jnp.where(
+                    store_inner_lv[s][:, None] & relevance[t][None, :],
+                    factors, 1.0)) for t in range(3)])
+            return jnp.sum(tiles * wb * ratios)
+
+        glb_occ = tile_bytes(GLB)
+        pe_occ = tile_bytes(PEBUF)
+
+        (n_pe, macs_per_pe, glb_cap, pe_cap, dram_bpc,
+         e_dram, e_glb, e_noc, e_pebuf, e_reg, e_mac) = \
+            [plat[i] for i in range(len(PLAT_FIELDS))]
+
+        invalid = (fanout2 > n_pe) | (fanout4 > macs_per_pe) | \
+            fmt_invalid | sg_invalid | (glb_occ > glb_cap) | \
+            (pe_occ > pe_cap)
+
+        energy = (jnp.sum(tr_e[GLB]) * e_dram +
+                  jnp.sum(tr_e[PEBUF]) * (e_glb + e_noc) +
+                  jnp.sum(tr_e[REG]) * (e_pebuf + e_reg) +
+                  total_macs * e_frac * e_mac)
+        compute_cycles = (total_macs / (fanout2 * fanout4)) * cyc_frac
+        dram_cycles = jnp.sum(tr_t[GLB]) / dram_bpc
+        cycles = jnp.maximum(compute_cycles, dram_cycles)
+        edp = cycles * energy
+        log10_edp = jnp.log10(jnp.maximum(cycles, 1e-30)) + \
+            jnp.log10(jnp.maximum(energy, 1e-30))
+        valid = ~invalid
+        big = jnp.float32(jnp.inf)
+        return dict(valid=valid,
+                    energy_pj=jnp.where(valid, energy, big),
+                    cycles=jnp.where(valid, cycles, big),
+                    edp=jnp.where(valid, edp, big),
+                    log10_edp=jnp.where(valid, log10_edp, big))
+
+    batched = jax.vmap(eval_one,
+                       in_axes=(0, 0, 0, 0) + (None,) * 8)
+    return jax.jit(batched)
+
+
+# ---------------------------------------------------------------- wrapper
+
+
+class JaxCostModel:
+    """Batch evaluator bound to one (workload, platform) pair.  Instances
+    with the same (ndims, prime bucket) share a single XLA compilation."""
+
+    def __init__(self, spec: GenomeSpec, platform: Platform):
+        self.spec = spec
+        self.platform = platform
+        wl = spec.workload
+        d = wl.ndims
+        self.d = d
+        self.n_primes = spec.n_primes
+        self.n_pad = _bucket(max(self.n_primes, 1))
+
+        primes = np.ones(self.n_pad, dtype=np.float32)
+        prime_dim = np.zeros(self.n_pad, dtype=np.int32)
+        dim_idx = {dim: i for i, dim in enumerate(wl.dim_order)}
+        for i, (dd, p) in enumerate(spec.primes):
+            primes[i] = p
+            prime_dim[i] = dim_idx[dd]
+        self._primes = jnp.asarray(primes)
+        self._prime_dim = jnp.asarray(prime_dim)
+        self._relevance = jnp.asarray(
+            [[dim in t.dims for dim in wl.dim_order] for t in wl.tensors],
+            bool)
+        self._densities = jnp.asarray(
+            [wl.density_of(t.name) for t in wl.tensors], jnp.float32)
+        self._full_elems = jnp.asarray(
+            [t.size(wl.dim_sizes) for t in wl.tensors], jnp.float32)
+        self._total_macs = jnp.float32(wl.macs)
+        self._z_onehot = jnp.asarray(
+            [1.0 if t.is_output else 0.0 for t in wl.tensors], jnp.float32)
+        self._plat = jnp.asarray(platform_vector(platform))
+
+        self._fn = _jitted_eval(d, self.n_pad)
+        s = spec.segments
+        self._sl_perm = (s["perm"].start, s["perm"].stop)
+        self._sl_til = (s["tiling"].start, s["tiling"].stop)
+        self._sl_fmt = [(s[f"fmt_{t.name}"].start, s[f"fmt_{t.name}"].stop)
+                        for t in wl.tensors]
+        self._sl_sg = (s["sg"].start, s["sg"].stop)
+
+    def __call__(self, genomes) -> Dict[str, np.ndarray]:
+        """genomes: (B, L) ints -> dict of (B,) arrays.  Pads the batch to
+        the next power of two and the prime axis to its bucket."""
+        genomes = np.asarray(genomes, dtype=np.int32)
+        n = len(genomes)
+        padded = max(64, 1 << max(0, (n - 1)).bit_length())
+        if padded != n:
+            pad = np.zeros((padded - n, genomes.shape[1]), dtype=np.int32)
+            genomes = np.concatenate([genomes, pad], axis=0)
+        perm = genomes[:, self._sl_perm[0]:self._sl_perm[1]]
+        til = genomes[:, self._sl_til[0]:self._sl_til[1]]
+        if self.n_pad != self.n_primes:
+            til = np.concatenate(
+                [til, np.zeros((padded, self.n_pad - self.n_primes),
+                               dtype=np.int32)], axis=1)
+        fmt = np.stack([genomes[:, a:b] for a, b in self._sl_fmt], axis=1)
+        sg = genomes[:, self._sl_sg[0]:self._sl_sg[1]]
+        out = self._fn(jnp.asarray(perm), jnp.asarray(til),
+                       jnp.asarray(fmt), jnp.asarray(sg),
+                       self._primes, self._prime_dim, self._relevance,
+                       self._densities, self._full_elems, self._total_macs,
+                       self._z_onehot, self._plat)
+        return {k: np.asarray(v)[:n] for k, v in out.items()}

@@ -1,0 +1,227 @@
+"""Mapping scheme (SparseMap §II.B, §III.A.1, Fig. 4).
+
+A mapping on the 3-level storage architecture has five mapping levels,
+outer to inner:
+
+    idx  name   kind      hardware meaning
+    0    L1_T   temporal  DRAM -> GLB tile schedule
+    1    L2_T   temporal  GLB -> PE-array tile schedule
+    2    L2_S   spatial   parallelism across PEs
+    3    L3_T   temporal  PE-buffer -> MAC schedule
+    4    L3_S   spatial   parallelism across MACs inside a PE
+
+Each level carries one loop per iteration dimension; its bound is the tiling
+factor of that dimension at that level (``prod_l factor[l][d] == size(d)``),
+and a permutation orders the loops within the level (outermost first).
+
+``LoopNest`` flattens a mapping to a single outer->inner loop list and
+implements the classical Timeloop-style reuse analysis used by the cost
+model: the number of fills of a tensor tile into a storage level is
+
+    fills = footprint * prod(bounds of loops in the outer nest)
+                      / prod(bounds of the innermost contiguous run of
+                             loops irrelevant to the tensor)
+    (bound-1 loops are transparent; irrelevant *spatial* loops multicast
+     and never multiply traffic.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from .workload import Workload
+
+LEVEL_NAMES = ("L1_T", "L2_T", "L2_S", "L3_T", "L3_S")
+N_LEVELS = 5
+SPATIAL_LEVELS = (2, 4)          # indices of L2_S, L3_S
+TEMPORAL_LEVELS = (0, 1, 3)
+
+# Storage points between mapping levels.  Fills *into* a storage level see
+# the loops strictly above it as the outer nest:
+#   GLB       <- loops of L1_T                       (levels [0])
+#   PE buffer <- loops of L1_T, L2_T, L2_S           (levels [0..2])
+#   MAC regs  <- loops of L1_T .. L3_S               (levels [0..4])
+OUTER_LEVELS_FOR = {
+    "glb": (0,),
+    "pebuf": (0, 1, 2),
+    "reg": (0, 1, 2, 3, 4),
+}
+# Tile held *inside* a storage level spans the mapping levels below it:
+INNER_LEVELS_FOR = {
+    "glb": (1, 2, 3, 4),
+    "pebuf": (3, 4),
+    "reg": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Mapping:
+    """Fully decoded mapping for a given workload."""
+
+    workload: Workload
+    # factors[level][dim_name] -> tiling factor (int >= 1)
+    factors: Tuple[Dict[str, int], ...]
+    # perms[level] -> tuple of dim names, outermost first
+    perms: Tuple[Tuple[str, ...], ...]
+
+    def __post_init__(self):
+        for d in self.workload.dim_order:
+            prod = 1
+            for lvl in range(N_LEVELS):
+                prod *= self.factors[lvl].get(d, 1)
+            if prod != self.workload.dim_sizes[d]:
+                raise ValueError(
+                    f"tiling of {d}: prod {prod} != size "
+                    f"{self.workload.dim_sizes[d]}")
+
+    # ---- tiles --------------------------------------------------------
+    def tile_sizes(self, store: str) -> Dict[str, int]:
+        """Per-dimension extent of the tile resident in ``store``."""
+        dims = {d: 1 for d in self.workload.dim_order}
+        for lvl in INNER_LEVELS_FOR[store]:
+            for d in dims:
+                dims[d] *= self.factors[lvl].get(d, 1)
+        return dims
+
+    def tensor_tile_elems(self, store: str, tensor_name: str) -> int:
+        t = self.workload.tensor(tensor_name)
+        tiles = self.tile_sizes(store)
+        n = 1
+        for d in t.dims:
+            n *= tiles[d]
+        return n
+
+    def spatial_fanout(self, level: int) -> int:
+        assert level in SPATIAL_LEVELS
+        n = 1
+        for d in self.workload.dim_order:
+            n *= self.factors[level].get(d, 1)
+        return n
+
+    # ---- flattened nest ----------------------------------------------
+    def loops(self) -> List[Tuple[int, str, int, bool]]:
+        """Flattened loop list, outer->inner:
+        (level_idx, dim_name, bound, is_spatial)."""
+        out = []
+        for lvl in range(N_LEVELS):
+            for d in self.perms[lvl]:
+                out.append((lvl, d, self.factors[lvl].get(d, 1),
+                            lvl in SPATIAL_LEVELS))
+        return out
+
+    def fills(self, store: str, tensor_name: str) -> float:
+        """Number of element-fills of tensor ``tensor_name`` into ``store``
+        across the whole computation (dense; sparsity scaling is applied by
+        the cost model).  See module docstring for the reuse rule."""
+        t = self.workload.tensor(tensor_name)
+        relevant_dims = set(t.dims)
+        outer = [l for l in self.loops() if l[0] in OUTER_LEVELS_FOR[store]]
+        # drop transparent loops
+        outer = [l for l in outer if l[2] > 1]
+        # innermost contiguous run of irrelevant loops -> temporal reuse
+        suffix = 0
+        for lvl, d, bound, is_spatial in reversed(outer):
+            if d in relevant_dims:
+                break
+            suffix += 1
+        body = outer[: len(outer) - suffix] if suffix else outer
+        mult = 1.0
+        for lvl, d, bound, is_spatial in body:
+            if d in relevant_dims:
+                mult *= bound
+            elif not is_spatial:
+                mult *= bound          # temporal thrash: refetch
+            # irrelevant spatial loop: multicast, no extra upstream traffic
+        return self.tensor_tile_elems(store, tensor_name) * mult
+
+    def temporal_iterations(self) -> int:
+        """Total compute cycles for the dense workload = product of all
+        temporal loop bounds (each cycle issues the full spatial fanout)."""
+        n = 1
+        for lvl in TEMPORAL_LEVELS:
+            for d in self.workload.dim_order:
+                n *= self.factors[lvl].get(d, 1)
+        return n
+
+    # ---- pretty print --------------------------------------------------
+    def describe(self) -> str:
+        rows = []
+        for lvl in range(N_LEVELS):
+            parts = []
+            for d in self.perms[lvl]:
+                b = self.factors[lvl].get(d, 1)
+                kw = "par-for" if lvl in SPATIAL_LEVELS else "for"
+                parts.append(f"{kw} {d.lower()}{lvl+1} in [0,{b})")
+            rows.append(f"{LEVEL_NAMES[lvl]:5s}: " + " ".join(parts))
+        return "\n".join(rows)
+
+
+def balanced_mapping(workload: Workload, n_pe: int, macs_per_pe: int
+                     ) -> Mapping:
+    """A sane hand-built output-stationary mapping, used as the SAGE-like
+    fixed mapping and as a fallback individual.
+
+    Greedily fills L3_S up to ``macs_per_pe`` with K-factors, L2_S up to
+    ``n_pe`` with M/N-factors, splits the rest between L2_T and L1_T.
+    """
+    factors: List[Dict[str, int]] = [dict() for _ in range(N_LEVELS)]
+    remaining = dict(workload.dim_sizes)
+
+    def take(level: int, dim: str, f: int):
+        factors[level][dim] = factors[level].get(dim, 1) * f
+        remaining[dim] //= f
+
+    contraction = [d for d in workload.dim_order
+                   if d not in workload.output.dims]
+    outs = [d for d in workload.dim_order if d in workload.output.dims]
+
+    # L3_S: contraction-dim parallelism across MACs (cap: leave some K
+    # temporal so per-PE tiles exist)
+    budget = min(macs_per_pe, 16)
+    for d in contraction:
+        for p in _prime_iter(remaining[d]):
+            if p <= budget:
+                take(4, d, p)
+                budget //= p
+            if budget <= 1:
+                break
+    # L2_S: output-dim parallelism across PEs, capped at 16 per dim so the
+    # mapping keeps temporal sub-dimensions (realistic Eyeriss-class PE use)
+    budget = n_pe
+    for d in outs:
+        per_dim = 1
+        for p in _prime_iter(remaining[d]):
+            if p <= budget and per_dim * p <= 16:
+                take(2, d, p)
+                budget //= p
+                per_dim *= p
+            if budget <= 1:
+                break
+    # L3_T: keep a modest PE-local tile
+    for d in workload.dim_order:
+        for p in _prime_iter(remaining[d]):
+            if factors[3].get(d, 1) * p <= 8:
+                take(3, d, p)
+    # L2_T: grow GLB tile up to 64 per dim
+    for d in workload.dim_order:
+        for p in _prime_iter(remaining[d]):
+            if factors[1].get(d, 1) * p <= 64:
+                take(1, d, p)
+    # L1_T: everything left
+    for d in workload.dim_order:
+        if remaining[d] > 1:
+            take(0, d, remaining[d])
+
+    # output-stationary order: contraction dims innermost at L1/L2
+    def os_perm():
+        return tuple(outs + contraction)
+
+    perms = tuple(os_perm() for _ in range(N_LEVELS))
+    return Mapping(workload=workload, factors=tuple(factors), perms=perms)
+
+
+def _prime_iter(n: int):
+    from .workload import prime_factorize
+    return list(prime_factorize(n))

@@ -1,0 +1,62 @@
+"""Public search facade: run any optimization method on (workload,
+platform) under an evaluation budget.
+
+    from repro.core import search
+    res = search.run("sparsemap", workload, "cloud", budget=20_000, seed=0)
+    print(res.best_edp, res.valid_fraction)
+    design = search.decode_best(workload, res)
+
+Evaluator instances are cached per (workload, platform) because jit
+compilation of the batch cost model dominates small searches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from . import accel
+from .baselines import METHODS
+from .cost_model import CostReport, Design, evaluate
+from .encoding import GenomeSpec
+from .evolution import SearchResult
+from .jax_cost import JaxCostModel
+from .workload import Workload
+
+_CACHE: Dict[Tuple[int, str], Tuple[GenomeSpec, JaxCostModel]] = {}
+
+
+def get_evaluator(workload: Workload, platform: Union[str, accel.Platform]
+                  ) -> Tuple[GenomeSpec, JaxCostModel]:
+    plat = accel.PLATFORMS[platform] if isinstance(platform, str) else platform
+    key = (id(workload), plat.name)
+    if key not in _CACHE:
+        spec = GenomeSpec(workload)
+        _CACHE[key] = (spec, JaxCostModel(spec, plat))
+    return _CACHE[key]
+
+
+def run(method: str, workload: Workload,
+        platform: Union[str, accel.Platform], budget: int = 20_000,
+        seed: int = 0, **kw) -> SearchResult:
+    if method not in METHODS:
+        raise KeyError(f"unknown method {method!r}; have {list(METHODS)}")
+    plat = accel.PLATFORMS[platform] if isinstance(platform, str) else platform
+    spec, ev = get_evaluator(workload, plat)
+    return METHODS[method](spec, ev, budget, seed, plat, **kw)
+
+
+def decode_best(workload: Workload, result: SearchResult) -> Optional[Design]:
+    if result.best_genome is None:
+        return None
+    return GenomeSpec(workload).decode(result.best_genome)
+
+
+def report_best(workload: Workload, platform: Union[str, accel.Platform],
+                result: SearchResult) -> Optional[CostReport]:
+    d = decode_best(workload, result)
+    if d is None:
+        return None
+    plat = accel.PLATFORMS[platform] if isinstance(platform, str) else platform
+    return evaluate(d, plat)

@@ -1,0 +1,129 @@
+"""Monte-Carlo high-sensitivity gene calibration (SparseMap §IV.D,
+Eqs. 2-5).
+
+For each gene v: fix all other genes to a random combination, Monte-Carlo
+sample v, evaluate EDP with the batch cost model, drop invalid points, and
+average the pairwise EDP-variation ratio
+
+    S_i(v) = (1/N_i) * sum_{v1,v2} |EDP(v1)-EDP(v2)|
+                       / (|v1-v2| * min(EDP(v1), EDP(v2)))
+
+over I independent context combinations (Eq. 3).  Genes with
+
+    S(v) > 3/4 * (S_max - S_min) + S_min          (Eq. 4)
+
+are *high-sensitivity*; the rest are low-sensitivity (Eq. 5).  Valid
+genomes discovered during calibration are pooled and reused by the
+high-sensitivity hypercube initialization to seed low-sensitivity genes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .encoding import GenomeSpec
+
+
+@dataclasses.dataclass
+class SensitivityResult:
+    scores: np.ndarray            # (L,) S(v)
+    high_mask: np.ndarray         # (L,) bool
+    valid_pool: np.ndarray        # (n_valid, L) valid genomes found
+    threshold: float
+    evals_used: int
+
+    @property
+    def high_indices(self) -> np.ndarray:
+        return np.nonzero(self.high_mask)[0]
+
+    @property
+    def low_indices(self) -> np.ndarray:
+        return np.nonzero(~self.high_mask)[0]
+
+    def high_segments(self) -> List[tuple]:
+        """Contiguous runs of high-sensitivity genes [(start, stop), ...] —
+        the natural crossover boundaries for sensitivity-aware crossover."""
+        segs = []
+        in_run = False
+        start = 0
+        for i, h in enumerate(self.high_mask):
+            if h and not in_run:
+                in_run, start = True, i
+            elif not h and in_run:
+                segs.append((start, i))
+                in_run = False
+        if in_run:
+            segs.append((start, len(self.high_mask)))
+        return segs
+
+
+def calibrate(spec: GenomeSpec, batch_eval, rng: np.random.Generator,
+              n_contexts: int = 6, n_samples: int = 12,
+              max_pairs: int = 32) -> SensitivityResult:
+    """Run the calibration.
+
+    ``batch_eval(genomes) -> dict with 'valid' (bool) and 'edp'`` — normally
+    a :class:`repro.core.jax_cost.JaxCostModel`.
+
+    One batched evaluation covers all genes x contexts x samples.
+    """
+    L = spec.length
+    ub = spec.gene_ub
+
+    # Build the full probe batch: for each context i and gene v, n_samples
+    # genomes identical to context i except gene v.
+    contexts = spec.random_genomes(rng, n_contexts)            # (I, L)
+    probes = np.repeat(contexts, L * n_samples, axis=0)        # (I*L*S, L)
+    gene_idx = np.tile(np.repeat(np.arange(L), n_samples), n_contexts)
+    sampled_vals = (rng.random(len(probes)) *
+                    ub[gene_idx]).astype(np.int64)
+    probes[np.arange(len(probes)), gene_idx] = sampled_vals
+
+    out = batch_eval(probes)
+    valid = np.asarray(out["valid"])
+    edp = np.asarray(out["edp"], dtype=np.float64)
+
+    scores = np.zeros(L)
+    counts = np.zeros(L)
+    idx = 0
+    for i in range(n_contexts):
+        for v in range(L):
+            sl = slice(idx, idx + n_samples)
+            idx += n_samples
+            vv = sampled_vals[sl]
+            ok = valid[sl]
+            if ok.sum() < 2:
+                continue
+            vals = vv[ok].astype(np.float64)
+            es = edp[sl][ok]
+            # pairwise ratio (subsample pairs if large)
+            n = len(vals)
+            pairs = [(a, b) for a in range(n) for b in range(a + 1, n)
+                     if vals[a] != vals[b]]
+            if len(pairs) > max_pairs:
+                sel = rng.choice(len(pairs), max_pairs, replace=False)
+                pairs = [pairs[j] for j in sel]
+            if not pairs:
+                continue
+            s = 0.0
+            for a, b in pairs:
+                s += (abs(es[a] - es[b]) /
+                      (abs(vals[a] - vals[b]) * max(min(es[a], es[b]), 1e-30)))
+            scores[v] += s / len(pairs)
+            counts[v] += 1
+
+    with np.errstate(invalid="ignore"):
+        scores = np.where(counts > 0, scores / np.maximum(counts, 1), 0.0)
+
+    smax, smin = scores.max(), scores.min()
+    threshold = 0.75 * (smax - smin) + smin
+    high = scores > threshold
+    if not high.any():         # degenerate: everything equal
+        high = scores >= smax
+
+    pool = probes[valid]
+    return SensitivityResult(scores=scores, high_mask=high,
+                             valid_pool=pool, threshold=float(threshold),
+                             evals_used=len(probes))

@@ -1,0 +1,191 @@
+"""Sparse tensor algebra workloads (SparseMap §II, Table III).
+
+A workload is an einsum ``Z[m,n] += P[m,k] * Q[k,n]`` (SpMM) or a sparse
+convolution lowered to implicit GEMM (SpConv).  SparseMap treats both as a
+D-dimensional projective einsum: each tensor is indexed by a subset of the
+iteration dimensions, and each operand carries a density.
+
+Dimensions are named; the canonical GEMM order is ("M", "K", "N").  A batched
+workload (§IV.G, Fig. 15) adds "B" and the genome widens automatically — the
+encoding only ever sees ``dims`` / ``prime_factors`` / relevance sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+WORD_BYTES = 2  # 16-bit operands throughout (paper uses 16-bit, DSTC 12nm)
+
+
+def prime_factorize(n: int) -> List[int]:
+    """Prime factors of ``n`` in non-decreasing order (1 -> [])."""
+    if n < 1:
+        raise ValueError(f"dimension must be >= 1, got {n}")
+    out: List[int] = []
+    d = 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+def pad_to_composite(n: int, max_prime: int = 7) -> int:
+    """Replace a dimension whose largest prime factor exceeds ``max_prime``
+    with the nearest larger integer that factorizes into small primes
+    (paper §IV.B: "if a dimension size is a large prime number, we replace it
+    with the nearest larger composite number")."""
+    m = n
+    while max(prime_factorize(m), default=1) > max_prime:
+        m += 1
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One tensor of the einsum."""
+
+    name: str                 # "P" | "Q" | "Z"
+    dims: Tuple[str, ...]     # iteration dims this tensor is indexed by
+    density: float            # fraction of nonzero elements, in (0, 1]
+    is_output: bool = False
+
+    def size(self, dim_sizes: Dict[str, int]) -> int:
+        s = 1
+        for d in self.dims:
+            s *= dim_sizes[d]
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A sparse projective einsum plus densities.
+
+    ``dim_sizes`` are the *padded* sizes actually searched over;
+    ``orig_dim_sizes`` keeps the user-specified sizes for reporting.
+    """
+
+    name: str
+    dim_order: Tuple[str, ...]            # canonical order, e.g. ("M","K","N")
+    dim_sizes: Dict[str, int]
+    tensors: Tuple[TensorSpec, TensorSpec, TensorSpec]
+    orig_dim_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def ndims(self) -> int:
+        return len(self.dim_order)
+
+    @property
+    def inputs(self) -> Tuple[TensorSpec, TensorSpec]:
+        return tuple(t for t in self.tensors if not t.is_output)  # type: ignore
+
+    @property
+    def output(self) -> TensorSpec:
+        return next(t for t in self.tensors if t.is_output)
+
+    def tensor(self, name: str) -> TensorSpec:
+        return next(t for t in self.tensors if t.name == name)
+
+    @property
+    def prime_factors(self) -> List[Tuple[str, int]]:
+        """Flat list of (dim_name, prime) pairs — the tiling genome slots."""
+        out: List[Tuple[str, int]] = []
+        for d in self.dim_order:
+            for p in prime_factorize(self.dim_sizes[d]):
+                out.append((d, p))
+        return out
+
+    @property
+    def macs(self) -> int:
+        """Dense MAC count = product of all iteration dims."""
+        s = 1
+        for d in self.dim_order:
+            s *= self.dim_sizes[d]
+        return s
+
+    def output_density(self) -> float:
+        """P(z != 0) under uniform-random nonzero placement: an output element
+        is nonzero iff any of the K (contraction) products is nonzero."""
+        contraction = [d for d in self.dim_order
+                       if d not in self.output.dims]
+        k = 1
+        for d in contraction:
+            k *= self.dim_sizes[d]
+        dp = 1.0
+        for t in self.inputs:
+            dp *= t.density
+        return float(1.0 - (1.0 - dp) ** k) if dp < 1.0 else 1.0
+
+    def density_of(self, name: str) -> float:
+        if name == self.output.name:
+            return self.output_density()
+        return self.tensor(name).density
+
+
+def spmm(name: str, m: int, k: int, n: int,
+         density_p: float, density_q: float) -> Workload:
+    """SpMM workload  P[M,K] x Q[K,N] = Z[M,N]  (paper Table III mm*)."""
+    sizes = {"M": pad_to_composite(m), "K": pad_to_composite(k),
+             "N": pad_to_composite(n)}
+    return Workload(
+        name=name,
+        dim_order=("M", "K", "N"),
+        dim_sizes=sizes,
+        orig_dim_sizes={"M": m, "K": k, "N": n},
+        tensors=(
+            TensorSpec("P", ("M", "K"), density_p),
+            TensorSpec("Q", ("K", "N"), density_q),
+            TensorSpec("Z", ("M", "N"), 1.0, is_output=True),
+        ),
+    )
+
+
+def batched_spmm(name: str, b: int, m: int, k: int, n: int,
+                 density_p: float, density_q: float) -> Workload:
+    """4-dim workload (paper Fig. 15): adds batch dim B shared by all
+    tensors.  Exercises the multi-dimensional genome path (perm range A_4^4)."""
+    sizes = {"B": pad_to_composite(b), "M": pad_to_composite(m),
+             "K": pad_to_composite(k), "N": pad_to_composite(n)}
+    return Workload(
+        name=name,
+        dim_order=("B", "M", "K", "N"),
+        dim_sizes=sizes,
+        orig_dim_sizes={"B": b, "M": m, "K": k, "N": n},
+        tensors=(
+            TensorSpec("P", ("B", "M", "K"), density_p),
+            TensorSpec("Q", ("B", "K", "N"), density_q),
+            TensorSpec("Z", ("B", "M", "N"), 1.0, is_output=True),
+        ),
+    )
+
+
+def spconv(name: str, c: int, h: int, w: int, kout: int, r: int, s: int,
+           density_i: float, density_w: float,
+           stride: int = 1, pad: int | None = None) -> Workload:
+    """SpConv lowered to implicit GEMM (paper Table III conv*).
+
+    Input  I[C,H,W] (density_i), weights W[Kout,C,R,S] (density_w),
+    output O[Kout,P,Q'].  im2col:  M=Kout, K=C*R*S, N=P*Q'.
+    Operand1 of Table III is the input fmap, operand2 the weights.
+    """
+    if pad is None:
+        pad = r // 2
+    p_out = (h + 2 * pad - r) // stride + 1
+    q_out = (w + 2 * pad - s) // stride + 1
+    m = kout
+    kk = c * r * s
+    n = p_out * q_out
+    wl = spmm(name, m, kk, n, density_w, density_i)
+    # P holds weights (density_w), Q holds the im2col'd input (density_i).
+    return wl
+
+
+def from_gemm_shape(name: str, m: int, k: int, n: int,
+                    density_p: float = 1.0, density_q: float = 1.0
+                    ) -> Workload:
+    return spmm(name, m, k, n, density_p, density_q)

@@ -1,0 +1,106 @@
+"""Blocked causal flash attention (Pallas TPU) with online softmax.
+
+The perf-critical attention layer of the LM stack.  Block-level causal
+skipping: KV blocks strictly above the diagonal are never fetched or
+computed (the grid dimension is bounded per q-block via the index map +
+``pl.when`` predication) — the same tile-granular Skip idea as
+``bsr_spmm``, with causality as the (static) sparsity pattern.
+
+Grid: (B*H, S/bq, S/bk); q/k/v laid out [B*H, S, hd].
+Block shapes MXU-aligned: bq/bk multiples of 128 recommended, hd = lane
+width multiple (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:                   # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skipping: blocks entirely above the diagonal do nothing
+    run = (not causal) or (kj * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)             # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)             # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)             # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            cols = kj * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                           # [bq]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: [B, H, S, hd] -> [B, H, S, hd]."""
+    b, h, s, hd = q.shape
+    assert s % bq == 0 and s % bk == 0
+    scale = 1.0 / float(hd) ** 0.5
+    bh = b * h
+    qf = q.reshape(bh, s, hd)
+    kf = k.reshape(bh, s, hd)
+    vf = v.reshape(bh, s, hd)
+    grid = (bh, s // bq, s // bk)
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bhi, qi, kj: (bhi, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bhi, qi, kj: (bhi, kj, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bhi, qi, kj: (bhi, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bhi, qi, kj: (bhi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    out = fn(qf, kf, vf)
+    return out.reshape(b, h, s, hd)

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the real kernels run; elsewhere (this CPU container) they execute
+in interpret mode when ``force_interpret`` / REPRO_PALLAS_INTERPRET is
+set, else fall back to the jnp reference (the dry-run lowers pure-jnp
+models — Pallas TPU kernels cannot lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as ref_lib
+from .bsr_spmm import bsr_spmm as _bsr_spmm
+from .flash_attention import flash_attention as _flash
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:       # pragma: no cover
+        return False
+
+
+def _interpret_flag() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("m_blocks", "max_row_nnz",
+                                             "bn", "mode"))
+def bsr_spmm(blocks, col_idx, row_ptr, q, *, m_blocks: int,
+             max_row_nnz: int, bn: int = 128, mode: str = "auto"):
+    """Z = P @ Q, P in BSR (see kernels.ref for the format).
+
+    mode: "auto" (kernel on TPU, reference elsewhere), "kernel",
+    "interpret", "ref".
+    """
+    if mode == "ref" or (mode == "auto" and not _on_tpu()
+                         and not _interpret_flag()):
+        return ref_lib.bsr_spmm_ref(blocks, col_idx, row_ptr, q, m_blocks)
+    interpret = (mode == "interpret") or (mode == "auto" and not _on_tpu())
+    return _bsr_spmm(blocks, col_idx, row_ptr, q, m_blocks=m_blocks,
+                     max_row_nnz=max_row_nnz, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "mode"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, mode: str = "auto"):
+    """Blocked causal attention [B,H,S,hd]."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()
+                         and not _interpret_flag()):
+        return ref_lib.flash_attention_ref(q, k, v, causal=causal)
+    interpret = (mode == "interpret") or (mode == "auto" and not _on_tpu())
+    return _flash(q, k, v, causal=causal, bq=bq, bk=bk,
+                  interpret=interpret)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+BSR format used throughout (the TPU-native realization of SparseMap's
+compressed formats + Skip mechanism — DESIGN.md §3):
+
+    blocks   : [nnz, bm, bk]   values of nonzero (bm x bk) blocks of P
+    col_idx  : [nnz] int32     block-column of each stored block
+    row_ptr  : [m_blocks + 1]  CSR-style row pointers over block rows
+
+A two-level structure: (Bitmask | UOP) over block rows + CP over block
+columns — i.e. the B/UOP-CP hierarchy of the paper at tile granularity.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------ BSR helpers
+
+
+def dense_to_bsr(p: np.ndarray, bm: int, bk: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Convert dense [M,K] to BSR (drops all-zero blocks)."""
+    m, k = p.shape
+    assert m % bm == 0 and k % bk == 0
+    mb, kb = m // bm, k // bk
+    blocks, col_idx, row_ptr = [], [], [0]
+    for i in range(mb):
+        for j in range(kb):
+            blk = p[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk]
+            if np.any(blk != 0):
+                blocks.append(blk)
+                col_idx.append(j)
+        row_ptr.append(len(blocks))
+    if not blocks:
+        blocks = [np.zeros((bm, bk), p.dtype)]
+        col_idx = [0]
+        row_ptr = [0] + [1] * mb       # degenerate: one padding block
+        row_ptr = [0] * (mb + 1)
+    return (np.stack(blocks).astype(p.dtype),
+            np.asarray(col_idx, np.int32),
+            np.asarray(row_ptr, np.int32))
+
+
+def bsr_to_dense(blocks, col_idx, row_ptr, m_blocks: int, k_blocks: int
+                 ) -> np.ndarray:
+    bm, bk = blocks.shape[1:]
+    out = np.zeros((m_blocks * bm, k_blocks * bk), blocks.dtype)
+    for i in range(m_blocks):
+        for jj in range(int(row_ptr[i]), int(row_ptr[i + 1])):
+            j = int(col_idx[jj])
+            out[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk] = blocks[jj]
+    return out
+
+
+# ------------------------------------------------------------ oracles
+
+
+def bsr_spmm_ref(blocks: jnp.ndarray, col_idx: jnp.ndarray,
+                 row_ptr: jnp.ndarray, q: jnp.ndarray,
+                 m_blocks: int) -> jnp.ndarray:
+    """Z = P @ Q with P in BSR.  Dense reconstruction oracle."""
+    bm, bk = blocks.shape[1:]
+    k_blocks = q.shape[0] // bk
+    p = bsr_to_dense(np.asarray(blocks), np.asarray(col_idx),
+                     np.asarray(row_ptr), m_blocks, k_blocks)
+    return jnp.asarray(p) @ q
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q/k/v: [B, H, S, hd] -> [B, H, S, hd]; fp32 softmax."""
+    s = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gated_block_spmm_ref(p: jnp.ndarray, q: jnp.ndarray,
+                         block_nnz: jnp.ndarray, bm: int, bk: int
+                         ) -> jnp.ndarray:
+    """Gating oracle: blocks with nnz==0 contribute nothing (the dense
+    kernel computes them anyway but predication saves MXU energy —
+    numerically identical to a dense matmul with zero blocks)."""
+    return p @ q

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+cell lowers AND compiles under the production meshes, and extract the
+roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the dry-run needs 512 host
+placeholder devices (single-pod cells use the first 256).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-nemo-12b \
+        --shape train_4k [--multi-pod] [--jsonl out.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--jsonl out.jsonl]
+
+Per cell this records: lower+compile success, XLA cost_analysis (FLOPs /
+bytes), memory_analysis, per-collective byte totals parsed from the
+post-optimization HLO, analytic per-device state bytes, and the roofline
+terms vs TPU v5e constants (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core.accel import TPU_V5E
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import batch_axes_of, make_production_mesh
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step)
+from repro.models import sharding as shard_ctx
+from repro.models.model import Model
+from repro.optim import optimizer as opt_lib
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2,
+                "s16": 2, "u16": 2, "f32": 4, "s32": 4, "u32": 4,
+                "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the post-optimization
+    (per-device) HLO.  `-start` variants are counted; `-done` are not."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        m = re.search(r"=\s+\S+\s+([a-z-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue
+        # operand types appear inline inside the call parens
+        inside = line[line.index(op) + len(op):]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(inside):
+            if dt in _DTYPE_BYTES:
+                total += _shape_bytes(dt, dims)
+        out[base] += float(total)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def _tree_device_bytes(shapes, shardings, mesh) -> float:
+    """Analytic per-device bytes of a sharded pytree."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(shapes), jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        n = np.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+        div = 1
+        spec = getattr(sh, "spec", None)
+        if spec is not None:
+            for part in spec:
+                if part is None:
+                    continue
+                for ax in (part if isinstance(part, tuple) else (part,)):
+                    div *= mesh.shape[ax]
+        total += n / div
+    return float(total)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             arch_cfg=None, tag: str = "") -> Dict[str, Any]:
+    cfg = arch_cfg or get_config(arch)
+    sh = SHAPES[shape]
+    rec: Dict[str, Any] = dict(
+        arch=arch, shape=shape, mesh="2x16x16" if multi_pod else "16x16",
+        kind=sh.kind, seq_len=sh.seq_len, global_batch=sh.global_batch,
+        tag=tag)
+    ok, why = applicable(arch, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shard_ctx.set_batch_axes(batch_axes_of(mesh))
+    model = Model(cfg)
+    try:
+        with mesh:
+            if sh.kind == "train":
+                ocfg = opt_lib.OptConfig(
+                    moment_dtype="bfloat16" if cfg.param_count() > 1e11
+                    else "float32")
+                step = build_train_step(model, ocfg)
+                pshapes, psh, oshapes, osh = \
+                    specs_lib.param_and_opt_shardings(model, mesh, ocfg)
+                bshapes = specs_lib.batch_spec(cfg, sh)
+                bsh = specs_lib.batch_shardings(cfg, sh, mesh)
+                lowered = jax.jit(
+                    step, in_shardings=(psh, osh, bsh),
+                    out_shardings=(psh, osh, None),
+                    donate_argnums=(0, 1)).lower(pshapes, oshapes, bshapes)
+                state_bytes = (_tree_device_bytes(pshapes, psh, mesh) +
+                               _tree_device_bytes(oshapes, osh, mesh))
+            elif sh.kind == "prefill":
+                step = build_prefill_step(model)
+                pshapes, psh, _, _ = specs_lib.param_and_opt_shardings(
+                    model, mesh)
+                bshapes = specs_lib.batch_spec(cfg, sh)
+                bsh = specs_lib.batch_shardings(cfg, sh, mesh)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                ba = batch_axes_of(mesh)
+                lead = ba if len(ba) > 1 else ba[0]
+                out_sh = NamedSharding(mesh, P(lead, None, "model"))
+                lowered = jax.jit(
+                    step, in_shardings=(psh, bsh),
+                    out_shardings=out_sh).lower(pshapes, bshapes)
+                state_bytes = _tree_device_bytes(pshapes, psh, mesh)
+            else:   # decode / long_decode
+                step = build_serve_step(model)
+                pshapes, psh, _, _ = specs_lib.param_and_opt_shardings(
+                    model, mesh)
+                cshapes, tok_shape, pos_shape = specs_lib.decode_inputs(
+                    cfg, sh, model)
+                csh, tok_sh, pos_sh = specs_lib.decode_shardings(
+                    cfg, sh, mesh, model)
+                lowered = jax.jit(
+                    step, in_shardings=(psh, csh, tok_sh, pos_sh),
+                    out_shardings=(None, csh),
+                    donate_argnums=(1,)).lower(
+                        pshapes, cshapes, tok_shape, pos_shape)
+                state_bytes = (_tree_device_bytes(pshapes, psh, mesh) +
+                               _tree_device_bytes(cshapes, csh, mesh))
+            rec["lower_s"] = round(time.time() - t0, 1)
+
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+            ca = compiled.cost_analysis() or {}
+            # raw XLA numbers (NOTE: while-loop bodies counted ONCE —
+            # see hlo_analysis docstring; kept for reference)
+            rec["xla_flops_raw"] = float(ca.get("flops", 0.0))
+            rec["xla_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+            try:
+                ma = compiled.memory_analysis()
+                if ma is not None:
+                    for f in ("argument_size_in_bytes",
+                              "output_size_in_bytes",
+                              "temp_size_in_bytes",
+                              "generated_code_size_in_bytes"):
+                        v = getattr(ma, f, None)
+                        if v is not None:
+                            rec[f] = int(v)
+            except Exception as e:          # CPU backend may not support
+                rec["memory_analysis_error"] = str(e)
+            hlo = compiled.as_text()
+            rec["hlo_bytes"] = len(hlo)
+            # trip-count-corrected per-device analysis
+            from repro.launch.hlo_analysis import analyze
+            ha = analyze(hlo)
+            rec["flops_per_device"] = ha["dot_flops"]
+            rec["bytes_per_device"] = ha["traffic_bytes"]
+            for k in _COLLECTIVES:
+                rec[f"coll_{k}"] = ha[f"coll_{k}"]
+            rec["coll_count"] = ha["coll_count"]
+            rec["coll_total"] = ha["coll_total"]
+            rec["state_bytes_per_device"] = state_bytes
+
+            # roofline terms (per-chip program vs per-chip peaks)
+            rec["t_compute_s"] = rec["flops_per_device"] / \
+                TPU_V5E["peak_bf16_flops"]
+            rec["t_memory_s"] = rec["bytes_per_device"] / \
+                TPU_V5E["hbm_bw_bytes_per_s"]
+            rec["t_collective_s"] = rec["coll_total"] / \
+                TPU_V5E["ici_link_bw_bytes_per_s"]
+            terms = dict(compute=rec["t_compute_s"],
+                         memory=rec["t_memory_s"],
+                         collective=rec["t_collective_s"])
+            rec["bottleneck"] = max(terms, key=terms.get)
+
+            # model flops (6*N*D) for the useful-compute ratio
+            n_chips = int(np.prod(list(mesh.shape.values())))
+            n_act = cfg.active_param_count()
+            if sh.kind == "train":
+                tokens = sh.global_batch * sh.seq_len
+                mf = 6.0 * n_act * tokens
+            elif sh.kind == "prefill":
+                tokens = sh.global_batch * sh.seq_len
+                mf = 2.0 * n_act * tokens
+            else:
+                tokens = sh.global_batch
+                mf = 2.0 * n_act * tokens
+            rec["model_flops_total"] = mf
+            hlo_total = rec["flops_per_device"] * n_chips
+            rec["useful_flops_ratio"] = (mf / hlo_total) if hlo_total else 0.0
+            rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        shard_ctx.set_batch_axes(None)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable cell on both meshes")
+    ap.add_argument("--jsonl", default=None, help="append records here")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in sorted(SHAPES):
+                cells.append((a, s, False))
+                cells.append((a, s, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    rc = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp)
+        line = json.dumps({k: v for k, v in rec.items()
+                           if k != "traceback"})
+        print(line, flush=True)
+        if rec["status"] == "error":
+            print(rec.get("traceback", ""), file=sys.stderr)
+            rc = 1
+        if args.jsonl:
+            with open(args.jsonl, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

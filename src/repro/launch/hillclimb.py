@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb for the three selected cells (EXPERIMENTS.md §Perf).
+
+Each variant re-lowers + recompiles the cell with one change and records
+the roofline terms next to the baseline (tag field distinguishes them).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --jsonl bench_out/perf.jsonl
+
+Cells and hypotheses (napkin math in EXPERIMENTS.md):
+  kimi-k2-1t-a32b x train_4k    collective-bound (232 s)
+      v1 moe_grouped: group-local dispatch -> a2a instead of full-buffer
+         materialization; predicted ~20-70x collective reduction
+      v2 moe_grouped + remat dots: trade recompute for stored dots
+  command-r-35b x train_4k      memory-bound (22.8 s)
+      v1 remat dots: stop recomputing matmuls (traffic + flops down)
+      v2 dots + dmodel-sharded embedding (kill gather resharding)
+  xlstm-350m x train_4k         worst roofline fraction (0.03)
+      v1 pure-DP mapping: TP=16 for a 350M model is the wrong mapping —
+         replicate params, shard batch over all 256 chips
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="bench_out/perf.jsonl")
+    ap.add_argument("--only", default=None,
+                    help="comma list: kimi,commandr,xlstm")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.launch import dryrun
+    from repro.launch.mesh import set_batch_axes_override
+    from repro.models import blocks
+
+    only = set(args.only.split(",")) if args.only else None
+
+    def emit(rec):
+        keep = {k: v for k, v in rec.items() if k != "traceback"}
+        print(json.dumps(keep), flush=True)
+        with open(args.jsonl, "a") as f:
+            f.write(json.dumps(keep) + "\n")
+        if rec.get("status") != "ok":
+            print(rec.get("traceback", "")[-1500:], file=sys.stderr)
+
+    def run(arch, shape, tag, cfg=None, pure_dp=False):
+        if pure_dp:
+            blocks.set_tp_enabled(False)
+            set_batch_axes_override(("data", "model"))
+        try:
+            rec = dryrun.run_cell(arch, shape, multi_pod=False,
+                                  arch_cfg=cfg, tag=tag)
+        finally:
+            blocks.set_tp_enabled(True)
+            set_batch_axes_override(None)
+        emit(rec)
+        return rec
+
+    if only is None or "kimi" in only:
+        base = get_config("kimi-k2-1t-a32b")
+        run("kimi-k2-1t-a32b", "train_4k", "v1_moe_grouped",
+            cfg=dataclasses.replace(base, moe_grouped=True,
+                                    moe_n_groups=256))
+        run("kimi-k2-1t-a32b", "train_4k", "v2_grouped_dots",
+            cfg=dataclasses.replace(base, moe_grouped=True,
+                                    moe_n_groups=256, remat="dots"))
+
+    if only is None or "commandr" in only:
+        base = get_config("command-r-35b")
+        run("command-r-35b", "train_4k", "v1_remat_dots",
+            cfg=dataclasses.replace(base, remat="dots"))
+        run("command-r-35b", "train_4k", "v2_dots_embed_dmodel",
+            cfg=dataclasses.replace(base, remat="dots",
+                                    embed_shard="dmodel"))
+
+    if only is None or "xlstm" in only:
+        run("xlstm-350m", "train_4k", "v1_pure_dp", pure_dp=True)
+
+
+if __name__ == "__main__":
+    main()

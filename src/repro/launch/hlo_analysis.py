@@ -1,0 +1,321 @@
+"""Post-optimization HLO analysis with while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE regardless
+of trip count (verified experimentally — see EXPERIMENTS.md §Dry-run), so
+scan-over-layers models are undercounted by ~n_layers and sequential
+recurrences by ~seq_len.  This module re-derives the roofline quantities
+from ``compiled.as_text()`` directly:
+
+* **dot FLOPs** — every ``dot`` op contributes 2 * prod(result_shape) *
+  prod(contracting dims of the lhs operand); operand shapes come from a
+  per-computation symbol table.  Dots inside fusion computations count.
+* **traffic bytes** — an HBM-traffic estimate per *executed* op:
+  result + operand bytes, with slice-aware rules — dynamic-slice /
+  gather / slice count the slice (result), dynamic-update-slice /
+  scatter count the update, and a fusion's operand counts only what the
+  fused computation actually reads of it (a parameter consumed only by
+  slicing ops counts its slices, not the whole array).  Ops inside
+  fusion computations contribute NO traffic (they are fused); ops inside
+  while bodies contribute traffic x trip_count.
+* **collective bytes** — operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ ``-start`` forms).
+
+The call graph is expanded from ENTRY with multipliers: while bodies x
+known_trip_count (parsed from backend_config), conditional branches and
+fusions x 1.  Validated against cost_analysis on scan-free graphs in
+tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "f32": 4, "s32": 4, "u32": 4,
+                "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count[\\":{ n]+(\d+)')
+
+# ops that read only a slice of their (first) operand
+_SLICING = {"dynamic-slice", "slice", "gather"}
+# ops that write only the update portion
+_UPDATING = {"dynamic-update-slice", "scatter"}
+# pure plumbing: no executed traffic.  ``copy`` is excluded too: XLA-CPU
+# inserts full copies of while-carried buffers that are aliased in-place
+# on real hardware.
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "while", "conditional", "copy", "copy-start", "copy-done"}
+_FUSED_CALLERS = {"fusion", "map", "reduce", "reduce-window", "scatter",
+                  "sort", "select-and-scatter", "custom-call"}
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result: List[Tuple[str, List[int]]]
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    syms: Dict[str, List[Tuple[str, List[int]]]] = \
+        dataclasses.field(default_factory=dict)
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith("HloModule"):
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and "{" in line:
+            cur = comps.setdefault(hdr.group(1), Comp(hdr.group(1)))
+            if line.startswith("ENTRY"):
+                entry = hdr.group(1)
+            continue
+        if cur is None:
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        opname, result_txt, opcode, rest = m.groups()
+        result = _shape_list(result_txt)
+        operands = re.findall(r"%([\w.\-]+)", rest.split("),")[0])
+        op = Op(opname, opcode, result, operands, line)
+        cur.ops.append(op)
+        cur.syms[opname] = result
+    return comps, entry
+
+
+def _fusion_input_bytes(comp: Comp) -> float:
+    """Effective bytes a fused computation reads from its parameters:
+    a parameter consumed only by slicing ops counts its slices' bytes; a
+    parameter that is only the in-place TARGET of dynamic-update-slice
+    ops is written through, not read."""
+    total = 0.0
+    params = [op for op in comp.ops if op.opcode == "parameter"]
+    for p in params:
+        consumers = [op for op in comp.ops if p.name in op.operands]
+        if consumers and all(
+                c.opcode in _SLICING and c.operands and
+                c.operands[0] == p.name for c in consumers):
+            total += sum(_bytes_of(c.result) for c in consumers)
+        elif consumers and all(
+                c.opcode in _UPDATING and c.operands and
+                c.operands[0] == p.name for c in consumers):
+            pass        # pure in-place update target: no read traffic
+        else:
+            total += _bytes_of(comp.syms.get(p.name, []))
+    return total
+
+
+def _fusion_output_bytes(comp: Comp, result_bytes: float) -> float:
+    """A fusion that updates a parameter in place (dynamic-update-slice on
+    a parameter) writes only the update slice, not the whole buffer."""
+    params = {op.name for op in comp.ops if op.opcode == "parameter"}
+    for op in comp.ops:
+        if op.opcode in _UPDATING and op.operands and \
+                op.operands[0] in params:
+            upd = comp.syms.get(op.operands[1], []) \
+                if len(op.operands) > 1 else []
+            return _bytes_of(upd)
+    return result_bytes
+
+
+def _op_traffic(op: Op, comp: Comp, comps: Dict[str, Comp]) -> float:
+    res_b = _bytes_of(op.result)
+    if op.opcode in _SLICING:
+        return 2.0 * res_b
+    if op.opcode in _UPDATING:
+        # update operand is the 2nd for DUS, updates last for scatter
+        upd = comp.syms.get(op.operands[1], []) if len(op.operands) > 1 \
+            else op.result
+        return 2.0 * _bytes_of(upd)
+    if op.opcode in _FUSED_CALLERS:
+        cm = re.search(r"calls=%?([\w.\-]+)", op.line)
+        if cm and cm.group(1) in comps:
+            called = comps[cm.group(1)]
+            return _fusion_output_bytes(called, res_b) + \
+                _fusion_input_bytes(called)
+    opnd_b = sum(_bytes_of(comp.syms.get(o, [])) for o in op.operands)
+    return res_b + opnd_b
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = _parse(hlo)
+    zero = dict(dot_flops=0.0, traffic_bytes=0.0, coll_total=0.0,
+                coll_count=0.0,
+                **{f"coll_{k}": 0.0 for k in _COLLECTIVES})
+    if entry is None:
+        return dict(zero)
+
+    memo_flops: Dict[str, Dict[str, float]] = {}
+
+    def flops_of(name: str, depth=0) -> Dict[str, float]:
+        """dot flops + collectives, counting nested control flow."""
+        if name in memo_flops:
+            return memo_flops[name]
+        comp = comps.get(name)
+        out = dict(zero)
+        if comp is None or depth > 64:
+            return out
+        memo_flops[name] = out
+        for op in comp.ops:
+            if op.opcode == "dot":
+                lhs_dims = []
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                               op.line)
+                lhs_shape = comp.syms.get(op.operands[0], [])
+                if cm and lhs_shape:
+                    dims = lhs_shape[0][1]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            lhs_dims.append(dims[int(idx)])
+                k = 1
+                for d in lhs_dims:
+                    k *= d
+                n_out = 1
+                for dt, dims in op.result:
+                    for d in dims:
+                        n_out *= d
+                out["dot_flops"] += 2.0 * n_out * k
+            base = op.opcode[:-6] if op.opcode.endswith("-start") \
+                else op.opcode
+            if base in _COLLECTIVES:
+                b = sum(_bytes_of(comp.syms.get(o, []))
+                        for o in op.operands)
+                out[f"coll_{base}"] += b
+                out["coll_total"] += b
+                out["coll_count"] += 1
+            mult, subs = _sub_computations(op)
+            for cn in subs:
+                sub = flops_of(cn, depth + 1)
+                for kk in out:
+                    out[kk] += mult * sub[kk]
+        return out
+
+    memo_traffic: Dict[str, Tuple[float, float]] = {}
+
+    def traffic_of(name: str, depth=0) -> Tuple[float, float]:
+        """(variant_bytes, invariant_bytes) HBM traffic of one execution
+        of the computation.  Loop-invariant operands inside while bodies
+        (weights pinned in VMEM across a sequential scan) are separated so
+        the caller charges them ONCE, not x trip_count."""
+        if name in memo_traffic:
+            return memo_traffic[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return (0.0, 0.0)
+        memo_traffic[name] = (0.0, 0.0)
+        invariant_gtes = _invariant_gtes(comp)
+        var_b = 0.0
+        inv_b = 0.0
+        for op in comp.ops:
+            if op.opcode in _SKIP_OPS and op.opcode not in (
+                    "while", "conditional"):
+                continue
+            if op.opcode in ("while", "conditional"):
+                mult, subs = _sub_computations(op)
+                for cn in subs:
+                    v, i = traffic_of(cn, depth + 1)
+                    var_b += mult * v + i         # invariants charged once
+                continue
+            t = _op_traffic(op, comp, comps)
+            # split out reads of loop-invariant tuple elements
+            inv_here = sum(
+                _bytes_of(comp.syms.get(o, []))
+                for o in op.operands if o in invariant_gtes)
+            inv_here = min(inv_here, t)
+            var_b += t - inv_here
+            inv_b += inv_here
+        memo_traffic[name] = (var_b, inv_b)
+        return (var_b, inv_b)
+
+    out = flops_of(entry)
+    v, i = traffic_of(entry)
+    out["traffic_bytes"] = v + i
+    return out
+
+
+def _invariant_gtes(comp: Comp) -> set:
+    """Names of get-tuple-element ops on the computation's parameter whose
+    tuple slot is passed through unchanged to the ROOT tuple — i.e.
+    loop-invariant state of a while body."""
+    root = None
+    for op in comp.ops:
+        if op.opcode == "tuple" and "ROOT" in op.line:
+            root = op
+    if root is None:
+        return set()
+    params = {op.name for op in comp.ops if op.opcode == "parameter"}
+    gte_idx = {}
+    for op in comp.ops:
+        if op.opcode == "get-tuple-element" and op.operands and \
+                op.operands[0] in params:
+            m = re.search(r"index=(\d+)", op.line)
+            if m:
+                gte_idx[op.name] = int(m.group(1))
+    out = set()
+    for pos, oname in enumerate(root.operands):
+        if gte_idx.get(oname) == pos:
+            out.add(oname)
+    return out
+
+
+def _sub_computations(op: Op) -> Tuple[float, List[str]]:
+    """(multiplier, called computations) for control-flow ops only."""
+    if op.opcode == "while":
+        tm = _TRIP_RE.search(op.line)
+        mult = float(tm.group(1)) if tm else 1.0
+        subs = []
+        bm = re.search(r"body=%?([\w.\-]+)", op.line)
+        if bm:
+            subs.append(bm.group(1))
+        return mult, subs
+    if op.opcode == "conditional":
+        bm = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+        if bm:
+            return 1.0, [c.strip().lstrip("%")
+                         for c in bm.group(1).split(",")]
+        return 1.0, []
+    if op.opcode in _FUSED_CALLERS or op.opcode == "call":
+        cm = re.search(r"(?:calls=|to_apply=)%?([\w.\-]+)", op.line)
+        if cm:
+            return 1.0, [cm.group(1)]
+    return 1.0, []

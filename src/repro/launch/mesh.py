@@ -1,0 +1,62 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (TPU v5e pod).
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; `launch/dryrun.py` sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count=...`` before any jax import.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before importing jax (see launch/dryrun.py)")
+    # more devices than needed (e.g. 512 forced, single-pod mesh): subset
+    from jax.sharding import Mesh
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh for CI sharding tests (requires forced host devices)."""
+    import jax
+    from jax.sharding import Mesh
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+_BATCH_AXES_OVERRIDE: Optional[Tuple[str, ...]] = None
+
+
+def set_batch_axes_override(axes: Optional[Tuple[str, ...]]) -> None:
+    """Perf variant hook: e.g. ("data", "model") = pure data parallelism
+    over the whole mesh (TP disabled) for small models."""
+    global _BATCH_AXES_OVERRIDE
+    _BATCH_AXES_OVERRIDE = tuple(axes) if axes else None
+
+
+def batch_axes_of(mesh) -> Tuple[str, ...]:
+    if _BATCH_AXES_OVERRIDE is not None:
+        return tuple(a for a in _BATCH_AXES_OVERRIDE
+                     if a in mesh.axis_names)
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

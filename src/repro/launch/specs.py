@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` builds weak-type-correct, shardable abstract values for
+every model input — no device allocation ever happens in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.optim import optimizer as opt_lib
+
+from .mesh import batch_axes_of
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_spec(cfg: ModelConfig, sh: ShapeSpec) -> Dict[str, Any]:
+    """Abstract training/prefill batch for one shape cell."""
+    b, s = sh.global_batch, sh.seq_len
+    s_text = s - (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    out = dict(tokens=_sds((b, s_text), jnp.int32),
+               labels=_sds((b, s_text), jnp.int32))
+    if cfg.frontend == "vision":
+        out["frontend"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.frontend == "audio":
+        out["enc_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, sh: ShapeSpec, mesh
+                    ) -> Dict[str, Any]:
+    ba = batch_axes_of(mesh)
+    b = sh.global_batch
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    lead = (ba if len(ba) > 1 else ba[0]) if b % n_b == 0 else None
+    out = dict(tokens=NamedSharding(mesh, P(lead, None)),
+               labels=NamedSharding(mesh, P(lead, None)))
+    if cfg.frontend == "vision":
+        out["frontend"] = NamedSharding(mesh, P(lead, None, None))
+    if cfg.frontend == "audio":
+        out["enc_embeds"] = NamedSharding(mesh, P(lead, None, None))
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, sh: ShapeSpec, model: Model
+                  ) -> Tuple[Any, Any, Any]:
+    """(cache_shapes, tokens_shape, pos_shape) abstract values."""
+    b, s = sh.global_batch, sh.seq_len
+    if cfg.n_enc_layers:
+        params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        enc = _sds((b, min(s, 4096), cfg.d_model), jnp.bfloat16)
+        cache = jax.eval_shape(
+            lambda p, e: model.init_cache(b, s, params=p, enc_embeds=e),
+            params_sh, enc)
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return cache, _sds((b, 1), jnp.int32), _sds((), jnp.int32)
+
+
+def decode_shardings(cfg: ModelConfig, sh: ShapeSpec, mesh, model: Model):
+    """(cache_shardings, token_sharding, pos_sharding)."""
+    ba = batch_axes_of(mesh)
+    b = sh.global_batch
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    batch_shard = ba if b % n_b == 0 else ()
+    # sequence axis of KV caches: long-context decode spreads the cache
+    # over every axis not used by the batch
+    if sh.kind == "long_decode":
+        seq_shard = tuple(ba) + ("model",) if not batch_shard else ("model",)
+    else:
+        seq_shard = ("model",) if sh.seq_len % mesh.shape["model"] == 0 \
+            else ()
+    cache_specs = model.cache_specs(batch_shard=batch_shard,
+                                    seq_shard=seq_shard)
+    cache_sh = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), cache_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    lead = (tuple(ba) if len(ba) > 1 else ba[0]) if batch_shard else None
+    tok = NamedSharding(mesh, P(lead, None))
+    pos = NamedSharding(mesh, P())
+    return cache_sh, tok, pos
+
+
+def param_and_opt_shardings(model: Model, mesh, ocfg=None):
+    """(param_shapes, param_shardings, opt_shapes, opt_shardings)."""
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = model.param_specs()
+    psh = jax.tree.map(lambda spec: NamedSharding(mesh, spec), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    oshapes = osh = None
+    if ocfg is not None:
+        oshapes = jax.eval_shape(lambda p: opt_lib.init(p, ocfg), pshapes)
+        shape_tree = jax.tree.map(lambda s: s.shape, pshapes)
+        ospecs = opt_lib.opt_state_specs(pspecs, shape_tree,
+                                         data_size=mesh.shape["data"])
+        osh = opt_lib.OptState(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                            ospecs.mu, is_leaf=lambda x: isinstance(x, P)),
+            nu=jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                            ospecs.nu, is_leaf=lambda x: isinstance(x, P)))
+    return pshapes, psh, oshapes, osh

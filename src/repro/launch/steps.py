@@ -1,0 +1,76 @@
+"""Step builders shared by the trainer, the server and the dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import optimizer as opt_lib
+
+
+def build_train_step(model: Model, ocfg: opt_lib.OptConfig,
+                     n_microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``n_microbatches`` > 1 the global batch is split along axis 0 and
+    gradients are accumulated with a ``lax.scan`` (sequential microbatches
+    — the standard remat-friendly pattern)."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches,
+                                  x.shape[0] // n_microbatches) +
+                                 x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gsum, lsum = carry
+                (l, aux), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), aux
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), aux = jax.lax.scan(
+                acc_body, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+            loss = lsum / n_microbatches
+            aux = jax.tree.map(lambda a: a[-1], aux)
+        params, opt_state, stats = opt_lib.apply(params, grads,
+                                                 opt_state, ocfg)
+        metrics = dict(loss=loss, **stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_serve_step(model: Model) -> Callable:
+    """(params, cache, tokens [B,1], pos scalar) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def build_prefill_step(model: Model) -> Callable:
+    """Prefill lowers the forward pass (logits over the whole prompt)."""
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch["tokens"],
+                                  frontend=batch.get("frontend"),
+                                  enc_embeds=batch.get("enc_embeds"))
+        return logits
+
+    return prefill_step

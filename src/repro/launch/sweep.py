@@ -1,0 +1,78 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell in its own
+subprocess (sequential — the container has one core; isolation means one
+pathological cell cannot take down the sweep), appending JSONL records.
+Resumable: cells already present in the output file are skipped.
+
+    PYTHONPATH=src python -m repro.launch.sweep --jsonl bench_out/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def existing_keys(path):
+    keys = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        keys.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    return keys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", required=True)
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--only-mesh", choices=["16x16", "2x16x16"], default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCHS, SHAPES     # no jax import here
+    done = existing_keys(args.jsonl)
+    cells = []
+    for a in sorted(ARCHS):
+        for s in SHAPES:                         # keep canonical order
+            for mesh, flag in (("16x16", []), ("2x16x16", ["--multi-pod"])):
+                if args.only_mesh and mesh != args.only_mesh:
+                    continue
+                if (a, s, mesh) in done:
+                    continue
+                cells.append((a, s, mesh, flag))
+
+    print(f"{len(cells)} cells to run ({len(done)} already done)",
+          flush=True)
+    for i, (a, s, mesh, flag) in enumerate(cells):
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--jsonl", args.jsonl] + flag
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            status = "ok" if r.returncode == 0 else "err"
+            if r.returncode != 0:
+                with open(args.jsonl, "a") as f:
+                    f.write(json.dumps(dict(
+                        arch=a, shape=s, mesh=mesh, status="error",
+                        error=f"rc={r.returncode}",
+                        stderr=r.stderr[-1500:])) + "\n")
+        except subprocess.TimeoutExpired:
+            status = "timeout"
+            with open(args.jsonl, "a") as f:
+                f.write(json.dumps(dict(
+                    arch=a, shape=s, mesh=mesh, status="error",
+                    error=f"timeout {args.timeout}s")) + "\n")
+        print(f"[{i+1}/{len(cells)}] {a} {s} {mesh}: {status} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Attention: GQA with causal / sliding-window masks, query-chunked
+computation for long sequences (bounded O(chunk*S) score memory — the
+pure-jnp stand-in for the Pallas flash kernel, same blocking scheme), and
+single-token decode against a KV cache.
+
+All functions are pjit-friendly: no explicit collectives; sharding is
+induced by the in/out shardings and `with_sharding_constraint` at the
+model level.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B,S,KV,hd] -> [B,S,KV*n_rep,hd] by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, chunk: int = 0) -> jnp.ndarray:
+    """q: [B,Sq,H,hd], k/v: [B,Sk,KV,hd] -> [B,Sq,H,hd].
+
+    ``window``: sliding-window size (None = full).  ``q_offset``: absolute
+    position of q[0] relative to k[0] (prefill continuation / decode).
+    ``chunk`` > 0: compute in query chunks of that size (flash-style row
+    blocking) so the materialized score block is [B,H,chunk,Sk].
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    n_rep = h // kv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+
+    if chunk and sq > chunk and sq % chunk == 0:
+        n_chunks = sq // chunk
+        qc = q.reshape(b, n_chunks, chunk, h, hd)
+
+        def one(carry, xs):
+            qi, idx = xs
+            off = q_offset + idx * chunk
+            out = _attn_block(qi, k, v, causal, window, off)
+            return carry, out
+
+        _, outs = jax.lax.scan(
+            one, None,
+            (qc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(n_chunks)))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+    return _attn_block(q, k, v, causal, window, q_offset)
+
+
+def _attn_block(q, k, v, causal, window, q_offset):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    # [B,H,Sq,Sk]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)[:, None]            # [Sq,1]
+    kpos = jnp.arange(sk)[None, :]                       # [1,Sk]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-position decode: q [B,1,H,hd] against cache [B,S,KV,hd].
+
+    ``cache_len``: scalar int32 — number of valid cache positions (the new
+    token's K/V must already be written at cache_len-1).
+    """
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    n_rep = h // kv
+    k = _repeat_kv(k_cache, n_rep)
+    v = _repeat_kv(v_cache, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale    # [B,H,1,S]
+    kpos = jnp.arange(s)[None, None, None, :]
+    valid = kpos < cache_len
+    if window is not None:
+        valid &= kpos >= cache_len - window
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def update_cache(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 cache_len: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write k_new/v_new [B,1,KV,hd] at position cache_len."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    return k_cache, v_cache

@@ -1,0 +1,549 @@
+"""Block param builders + apply functions for every block kind.
+
+Each kind implements:
+    build(cfg, key)                  -> (params, specs)   (one layer)
+    train(cfg, p, x, off, enc_out)   -> (x, aux)
+    cache_init(cfg, batch, max_len)  -> cache             (one layer)
+    decode(cfg, p, cache, x_t, pos)  -> (x_t, cache)
+
+Parameter sharding follows Megatron TP conventions on the "model" axis;
+MoE experts are expert-parallel over "model" with the expert hidden dim
+over "data" (FSDP-style); KV projections whose joint width is not
+divisible by the TP degree stay replicated (GQA with few KV heads).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_lib
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .layers import (apply_m_rope, apply_rope, dtype_of, mlp, rms_norm,
+                     swiglu, _init_dense)
+from .moe import moe_ffn, moe_ffn_grouped, moe_params_shape
+from .sharding import bspec, constrain, constrain_batch
+
+TP = 16     # tensor-parallel degree of the production mesh ("model" axis)
+_TP_ENABLED = True
+
+
+def set_tp_enabled(flag: bool) -> None:
+    """Disable tensor-parallel param sharding (pure-DP mapping for small
+    models — §Perf hillclimb, xlstm train_4k)."""
+    global _TP_ENABLED
+    _TP_ENABLED = flag
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def _mdl(width: int) -> Optional[str]:
+    """'model' if the width divides evenly across TP, else replicate."""
+    if not _TP_ENABLED:
+        return None
+    return "model" if width % TP == 0 else None
+
+
+# =========================================================== attention core
+
+
+def _attn_params(cfg: ModelConfig, key, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = dtype_of(cfg.param_dtype)
+    ks = _split(key, 4)
+    p = dict(
+        wq=_init_dense(ks[0], d, h * hd, dt),
+        wk=_init_dense(ks[1], d, kv * hd, dt),
+        wv=_init_dense(ks[2], d, kv * hd, dt),
+        wo=_init_dense(ks[3], h * hd, d, dt),
+    )
+    s = dict(
+        wq=P(None, _mdl(h * hd)),
+        wk=P(None, _mdl(kv * hd)),
+        wv=P(None, _mdl(kv * hd)),
+        wo=P(_mdl(h * hd), None),
+    )
+    return p, s
+
+
+def _qkv(cfg: ModelConfig, p, x, x_kv=None, positions=None):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xk = x if x_kv is None else x_kv
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, xk.shape[1], kv, hd)
+    v = (xk @ p["wv"]).reshape(b, xk.shape[1], kv, hd)
+    q = constrain_batch(q, None, "model", None)
+    if positions is not None:
+        if cfg.m_rope:
+            q = apply_m_rope(q, positions, cfg.rope_theta)
+            k = apply_m_rope(k, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp_params(cfg: ModelConfig, key, d_ff: int):
+    d = cfg.d_model
+    dt = dtype_of(cfg.param_dtype)
+    ks = _split(key, 3)
+    p = dict(w1=_init_dense(ks[0], d, d_ff, dt),
+             w2=_init_dense(ks[2], d_ff, d, dt))
+    s = dict(w1=P(None, _mdl(d_ff)), w2=P(_mdl(d_ff), None))
+    if cfg.mlp_kind == "swiglu":
+        p["w3"] = _init_dense(ks[1], d, d_ff, dt)
+        s["w3"] = P(None, _mdl(d_ff))
+    return p, s
+
+
+# =========================================================== attn block
+
+
+def build_attn(cfg: ModelConfig, key, local: bool = False,
+               cross: bool = False):
+    ks = _split(key, 4)
+    ap, asp = _attn_params(cfg, ks[0])
+    mp, msp = _mlp_params(cfg, ks[1], cfg.d_ff)
+    dt = dtype_of(cfg.param_dtype)
+    p = dict(ln1=jnp.ones((cfg.d_model,), dt), attn=ap,
+             ln2=jnp.ones((cfg.d_model,), dt), mlp=mp)
+    s = dict(ln1=P(None), attn=asp, ln2=P(None), mlp=msp)
+    if cross:
+        cp, csp = _attn_params(cfg, ks[2])
+        p["lnx"] = jnp.ones((cfg.d_model,), dt)
+        p["xattn"] = cp
+        s["lnx"] = P(None)
+        s["xattn"] = csp
+    return p, s
+
+
+def train_attn(cfg: ModelConfig, p, x, off: int = 0, enc_out=None,
+               local: bool = False, causal: bool = True):
+    b, s, d = x.shape
+    positions = off + jnp.arange(s)[None, :]
+    q, k, v = _qkv(cfg, p["attn"], rms_norm(x, p["ln1"]),
+                   positions=positions)
+    window = cfg.sliding_window if local else None
+    o = attn_lib.attention(q, k, v, causal=causal, window=window,
+                           q_offset=off, chunk=cfg.attention_chunk)
+    x = x + o.reshape(b, s, -1) @ p["attn"]["wo"]
+    x = constrain_batch(x, None, None)
+    if enc_out is not None and "xattn" in p:
+        q2, k2, v2 = _qkv(cfg, p["xattn"], rms_norm(x, p["lnx"]),
+                          x_kv=enc_out)
+        o2 = attn_lib.attention(q2, k2, v2, causal=False, chunk=0)
+        x = x + o2.reshape(b, s, -1) @ p["xattn"]["wo"]
+    x = x + mlp(rms_norm(x, p["ln2"]), p["mlp"])
+    return constrain_batch(x, None, None), jnp.float32(0.0)
+
+
+def cache_init_attn(cfg: ModelConfig, batch: int, max_len: int,
+                    cross_len: int = 0):
+    dt = dtype_of(cfg.compute_dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    c = dict(k=jnp.zeros((batch, max_len, kv, hd), dt),
+             v=jnp.zeros((batch, max_len, kv, hd), dt))
+    if cross_len:
+        c["xk"] = jnp.zeros((batch, cross_len, kv, hd), dt)
+        c["xv"] = jnp.zeros((batch, cross_len, kv, hd), dt)
+    return c
+
+
+def decode_attn(cfg: ModelConfig, p, cache, x_t, pos, local: bool = False):
+    """x_t: [B,1,d]; pos: scalar int32 cache length before this token."""
+    b = x_t.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p["attn"], rms_norm(x_t, p["ln1"]),
+                   positions=positions)
+    kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos)
+    cache = dict(cache, k=kc, v=vc)
+    window = cfg.sliding_window if local else None
+    o = attn_lib.decode_attention(q, kc, vc, pos + 1, window=window)
+    x_t = x_t + o.reshape(b, 1, -1) @ p["attn"]["wo"]
+    if "xattn" in p and "xk" in cache:
+        q2 = (rms_norm(x_t, p["lnx"]) @ p["xattn"]["wq"]).reshape(
+            b, 1, cfg.n_heads, cfg.hd)
+        o2 = attn_lib.decode_attention(q2, cache["xk"], cache["xv"],
+                                       jnp.int32(cache["xk"].shape[1]))
+        x_t = x_t + o2.reshape(b, 1, -1) @ p["xattn"]["wo"]
+    x_t = x_t + mlp(rms_norm(x_t, p["ln2"]), p["mlp"])
+    return x_t, cache
+
+
+# =========================================================== moe block
+
+
+def build_moe(cfg: ModelConfig, key):
+    ks = _split(key, 6)
+    ap, asp = _attn_params(cfg, ks[0])
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    shapes = moe_params_shape(d, cfg.n_experts, cfg.moe_d_ff)
+    mp = {}
+    for i, (name, shp) in enumerate(shapes.items()):
+        scale = 1.0 / np.sqrt(shp[-2] if len(shp) > 2 else shp[0])
+        mp[name] = (jax.random.normal(ks[1 + i % 4], shp, jnp.float32) *
+                    scale).astype(dt)
+    msp = dict(wg=P(None, _mdl(cfg.n_experts)),
+               w1=P(_mdl(cfg.n_experts), None, "data"),
+               w3=P(_mdl(cfg.n_experts), None, "data"),
+               w2=P(_mdl(cfg.n_experts), "data", None))
+    p = dict(ln1=jnp.ones((d,), dt), attn=ap,
+             ln2=jnp.ones((d,), dt), moe=mp)
+    s = dict(ln1=P(None), attn=asp, ln2=P(None), moe=msp)
+    if cfg.moe_dense_residual:
+        dp, dsp = _mlp_params(cfg, ks[5], cfg.d_ff)
+        p["dense"] = dp
+        s["dense"] = dsp
+    return p, s
+
+
+def train_moe(cfg: ModelConfig, p, x, off: int = 0, enc_out=None):
+    b, s, d = x.shape
+    positions = off + jnp.arange(s)[None, :]
+    q, k, v = _qkv(cfg, p["attn"], rms_norm(x, p["ln1"]),
+                   positions=positions)
+    o = attn_lib.attention(q, k, v, causal=True, chunk=cfg.attention_chunk)
+    x = x + o.reshape(b, s, -1) @ p["attn"]["wo"]
+    h = rms_norm(x, p["ln2"])
+    if cfg.moe_grouped:
+        y, aux = moe_ffn_grouped(h, p["moe"], cfg.top_k,
+                                 cfg.capacity_factor, cfg.moe_n_groups)
+    else:
+        y, aux = moe_ffn(h, p["moe"], cfg.top_k, cfg.capacity_factor)
+    if "dense" in p:
+        y = y + mlp(h, p["dense"])          # Arctic dense residual branch
+    x = x + y
+    return constrain_batch(x, None, None), aux
+
+
+def decode_moe(cfg: ModelConfig, p, cache, x_t, pos):
+    b = x_t.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p["attn"], rms_norm(x_t, p["ln1"]),
+                   positions=positions)
+    kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos)
+    cache = dict(cache, k=kc, v=vc)
+    o = attn_lib.decode_attention(q, kc, vc, pos + 1)
+    x_t = x_t + o.reshape(b, 1, -1) @ p["attn"]["wo"]
+    h = rms_norm(x_t, p["ln2"])
+    y, _ = moe_ffn(h, p["moe"], cfg.top_k, cfg.capacity_factor)
+    if "dense" in p:
+        y = y + mlp(h, p["dense"])
+    return x_t + y, cache
+
+
+# =========================================================== mamba2 block
+
+
+def _mamba_dims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model
+    headdim = 64
+    nh = d_in // headdim
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n
+    return d_in, headdim, nh, n, conv_dim
+
+
+def build_mamba2(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_in, hdim, nh, n, conv_dim = _mamba_dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = _split(key, 3)
+    proj_out = 2 * d_in + 2 * n + nh
+    p = dict(
+        ln=jnp.ones((d,), dt),
+        in_proj=_init_dense(ks[0], d, proj_out, dt),
+        conv_w=(jax.random.normal(ks[1], (4, conv_dim), jnp.float32)
+                * 0.2).astype(dt),
+        a_log=jnp.zeros((nh,), jnp.float32),
+        d_skip=jnp.ones((nh,), jnp.float32),
+        dt_bias=jnp.zeros((nh,), jnp.float32),
+        out_proj=_init_dense(ks[2], d_in, d, dt),
+    )
+    s = dict(ln=P(None), in_proj=P(None, _mdl(proj_out)),
+             conv_w=P(None, None), a_log=P(None), d_skip=P(None),
+             dt_bias=P(None), out_proj=P(_mdl(d_in), None))
+    return p, s
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width 4.  x: [B,S,C], w: [4,C].
+    state: [B,3,C] previous tokens (decode) or None (zero pad)."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(4))
+    new_state = xp[:, -3:]
+    return out, new_state
+
+
+def _mamba_project(cfg, p, x):
+    d_in, hdim, nh, n, conv_dim = _mamba_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt_raw = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt_raw
+
+
+def train_mamba2(cfg: ModelConfig, p, x, off: int = 0, enc_out=None):
+    b, s, d = x.shape
+    d_in, hdim, nh, n, conv_dim = _mamba_dims(cfg)
+    h = rms_norm(x, p["ln"])
+    z, xbc, dt_raw = _mamba_project(cfg, p, h)
+    xbc, _ = _causal_conv(xbc, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(b, s, nh, hdim)
+    bmat = xbc[..., d_in:d_in + n]
+    cmat = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = (-jnp.exp(p["a_log"]))[None, None, :] * dt          # [B,S,H]
+    y, _ = ssm_lib.ssd_chunked(xs * dt[..., None].astype(xs.dtype),
+                               a, bmat, cmat, cfg.ssm_chunk)
+    y = y.astype(xs.dtype) + xs * p["d_skip"][None, None, :,
+                                              None].astype(xs.dtype)
+    y = y.reshape(b, s, d_in) * jax.nn.silu(z)
+    x = x + (y @ p["out_proj"]).astype(x.dtype)
+    return constrain_batch(x, None, None), jnp.float32(0.0)
+
+
+def cache_init_mamba2(cfg: ModelConfig, batch: int, max_len: int):
+    d_in, hdim, nh, n, conv_dim = _mamba_dims(cfg)
+    dt = dtype_of(cfg.compute_dtype)
+    return dict(conv=jnp.zeros((batch, 3, conv_dim), dt),
+                ssm=jnp.zeros((batch, nh, hdim, n), dt))
+
+
+def decode_mamba2(cfg: ModelConfig, p, cache, x_t, pos):
+    b = x_t.shape[0]
+    d_in, hdim, nh, n, conv_dim = _mamba_dims(cfg)
+    h = rms_norm(x_t, p["ln"])
+    z, xbc, dt_raw = _mamba_project(cfg, p, h)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[:, 0, :d_in].reshape(b, nh, hdim)
+    bmat = xbc[:, 0, d_in:d_in + n]
+    cmat = xbc[:, 0, d_in + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = (-jnp.exp(p["a_log"]))[None, :] * dt                # [B,H]
+    y, ssm = ssm_lib.ssd_decode_step(
+        cache["ssm"].astype(jnp.float32),
+        (xs * dt[..., None].astype(xs.dtype)).astype(jnp.float32),
+        a, bmat.astype(jnp.float32), cmat.astype(jnp.float32))
+    y = y.astype(xs.dtype) + xs * p["d_skip"][None, :, None].astype(xs.dtype)
+    y = y.reshape(b, 1, d_in) * jax.nn.silu(z)
+    x_t = x_t + y @ p["out_proj"]
+    return x_t, dict(conv=conv_state.astype(cache["conv"].dtype),
+                     ssm=ssm.astype(cache["ssm"].dtype))
+
+
+# =========================================================== mlstm block
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    dp = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    hd = dp // h
+    return dp, h, hd
+
+
+def build_mlstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    dp, h, hd = _mlstm_dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = _split(key, 6)
+    p = dict(
+        ln=jnp.ones((d,), dt),
+        up=_init_dense(ks[0], d, 2 * dp, dt),
+        wq=_init_dense(ks[1], dp, dp, dt),
+        wk=_init_dense(ks[2], dp, dp, dt),
+        wv=_init_dense(ks[3], dp, dp, dt),
+        wif=_init_dense(ks[4], dp, 2 * h, dt),
+        down=_init_dense(ks[5], dp, d, dt),
+    )
+    s = dict(ln=P(None), up=P(None, _mdl(2 * dp)), wq=P(None, _mdl(dp)),
+             wk=P(None, _mdl(dp)), wv=P(None, _mdl(dp)),
+             wif=P(None, None), down=P(_mdl(dp), None))
+    return p, s
+
+
+def train_mlstm(cfg: ModelConfig, p, x, off: int = 0, enc_out=None):
+    b, s, d = x.shape
+    dp, h, hd = _mlstm_dims(cfg)
+    hx = rms_norm(x, p["ln"])
+    up = hx @ p["up"]
+    xm, z = up[..., :dp], up[..., dp:]
+    q = (xm @ p["wq"]).reshape(b, s, h, hd)
+    k = (xm @ p["wk"]).reshape(b, s, h, hd)
+    v = (xm @ p["wv"]).reshape(b, s, h, hd)
+    gates = xm @ p["wif"]
+    ig, fg = gates[..., :h], gates[..., h:]
+    y, _ = ssm_lib.mlstm_chunked(q, k, v, ig, fg, cfg.ssm_chunk)
+    y = y.astype(x.dtype).reshape(b, s, dp) * jax.nn.silu(z)
+    x = x + y @ p["down"]
+    return constrain_batch(x, None, None), jnp.float32(0.0)
+
+
+def cache_init_mlstm(cfg: ModelConfig, batch: int, max_len: int):
+    dp, h, hd = _mlstm_dims(cfg)
+    dt = dtype_of(cfg.compute_dtype)
+    c, n = ssm_lib.mlstm_init_state(batch, h, hd, dt)
+    return dict(c=c, n=n)
+
+
+def decode_mlstm(cfg: ModelConfig, p, cache, x_t, pos):
+    b = x_t.shape[0]
+    dp, h, hd = _mlstm_dims(cfg)
+    hx = rms_norm(x_t, p["ln"])
+    up = (hx @ p["up"])[:, 0]
+    xm, z = up[..., :dp], up[..., dp:]
+    q = (xm @ p["wq"]).reshape(b, h, hd)
+    k = (xm @ p["wk"]).reshape(b, h, hd)
+    v = (xm @ p["wv"]).reshape(b, h, hd)
+    gates = xm @ p["wif"]
+    ig, fg = gates[..., :h], gates[..., h:]
+    y, (c2, n2) = ssm_lib.mlstm_decode_step((cache["c"], cache["n"]),
+                                            q, k, v, ig, fg)
+    y = y.astype(x_t.dtype).reshape(b, 1, dp) * jax.nn.silu(z[:, None])
+    x_t = x_t + y @ p["down"]
+    return x_t, dict(c=c2, n=n2)
+
+
+# =========================================================== slstm block
+
+
+def build_slstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    dt = dtype_of(cfg.param_dtype)
+    ks = _split(key, 3)
+    p = dict(
+        ln=jnp.ones((d,), dt),
+        wx=_init_dense(ks[0], d, 4 * d, dt),
+        r=(jax.random.normal(ks[1], (4, h, hd, hd), jnp.float32) *
+           (0.3 / np.sqrt(hd))).astype(dt),
+        out=_init_dense(ks[2], d, d, dt),
+    )
+    # r sharded on the hd OUTPUT axis: keeps the per-token recurrent
+    # einsum's weight-gradient reduction off the sequential scan's
+    # critical path (§Perf, xlstm train_4k v2)
+    s = dict(ln=P(None), wx=P(None, _mdl(4 * d)),
+             r=P(None, None, None, _mdl(hd)),
+             out=P(None, _mdl(d)))
+    return p, s
+
+
+def train_slstm(cfg: ModelConfig, p, x, off: int = 0, enc_out=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    hx = rms_norm(x, p["ln"])
+    parts = (hx @ p["wx"]).reshape(b, s, 4, h, hd)
+    ys, _ = ssm_lib.slstm_scan(parts, p["r"])
+    y = ys.astype(x.dtype).reshape(b, s, d) @ p["out"]
+    return constrain_batch(x + y, None, None), jnp.float32(0.0)
+
+
+def cache_init_slstm(cfg: ModelConfig, batch: int, max_len: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return dict(c=z, n=z + 1e-6, h=z, m=z - 10.0)
+
+
+def decode_slstm(cfg: ModelConfig, p, cache, x_t, pos):
+    b = x_t.shape[0]
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    hx = rms_norm(x_t, p["ln"])
+    parts = (hx @ p["wx"]).reshape(b, 1, 4, h, hd)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    ys, (c, n, hh, m) = ssm_lib.slstm_scan(parts, p["r"], state)
+    y = ys.astype(x_t.dtype).reshape(b, 1, d) @ p["out"]
+    return x_t + y, dict(c=c, n=n, h=hh, m=m)
+
+
+# =========================================================== registry
+
+BUILDERS = {
+    "attn": lambda cfg, key: build_attn(cfg, key),
+    "attn_local": lambda cfg, key: build_attn(cfg, key, local=True),
+    "attn_cross": lambda cfg, key: build_attn(cfg, key, cross=True),
+    "moe": build_moe,
+    "mamba2": build_mamba2,
+    "mlstm": build_mlstm,
+    "slstm": build_slstm,
+}
+
+TRAIN_FNS = {
+    "attn": lambda cfg, p, x, off, enc: train_attn(cfg, p, x, off, enc),
+    "attn_local": lambda cfg, p, x, off, enc: train_attn(
+        cfg, p, x, off, enc, local=True),
+    "attn_cross": lambda cfg, p, x, off, enc: train_attn(cfg, p, x, off, enc),
+    "moe": train_moe,
+    "mamba2": train_mamba2,
+    "mlstm": train_mlstm,
+    "slstm": train_slstm,
+}
+
+DECODE_FNS = {
+    "attn": lambda cfg, p, c, x, pos: decode_attn(cfg, p, c, x, pos),
+    "attn_local": lambda cfg, p, c, x, pos: decode_attn(
+        cfg, p, c, x, pos, local=True),
+    "attn_cross": lambda cfg, p, c, x, pos: decode_attn(cfg, p, c, x, pos),
+    "moe": decode_moe,
+    "mamba2": decode_mamba2,
+    "mlstm": decode_mlstm,
+    "slstm": decode_slstm,
+}
+
+CACHE_FNS = {
+    "attn": cache_init_attn,
+    "attn_local": cache_init_attn,
+    "attn_cross": cache_init_attn,
+    "moe": lambda cfg, b, m: cache_init_attn(cfg, b, m),
+    "mamba2": cache_init_mamba2,
+    "mlstm": cache_init_mlstm,
+    "slstm": cache_init_slstm,
+}
+
+
+def cache_specs(cfg: ModelConfig, kind: str, batch_shard=None,
+                seq_shard: Tuple[str, ...] = ()) -> Dict[str, P]:
+    """PartitionSpecs for one layer's decode cache.  KV caches shard the
+    SEQUENCE axis over ``seq_shard`` (long-context decode) and batch over
+    ``batch_shard``; SSM states shard batch and heads."""
+    def one(axes):
+        if not axes:
+            return None
+        return axes if len(axes) != 1 else axes[0]
+
+    bs = one(tuple(batch_shard) if batch_shard else ())
+    ss = one(tuple(seq_shard))
+    if kind in ("attn", "attn_local", "attn_cross", "moe"):
+        spec = P(bs, ss, None, None)
+        return dict(k=spec, v=spec)
+    if kind == "mamba2":
+        d_in, hdim, nh, n, conv_dim = _mamba_dims(cfg)
+        head_ax = "model" if nh % TP == 0 else None
+        return dict(conv=P(bs, None, None),
+                    ssm=P(bs, head_ax, None, None))
+    if kind == "mlstm":
+        return dict(c=P(bs, None, None, None), n=P(bs, None, None, None))
+    if kind == "slstm":
+        z = P(bs, None, None)
+        return dict(c=z, n=z, h=z, m=z)
+    raise KeyError(kind)

@@ -1,0 +1,133 @@
+"""Shared neural layers (pure JAX, no framework), with sharding metadata.
+
+Every parameter-creating helper returns ``(params, specs)`` where ``specs``
+mirrors the params pytree with ``jax.sharding.PartitionSpec`` leaves.  Axis
+name conventions:
+
+    "data"  — batch / FSDP axis       (16 per pod)
+    "model" — tensor-parallel axis    (16)
+    "pod"   — pod axis (multi-pod only; batch is sharded over
+              ("pod", "data") jointly)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init
+
+
+def _init_dense(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) *
+            scale).astype(dtype)
+
+
+def dense_param(key, d_in: int, d_out: int, dtype,
+                spec: P) -> Tuple[jnp.ndarray, P]:
+    return _init_dense(key, d_in, d_out, dtype), spec
+
+
+def norm_param(d: int, dtype) -> Tuple[jnp.ndarray, P]:
+    return jnp.ones((d,), dtype), P(None)
+
+
+# ---------------------------------------------------------------- ops
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def swiglu(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
+           w2: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    """Dispatch on params: SwiGLU if w3 present, else GELU 2-matrix."""
+    if "w3" in p:
+        return swiglu(x, p["w1"], p["w3"], p["w2"])
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                     # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                 sections=(2, 1, 1)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: head_dim is split into (temporal, h, w)
+    sections, each rotated by its own position stream.  For the text-only
+    backbone stub all three streams share the token index (the paper's
+    degenerate case), but the decomposition — and its cost — is real.
+
+    x: [..., S, H, hd]; positions: [..., S, 3] or [..., S] (broadcast).
+    """
+    if positions.ndim == x.ndim - 2:                     # [..., S] -> 3 copies
+        positions = jnp.stack([positions] * 3, axis=-1)
+    hd = x.shape[-1]
+    total = sum(sections)
+    splits = [s * hd // (2 * total) for s in sections]   # per-section hd/2
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    f_parts = jnp.split(freqs, np.cumsum(splits)[:-1])
+    angs = []
+    for i, fp in enumerate(f_parts):
+        angs.append(positions[..., i:i + 1].astype(jnp.float32) * fp)
+    ang = jnp.concatenate(angs, axis=-1)                 # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- loss
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 softcap: float = 0.0) -> jnp.ndarray:
+    """Mean cross entropy; logits [.., V] bf16-safe (reductions in f32)."""
+    lg = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        lg = jnp.tanh(lg / softcap) * softcap
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

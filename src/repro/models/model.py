@@ -1,0 +1,298 @@
+"""Model assembly: embeddings + scanned super-blocks + LM head.
+
+Weights of each pattern entry are stacked [n_super, repeat, ...] and the
+super-block body is compiled ONCE and driven by ``jax.lax.scan`` — compile
+time is independent of depth.  Zamba2-style *shared* blocks keep a single
+(unstacked) copy of their weights, referenced from the scan body closure,
+while their KV caches remain per-layer.
+
+Public surface:
+    m = Model(cfg)
+    params = m.init(key)
+    specs  = m.param_specs()
+    loss, aux = m.loss_fn(params, batch)
+    cache  = m.init_cache(batch_size, max_len[, enc_embeds, params])
+    logits, cache = m.decode_step(params, cache, tokens, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import blocks as blk
+from .attention import attention
+from .config import BlockSpec, ModelConfig
+from .layers import dtype_of, rms_norm, softmax_xent, _init_dense
+from .sharding import bspec, constrain, constrain_batch
+
+SHARED_KINDS = {"shared_attn"}      # zamba2: one weight copy, many uses
+
+
+def _entry_kind(b: BlockSpec) -> str:
+    return "attn" if b.kind == "shared_attn" else b.kind
+
+
+def _stack_specs(tree, n_lead: int):
+    return jax.tree.map(
+        lambda s: P(*([None] * n_lead + list(s))), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = dtype_of(cfg.param_dtype)
+        keys = jax.random.split(key, 8 + len(cfg.pattern))
+        params: Dict[str, Any] = {}
+        params["embed"] = (jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02).astype(dt)
+        if not cfg.tie_embeddings:
+            params["unembed"] = _init_dense(keys[1], cfg.d_model,
+                                            cfg.vocab_size, dt)
+        params["final_ln"] = jnp.ones((cfg.d_model,), dt)
+
+        for i, b in enumerate(cfg.pattern):
+            kind = _entry_kind(b)
+            builder = blk.BUILDERS[kind]
+            if b.kind in SHARED_KINDS:
+                p, _ = builder(cfg, keys[3 + i])
+                params[f"g{i}"] = p
+            else:
+                kk = jax.random.split(keys[3 + i],
+                                      cfg.n_super * b.repeat)
+                kk = kk.reshape(cfg.n_super, b.repeat, -1)
+                p = jax.vmap(jax.vmap(lambda k: builder(cfg, k)[0]))(kk)
+                params[f"g{i}"] = p
+
+        if cfg.n_enc_layers:
+            kk = jax.random.split(keys[2], cfg.n_enc_layers)
+            params["enc"] = jax.vmap(
+                lambda k: blk.build_attn(cfg, k)[0])(kk)
+            params["enc_ln"] = jnp.ones((cfg.d_model,), dt)
+        return params
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {}
+        if cfg.embed_shard == "vocab":
+            specs["embed"] = P(blk._mdl(cfg.vocab_size), None)
+        else:
+            specs["embed"] = P(None, blk._mdl(cfg.d_model))
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(None, blk._mdl(cfg.vocab_size))
+        specs["final_ln"] = P(None)
+
+        def abstract_specs(builder):
+            # run the builder abstractly (no weight allocation); the spec
+            # tree is captured from the traced call
+            cap = {}
+
+            def f(k):
+                p, s = builder(cfg, k)
+                cap["s"] = s
+                return p
+
+            jax.eval_shape(f, jax.random.PRNGKey(0))
+            return cap["s"]
+
+        for i, b in enumerate(cfg.pattern):
+            kind = _entry_kind(b)
+            s = abstract_specs(blk.BUILDERS[kind])
+            if b.kind in SHARED_KINDS:
+                specs[f"g{i}"] = s
+            else:
+                specs[f"g{i}"] = _stack_specs(s, 2)
+        if cfg.n_enc_layers:
+            s = abstract_specs(lambda c, k: blk.build_attn(c, k))
+            specs["enc"] = _stack_specs(s, 1)
+            specs["enc_ln"] = P(None)
+        return specs
+
+    # ------------------------------------------------------------ fwd
+    def _encoder(self, params, enc_embeds):
+        cfg = self.cfg
+        x = constrain_batch(enc_embeds.astype(dtype_of(cfg.compute_dtype)),
+                            None, None)
+
+        def body(x, layer_p):
+            x, _ = blk.train_attn(cfg, layer_p, x, causal=False)
+            return x, None
+
+        body = _maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return rms_norm(x, params["enc_ln"])
+
+    def _backbone(self, params, x, enc_out=None):
+        """Run the scanned super-blocks.  x: [B,S,d]."""
+        cfg = self.cfg
+        scanned = {f"g{i}": params[f"g{i}"]
+                   for i, b in enumerate(cfg.pattern)
+                   if b.kind not in SHARED_KINDS}
+        shared = {f"g{i}": params[f"g{i}"]
+                  for i, b in enumerate(cfg.pattern)
+                  if b.kind in SHARED_KINDS}
+
+        def super_body(carry, xs):
+            x, aux = carry
+            for i, b in enumerate(cfg.pattern):
+                kind = _entry_kind(b)
+                fn = blk.TRAIN_FNS[kind]
+                if b.kind in SHARED_KINDS:
+                    for _ in range(b.repeat):
+                        x, a = fn(cfg, shared[f"g{i}"], x, 0, enc_out)
+                        aux = aux + a
+                else:
+                    for r in range(b.repeat):
+                        p_r = jax.tree.map(lambda t: t[r], xs[f"g{i}"])
+                        x, a = fn(cfg, p_r, x, 0, enc_out)
+                        aux = aux + a
+            return (x, aux), None
+
+        super_body = _maybe_remat(super_body, cfg.remat)
+        (x, aux), _ = jax.lax.scan(super_body, (x, jnp.float32(0.0)),
+                                   scanned, length=cfg.n_super)
+        return x, aux
+
+    def forward(self, params, tokens, frontend=None, enc_embeds=None):
+        """tokens: [B,S_text] int32; frontend: [B,nf,d] embeddings
+        prepended to the text stream (vlm/audio stubs); enc_embeds:
+        [B,S_enc,d] encoder input (enc-dec).  Returns logits [B,S,V]."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+        if frontend is not None:
+            x = jnp.concatenate(
+                [frontend.astype(x.dtype), x], axis=1)
+        x = constrain_batch(x, None, None)
+        enc_out = None
+        if enc_embeds is not None:
+            enc_out = self._encoder(params, enc_embeds)
+        x, aux = self._backbone(params, x, enc_out)
+        x = rms_norm(x, params["final_ln"])
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(x.dtype)
+        else:
+            logits = x @ params["unembed"]
+        logits = constrain_batch(logits, None, "model")
+        return logits, aux
+
+    def loss_fn(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        logits, aux = self.forward(
+            params, batch["tokens"],
+            frontend=batch.get("frontend"),
+            enc_embeds=batch.get("enc_embeds"))
+        if batch.get("frontend") is not None:
+            logits = logits[:, batch["frontend"].shape[1]:]
+        loss = softmax_xent(logits, batch["labels"], cfg.logit_softcap)
+        total = loss + 0.01 * aux
+        return total, dict(xent=loss, aux=aux)
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, max_len: int,
+                   params=None, enc_embeds=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        cache: Dict[str, Any] = {}
+        for i, b in enumerate(cfg.pattern):
+            kind = _entry_kind(b)
+            one = blk.CACHE_FNS[kind](cfg, batch, max_len)
+            cache[f"g{i}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t[None, None], (cfg.n_super, b.repeat) + t.shape), one)
+        if cfg.n_enc_layers and params is not None and enc_embeds is not None:
+            enc_out = self._encoder(params, enc_embeds)
+
+            def xkv(layer_p):
+                k = (enc_out @ layer_p["attn"]["wk"]).reshape(
+                    batch, -1, cfg.n_kv_heads, cfg.hd)
+                v = (enc_out @ layer_p["attn"]["wv"]).reshape(
+                    batch, -1, cfg.n_kv_heads, cfg.hd)
+                return k, v
+
+            # decoder cross-attn K/V per layer (pattern entry 0 is the
+            # decoder block for enc-dec configs)
+            for i, b in enumerate(cfg.pattern):
+                if _entry_kind(b) == "attn_cross":
+                    ks, vs = jax.vmap(jax.vmap(
+                        lambda p: xkv(p)))(params[f"g{i}"])
+                    cache[f"g{i}"]["xk"] = ks
+                    cache[f"g{i}"]["xv"] = vs
+        return cache
+
+    def cache_specs(self, batch_shard=None,
+                    seq_shard: Tuple[str, ...] = ()) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {}
+        for i, b in enumerate(cfg.pattern):
+            kind = _entry_kind(b)
+            s = blk.cache_specs(cfg, kind, batch_shard, seq_shard)
+            specs[f"g{i}"] = jax.tree.map(
+                lambda sp: P(*([None, None] + list(sp))), s,
+                is_leaf=lambda x: isinstance(x, P))
+            if kind == "attn_cross":
+                xs = blk.cache_specs(cfg, "attn", batch_shard, seq_shard)
+                specs[f"g{i}"]["xk"] = P(None, None, *xs["k"])
+                specs[f"g{i}"]["xv"] = P(None, None, *xs["v"])
+        return specs
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: [B,1] int32; pos: scalar int32 (current cache length).
+        Returns (logits [B,1,V], new cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+        scanned_p = {f"g{i}": params[f"g{i}"]
+                     for i, b in enumerate(cfg.pattern)
+                     if b.kind not in SHARED_KINDS}
+        shared = {f"g{i}": params[f"g{i}"]
+                  for i, b in enumerate(cfg.pattern)
+                  if b.kind in SHARED_KINDS}
+        scanned_c = {f"g{i}": cache[f"g{i}"]
+                     for i, b in enumerate(cfg.pattern)}
+
+        def super_body(x, xs):
+            p_all, c_all = xs
+            c_new = {}
+            for i, b in enumerate(cfg.pattern):
+                kind = _entry_kind(b)
+                fn = blk.DECODE_FNS[kind]
+                outs = []
+                for r in range(b.repeat):
+                    c_r = jax.tree.map(lambda t: t[r], c_all[f"g{i}"])
+                    if b.kind in SHARED_KINDS:
+                        p_r = shared[f"g{i}"]
+                    else:
+                        p_r = jax.tree.map(lambda t: t[r], p_all[f"g{i}"])
+                    x, c_r = fn(cfg, p_r, c_r, x, pos)
+                    outs.append(c_r)
+                c_new[f"g{i}"] = jax.tree.map(
+                    lambda *ts: jnp.stack(ts), *outs)
+            return x, c_new
+
+        x, new_scanned_c = jax.lax.scan(super_body, x,
+                                        (scanned_p, scanned_c))
+        x = rms_norm(x, params["final_ln"])
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(x.dtype)
+        else:
+            logits = x @ params["unembed"]
+        cache = dict(cache, **new_scanned_c)
+        return logits, cache
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)

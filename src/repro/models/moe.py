@@ -1,0 +1,139 @@
+"""Top-k routed mixture-of-experts FFN (GShard-style capacity dispatch).
+
+Dispatch is the standard scatter/gather formulation: top-k routing, position
+within expert via a cumulative-sum over the one-hot assignment matrix,
+capacity-bounded buffers [E, C, d], SwiGLU expert compute as batched
+einsums, weighted combine.  Tokens overflowing an expert's capacity are
+dropped (pass through the residual), capacity_factor defaults to 1.25.
+
+Sharding intent (constrained in model.py): tokens sharded over the batch
+axes, experts over "model", expert hidden dim over "data" — so expert
+compute is fully distributed and dispatch lowers to all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import swiglu
+
+
+def moe_params_shape(d_model: int, n_experts: int, d_ff: int):
+    return dict(
+        wg=(d_model, n_experts),
+        w1=(n_experts, d_model, d_ff),
+        w3=(n_experts, d_model, d_ff),
+        w2=(n_experts, d_ff, d_model),
+    )
+
+
+def moe_ffn_grouped(x: jnp.ndarray, p: Dict[str, jnp.ndarray], top_k: int,
+                    capacity_factor: float = 1.25, n_groups: int = 256
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Grouped (GShard-style) dispatch — the §Perf hillclimb variant.
+
+    Tokens are split into ``n_groups`` groups aligned with the data
+    shards; each group owns a PRIVATE capacity slice of every expert, so
+    position computation and the dispatch scatter stay group-local (no
+    cross-shard scatter → XLA lowers the layout change to the canonical
+    MoE all-to-all instead of materializing the full [E,C,d] buffer on
+    every device — see EXPERIMENTS.md §Perf, kimi train_4k).
+
+    x: [B,S,d] -> (y [B,S,d], aux_loss).
+    """
+    b, s, d = x.shape
+    e = p["wg"].shape[1]
+    t = b * s
+    g = min(n_groups, t)
+    while t % g != 0:
+        g //= 2
+    tg = t // g
+    xf = x.reshape(g, tg, d)
+
+    logits = (xf @ p["wg"]).astype(jnp.float32)            # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)             # [G,Tg,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[
+        top_i[..., 0].reshape(-1)].add(1.0) / t
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(1, int(tg * top_k * capacity_factor / e))    # per group
+
+    flat_e = top_i.reshape(g, tg * top_k)                  # [G, Tg*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)    # [G, Tg*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    flat_pos = jnp.take_along_axis(
+        pos, flat_e[..., None], axis=2)[..., 0]            # [G, Tg*k]
+    keep = flat_pos < cap
+    flat_w = top_p.reshape(g, tg * top_k) * keep
+    safe_pos = jnp.where(keep, flat_pos, cap - 1)
+
+    xk = jnp.repeat(xf, top_k, axis=1)                     # [G, Tg*k, d]
+    buf = jnp.zeros((g, e, cap, d), x.dtype)
+    gidx = jnp.arange(g, dtype=jnp.int32)[:, None] * \
+        jnp.ones((1, tg * top_k), jnp.int32)
+    buf = buf.at[gidx, flat_e, safe_pos].add(
+        jnp.where(keep[..., None], xk, 0).astype(x.dtype))
+
+    # expert compute over the group-private capacity slices
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w1"])) * \
+        jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w2"])     # [G,E,C,d]
+
+    gathered = out_buf[gidx, flat_e, safe_pos]             # [G, Tg*k, d]
+    yk = gathered * flat_w[..., None].astype(x.dtype)
+    y = yk.reshape(g, tg, top_k, d).sum(axis=2)
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn(x: jnp.ndarray, p: Dict[str, jnp.ndarray], top_k: int,
+            capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,d] -> (y [B,S,d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e = p["wg"].shape[1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf @ p["wg"]).astype(jnp.float32)            # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)             # [T,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[top_i[:, 0]].add(1.0) / t
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(1, int(t * top_k * capacity_factor / e))
+
+    # position of each (token, slot) within its expert
+    flat_e = top_i.reshape(-1)                             # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)    # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # [T*k, E]
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None],
+                                   axis=1)[:, 0]           # [T*k]
+    keep = flat_pos < cap
+    flat_w = top_p.reshape(-1) * keep                      # dropped -> 0
+
+    # dispatch: buffers [E, C, d]
+    xk = jnp.repeat(xf, top_k, axis=0)                     # [T*k, d]
+    safe_pos = jnp.where(keep, flat_pos, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], xk, 0).astype(x.dtype))
+
+    # expert compute (batched SwiGLU)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"])       # [E,C,d]
+
+    # combine
+    gathered = out_buf[flat_e, safe_pos]                   # [T*k, d]
+    yk = gathered * flat_w[:, None].astype(x.dtype)
+    y = yk.reshape(t, top_k, d).sum(axis=1)
+    return y.reshape(b, s, d), aux

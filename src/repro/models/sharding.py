@@ -1,0 +1,71 @@
+"""Sharding context for model code.
+
+The launcher declares the mesh batch axes once (e.g. ("data",) single-pod,
+("pod", "data") multi-pod); model code then places
+``with_sharding_constraint`` hints through :func:`constrain`.  When no axes
+are declared (CPU smoke tests, single device) constraints are no-ops, so
+the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_batch_axes(axes: Optional[Tuple[str, ...]]) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes) if axes is not None else None
+
+
+def get_batch_axes() -> Optional[Tuple[str, ...]]:
+    return _BATCH_AXES
+
+
+@contextlib.contextmanager
+def batch_axes(axes: Optional[Tuple[str, ...]]):
+    global _BATCH_AXES
+    prev = _BATCH_AXES
+    _BATCH_AXES = tuple(axes) if axes is not None else None
+    try:
+        yield
+    finally:
+        _BATCH_AXES = prev
+
+
+def bspec(*rest) -> P:
+    """PartitionSpec with the batch axes leading: bspec(None, 'model')
+    -> P(('pod','data'), None, 'model') on a multi-pod mesh.  Axis names
+    already consumed by the batch axes are dropped from the tail (the
+    pure-DP mapping folds 'model' into the batch)."""
+    if _BATCH_AXES is None:
+        return P()
+    used = set(_BATCH_AXES)
+
+    def clean(part):
+        if part is None:
+            return None
+        parts = part if isinstance(part, tuple) else (part,)
+        kept = tuple(a for a in parts if a not in used)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    lead = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    return P(lead, *[clean(r) for r in rest])
+
+
+def constrain(x, spec: P):
+    if _BATCH_AXES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch(x, *rest):
+    if _BATCH_AXES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, bspec(*rest))

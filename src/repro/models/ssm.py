@@ -1,0 +1,204 @@
+"""Sequence-mixing recurrences: Mamba-2 SSD (zamba2), xLSTM mLSTM/sLSTM.
+
+The chunked SSD kernel (Dao & Gu, 2024, "minimal SSD") is the shared
+engine: intra-chunk work is dense matmuls (MXU-friendly), inter-chunk state
+is carried by a short ``lax.scan`` over S/chunk steps.  The mLSTM's
+chunkwise-parallel form is SSD with (B=k, C=q, x=i*v, A=log f), so it
+reuses the same kernel; its normalizer runs the same recurrence with P=1.
+
+The sLSTM is sequential by construction (state mixing defeats
+parallelization — the xLSTM paper says as much), so it is a per-token
+``lax.scan``; its per-step cost is a small block-diagonal matmul.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: [..., q] -> [..., q, q] lower-triangular pairwise sums:
+    out[..., i, j] = sum(a[..., j+1 : i+1]) for i >= j, -inf above."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # sum(j+1..i)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                c: jnp.ndarray, chunk: int,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked state-space dual form.
+
+    x: [B,S,H,P]   (already dt-scaled inputs)
+    a: [B,S,H]     log-decay per token (<= 0)
+    b: [B,S,N]     input projection  (shared across heads, 1 group)
+    c: [B,S,N]     output projection
+    returns y: [B,S,H,P], final state [B,H,P,N]
+    """
+    B, S, H, Pd = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, f"S={S} not divisible by chunk={chunk}"
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, Pd)
+    ac = a.reshape(B, nc, chunk, H)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    acs = jnp.cumsum(ac, axis=2)                          # [B,nc,q,H]
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))        # [B,nc,H,q,q]
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        cc, bc, L, xc)
+    # states emitted by each chunk
+    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)       # [B,nc,q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        bc, decay_states, xc)             # [B,nc,H,P,N]
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(acs[:, :, -1, :])               # [B,nc,H]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), x.dtype)
+
+    def step(h, inp):
+        dec, st = inp                                     # [B,H], [B,H,P,N]
+        h_out = h                                         # state BEFORE chunk
+        h = h * dec[:, :, None, None] + st
+        return h, h_out
+
+    hT, h_prev = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (chunk_decay.transpose(1, 0, 2).astype(jnp.float32),
+         states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # [B,nc,H,P,N]
+    # off-diagonal (carried-state) term
+    state_decay = jnp.exp(acs)                            # [B,nc,q,H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       cc, h_prev.astype(x.dtype), state_decay)
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    return y, hT.astype(x.dtype)
+
+
+def ssd_decode_step(h: jnp.ndarray, x_t: jnp.ndarray, a_t: jnp.ndarray,
+                    b_t: jnp.ndarray, c_t: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrence.  h: [B,H,P,N], x_t: [B,H,P], a_t: [B,H],
+    b_t/c_t: [B,N] -> (y_t [B,H,P], h')."""
+    dec = jnp.exp(a_t)[:, :, None, None]
+    h = h * dec + jnp.einsum("bhp,bn->bhpn", x_t, b_t)
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+    return y, h
+
+
+# ---------------------------------------------------------------- mLSTM
+
+
+def mlstm_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  i_gate: jnp.ndarray, f_gate: jnp.ndarray, chunk: int,
+                  state: Optional[Tuple] = None
+                  ) -> Tuple[jnp.ndarray, Tuple]:
+    """Matrix-LSTM in chunkwise-parallel form (xLSTM).
+
+    q/k/v: [B,S,H,hd]; i_gate/f_gate: [B,S,H] (pre-activations).
+    C_t = f C_{t-1} + i v k^T ; n_t = f n_{t-1} + i k ;
+    y = (C q) / max(|n.q|, 1).
+    Maps onto SSD with a = log sigmoid(f), x = i*v, b = k, c = q;
+    the normalizer runs the same recurrence with x = i*1.
+    """
+    B, S, H, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # [B,S,H]
+    i_act = jnp.exp(jnp.minimum(i_gate.astype(jnp.float32), 10.0))
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    # fold heads: b/c must be [B,S,N] per head group -> run per-head via
+    # merging H into the batch axis (SSD supports 1 group; heads here have
+    # distinct k/q so each head is its own group).
+    def fold(t):         # [B,S,H,D] -> [B*H,S,1,D] with H folded in batch
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, 1, t.shape[-1])
+
+    xq = fold(v * i_act[..., None].astype(v.dtype))
+    a = logf.transpose(0, 2, 1).reshape(B * H, S, 1)
+    bmat = fold(k * scale).reshape(B * H, S, hd)
+    cmat = fold(q).reshape(B * H, S, hd)
+    h0 = None if state is None else state[0]
+    y, hT = ssd_chunked(xq, a, bmat, cmat, chunk, h0)
+    # normalizer n_t . q_t via the same recurrence with x = i (P=1)
+    ones = jnp.ones((B * H, S, 1, 1), v.dtype) * \
+        i_act.transpose(0, 2, 1).reshape(B * H, S, 1, 1).astype(v.dtype)
+    n0 = None if state is None else state[1]
+    nrm, nT = ssd_chunked(ones, a, bmat, cmat, chunk, n0)
+    denom = jnp.maximum(jnp.abs(nrm[..., 0]), 1.0)        # [B*H,S,1]
+    y = y[:, :, 0] / denom                                # [B*H,S,hd]
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, (hT, nT)
+
+
+def mlstm_init_state(batch: int, n_heads: int, hd: int, dtype):
+    return (jnp.zeros((batch * n_heads, 1, hd, hd), dtype),
+            jnp.zeros((batch * n_heads, 1, 1, hd), dtype))
+
+
+def mlstm_decode_step(state, q_t, k_t, v_t, i_t, f_t):
+    """One-token mLSTM.  q/k/v: [B,H,hd], gates [B,H].
+    state = (C [B*H,1,hd,hd], n [B*H,1,1,hd]) as from mlstm_init_state."""
+    B, H, hd = q_t.shape
+    C, n = state
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logf = jax.nn.log_sigmoid(f_t.astype(jnp.float32)).reshape(B * H, 1)
+    i_act = jnp.exp(jnp.minimum(i_t.astype(jnp.float32),
+                                10.0)).reshape(B * H)
+    kf = (k_t * scale).reshape(B * H, hd).astype(C.dtype)
+    qf = q_t.reshape(B * H, hd).astype(C.dtype)
+    vf = (v_t.reshape(B * H, hd) * i_act[:, None]).astype(C.dtype)
+    # SSD layout: h [B',1,P,N] with the fused B*H batch and one "head"
+    y, C2 = ssd_decode_step(C, vf[:, None, :], logf, kf, qf)  # [B',1,hd]
+    ones = i_act[:, None, None].astype(C.dtype)               # x=i, P=1
+    nrm, n2 = ssd_decode_step(n, ones, logf, kf, qf)          # [B',1,1]
+    denom = jnp.maximum(jnp.abs(nrm), 1.0)
+    y = (y / denom).reshape(B, H, hd)
+    return y, (C2, n2)
+
+
+# ---------------------------------------------------------------- sLSTM
+
+
+def slstm_scan(x_parts: jnp.ndarray, r_weights: jnp.ndarray,
+               state: Optional[Tuple] = None
+               ) -> Tuple[jnp.ndarray, Tuple]:
+    """Scalar-LSTM with exponential gating + per-head state mixing.
+
+    x_parts: [B,S,4,H,hd] — precomputed W{z,i,f,o} @ x per token.
+    r_weights: [4,H,hd,hd] — recurrent block-diagonal matrices.
+    Sequential scan over S (state mixing is inherently serial).
+    Returns h_seq [B,S,H,hd] and final state (c,n,h,m).
+    """
+    B, S, _, H, hd = x_parts.shape
+    f32 = jnp.float32
+    if state is None:
+        z0 = jnp.zeros((B, H, hd), f32)
+        state = (z0, z0 + 1e-6, z0, z0 - 10.0)            # c, n, h, m
+
+    def step(carry, xt):                                  # xt: [B,4,H,hd]
+        c, n, h, m = carry
+        rz = jnp.einsum("bhd,hde->bhe", h, r_weights[0].astype(f32))
+        ri = jnp.einsum("bhd,hde->bhe", h, r_weights[1].astype(f32))
+        rf = jnp.einsum("bhd,hde->bhe", h, r_weights[2].astype(f32))
+        ro = jnp.einsum("bhd,hde->bhe", h, r_weights[3].astype(f32))
+        zt = jnp.tanh(xt[:, 0].astype(f32) + rz)
+        it = xt[:, 1].astype(f32) + ri
+        ft = xt[:, 2].astype(f32) + rf
+        ot = jax.nn.sigmoid(xt[:, 3].astype(f32) + ro)
+        m2 = jnp.maximum(ft + m, it)                      # stabilizer
+        ip = jnp.exp(it - m2)
+        fp = jnp.exp(ft + m - m2)
+        c2 = fp * c + ip * zt
+        n2 = fp * n + ip
+        h2 = ot * c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, h2, m2), h2
+
+    final, hs = jax.lax.scan(step, state,
+                             x_parts.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), final

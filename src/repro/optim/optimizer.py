@@ -1,0 +1,120 @@
+"""AdamW + schedule + clipping, pytree-native (no optax dependency).
+
+Optimizer state sharding: each moment tensor inherits the parameter's
+PartitionSpec, with the largest still-unsharded axis additionally sharded
+over "data" when divisible (ZeRO-1); master/moment dtype is configurable
+(fp32 default; bf16 "low_mem" for the trillion-parameter configs, and the
+int8 quantized option lives in repro.optim.compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"      # "bfloat16" => low-memory mode
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init(params, cfg: OptConfig) -> OptState:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(z, params),
+                    nu=jax.tree.map(z, params))
+
+
+def schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply(params, grads, state: OptState, cfg: OptConfig
+          ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.betas
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_mu, new_nu), \
+        dict(grad_norm=gnorm, lr=lr)
+
+
+# ---------------------------------------------------------------- sharding
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], data_axis: str = "data",
+               data_size: int = 16) -> P:
+    """ZeRO-1: shard the largest unsharded axis of an optimizer-state
+    tensor over the data axis (if divisible and not already used)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for pt in parts:
+        for ax in (pt if isinstance(pt, tuple) else (pt,)):
+            if ax is not None:
+                used.add(ax)
+    if data_axis in used:
+        return P(*parts)
+    best, best_size = None, 0
+    for i, (pt, sz) in enumerate(zip(parts, shape)):
+        if pt is None and sz % data_size == 0 and sz > best_size:
+            best, best_size = i, sz
+    if best is not None:
+        parts[best] = data_axis
+    return P(*parts)
+
+
+def opt_state_specs(param_specs, param_shapes, data_size: int = 16):
+    """Specs for OptState given the param spec/shape trees."""
+    mu = jax.tree.map(
+        lambda s, shp: zero1_spec(s, shp, data_size=data_size),
+        param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, P))
+    return OptState(step=P(), mu=mu, nu=mu)

@@ -1,0 +1,64 @@
+"""autoshard (beyond-paper): ES over the distributed decision space."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import autoshard
+
+MESH_1POD = {"data": 16, "model": 16}
+MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_decode_decisions_total_space():
+    spec = autoshard.DecisionSpec()
+    assert spec.length == len(autoshard.GENE_UB)
+    g = spec.random_genomes(np.random.default_rng(0), 16)
+    for row in g:
+        d = autoshard.decode_decisions(row)
+        assert d["remat"] in autoshard.REMAT_OPTS
+        assert d["moments"] in autoshard.MOMENT_OPTS
+
+
+def test_es_finds_exhaustive_optimum_dense():
+    cfg = get_config("mistral-nemo-12b")
+    dec, est, res = autoshard.search(cfg, 4096, 256, MESH_1POD,
+                                     budget=2000, seed=0)
+    _, best_t = autoshard.exhaustive_best(cfg, 4096, 256, MESH_1POD)
+    assert dec is not None
+    assert res.best_edp == pytest.approx(best_t, rel=1e-6)
+
+
+def test_kimi_single_pod_infeasible_multi_pod_feasible():
+    """The trillion-parameter config cannot train on one 256-chip pod
+    (16 GB HBM); two pods with int8 moments + ZeRO-1 fit."""
+    cfg = get_config("kimi-k2-1t-a32b")
+    dec1, _ = autoshard.exhaustive_best(cfg, 4096, 256, MESH_1POD)
+    assert dec1 is None
+    dec2, est2, res2 = autoshard.search(cfg, 4096, 256, MESH_2POD,
+                                        budget=2000, seed=0)
+    assert dec2 is not None
+    assert dec2["moments"] in ("int8", "bf16")
+    assert est2.hbm_bytes_per_device < 16e9
+
+
+def test_estimate_monotonic_in_remat():
+    cfg = get_config("command-r-35b")
+    base = dict(remat="none", microbatches=1, logits="vocab",
+                embed="vocab", attn_chunk=0, mlp_shard="megatron",
+                zero1=True, moe_ff="data", kv_seq="model", moments="bf16")
+    e_none = autoshard.estimate(cfg, 4096, 256, MESH_1POD, base)
+    e_full = autoshard.estimate(cfg, 4096, 256, MESH_1POD,
+                                dict(base, remat="full"))
+    assert e_full.t_compute > e_none.t_compute       # recompute costs flops
+    assert e_full.hbm_bytes_per_device < e_none.hbm_bytes_per_device
+
+
+def test_vocab_sharded_logits_beat_gather_on_collectives():
+    cfg = get_config("gemma3-12b")       # 262k vocab: logits dominate
+    base = dict(remat="full", microbatches=1, logits="vocab",
+                embed="vocab", attn_chunk=0, mlp_shard="megatron",
+                zero1=True, moe_ff="data", kv_seq="model", moments="bf16")
+    e_v = autoshard.estimate(cfg, 4096, 256, MESH_1POD, base)
+    e_g = autoshard.estimate(cfg, 4096, 256, MESH_1POD,
+                             dict(base, logits="gather"))
+    assert e_g.t_collective > e_v.t_collective

@@ -1,0 +1,43 @@
+"""Every baseline runs under a small budget and respects the interface."""
+import numpy as np
+import pytest
+
+from repro.core import search
+from repro.core.baselines import METHODS
+from repro.core.workload import spmm
+
+WL = spmm("mm_bl", 32, 64, 48, 0.2, 0.5)
+BUDGET = 400
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_method_contract(method):
+    res = search.run(method, WL, "cloud", budget=BUDGET, seed=0)
+    assert res.evals <= BUDGET
+    assert len(res.history) == res.evals
+    assert (res.history[1:] <= res.history[:-1]).all()  # monotone
+    assert res.valid_evals <= res.evals
+    if np.isfinite(res.best_edp):
+        assert res.best_genome is not None
+        rep = search.report_best(WL, "cloud", res)
+        assert rep is not None and rep.valid
+        assert rep.edp == pytest.approx(res.best_edp, rel=1e-3)
+
+
+def test_same_seed_reproducible():
+    a = search.run("sparsemap", WL, "cloud", budget=300, seed=7)
+    b = search.run("sparsemap", WL, "cloud", budget=300, seed=7)
+    assert a.best_edp == b.best_edp
+
+
+def test_sage_like_cannot_change_mapping():
+    res = search.run("sage_like", WL, "cloud", budget=300, seed=0)
+    if res.best_genome is None:
+        pytest.skip("no valid point at tiny budget")
+    spec, _ = search.get_evaluator(WL, "cloud")
+    from repro.core import accel
+    from repro.core.baselines import fixed_mapping_genes
+    fixed = fixed_mapping_genes(spec, accel.CLOUD.n_pe,
+                                accel.CLOUD.macs_per_pe)
+    for k, v in fixed.items():
+        assert res.best_genome[k] == v

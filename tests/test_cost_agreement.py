@@ -1,0 +1,54 @@
+"""Property test: the JAX batch evaluator agrees with the numpy oracle."""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import accel
+from repro.core.cost_model import evaluate
+from repro.core.encoding import GenomeSpec
+from repro.core.jax_cost import JaxCostModel
+from repro.core.workload import batched_spmm, spconv, spmm
+
+CASES = [
+    spmm("mm_small", 32, 64, 48, 0.2, 0.5),
+    spmm("mm_dense", 124, 124, 124, 0.785, 0.785),
+    spmm("mm_sparse", 128, 1024, 128, 0.006, 0.006),
+    spconv("conv", 64, 32, 32, 256, 1, 1, 0.45, 0.252),
+    batched_spmm("bmm", 4, 16, 32, 16, 0.3, 0.7),
+]
+PLATS = [accel.EDGE, accel.MOBILE, accel.CLOUD]
+
+
+@pytest.mark.parametrize("wl", CASES, ids=[w.name for w in CASES])
+@pytest.mark.parametrize("plat", PLATS, ids=[p.name for p in PLATS])
+def test_agreement(wl, plat):
+    spec = GenomeSpec(wl)
+    jm = JaxCostModel(spec, plat)
+    rng = np.random.default_rng(
+        zlib.crc32(f"{wl.name}:{plat.name}".encode()))
+    G = spec.random_genomes(rng, 400)
+    out = jm(G)
+    n_valid = 0
+    for i, g in enumerate(G):
+        rep = evaluate(spec.decode(g), plat)
+        jv = bool(out["valid"][i])
+        # skip razor-thin capacity margins (float32 vs float64)
+        if rep.valid != jv:
+            margin = min(
+                abs(rep.glb_occupancy_bytes - plat.glb_bytes) /
+                plat.glb_bytes if rep.valid else 1,
+                abs(rep.pebuf_occupancy_bytes - plat.pe_buffer_bytes) /
+                plat.pe_buffer_bytes if rep.valid else 1)
+            assert margin < 5e-3, (
+                f"genome {i}: oracle valid={rep.valid} ({rep.reason}) "
+                f"jax valid={jv}")
+            continue
+        if rep.valid:
+            n_valid += 1
+            lg = np.log10(rep.edp)
+            assert abs(lg - out["log10_edp"][i]) <= 2e-3 * max(abs(lg), 1), \
+                f"genome {i}: edp oracle={rep.edp:.4e} jax log mismatch"
+    # make sure the comparison is not vacuous for at least some cases
+    if wl.name == "mm_small" and plat.name == "cloud":
+        assert n_valid > 0

@@ -1,0 +1,196 @@
+"""Cost-model semantics: loop-nest reuse, sparsity effects, validity."""
+import numpy as np
+import pytest
+
+from repro.core import accel
+from repro.core.cost_model import Design, evaluate, make_tensor_format
+from repro.core.mapping import Mapping, balanced_mapping
+from repro.core.sparse import (FMT_B, FMT_CP, FMT_U, FMT_UOP, SparseStrategy,
+                               TensorFormat, fiber_tree_bytes)
+from repro.core.workload import spmm
+
+
+def tiny_mapping(wl, perm=("M", "N", "K")):
+    """Everything tiled at L1_T (pure DRAM-streaming mapping)."""
+    factors = [dict(wl.dim_sizes)] + [dict() for _ in range(4)]
+    return Mapping(workload=wl, factors=tuple(factors),
+                   perms=tuple(perm for _ in range(5)))
+
+
+def strategy_uncompressed(mapping):
+    wl = mapping.workload
+    fmts = {t.name: make_tensor_format(mapping, t.name, (0, 0, 0, 0, 0))
+            for t in wl.tensors}
+    return SparseStrategy(formats=fmts, sg={"L2": 0, "L3": 0, "C": 0})
+
+
+# ------------------------------------------------------- loop-nest reuse
+def test_fills_output_stationary():
+    """perm (M,N,K): K innermost -> Z written to DRAM exactly once; P
+    refetched once per N iteration."""
+    wl = spmm("t", 4, 2, 4, 1.0, 1.0)
+    mp = tiny_mapping(wl, perm=("M", "N", "K"))
+    assert mp.fills("glb", "Z") == 16                 # |Z| = 4*4
+    assert mp.fills("glb", "P") == 4 * 2 * 4          # P refetched per n
+    assert mp.fills("glb", "Q") == 4 * 2 * 4          # Q refetched per m
+
+
+def test_fills_k_outermost_thrashes_z():
+    """perm (K,M,N): Z tile revisited per K iteration."""
+    wl = spmm("t", 4, 2, 4, 1.0, 1.0)
+    mp = tiny_mapping(wl, perm=("K", "M", "N"))
+    assert mp.fills("glb", "Z") == 2 * 16             # K thrash
+    # P irrelevant to N; N is the innermost loop -> temporal reuse of the
+    # P element across N: fills = K*M = 8
+    assert mp.fills("glb", "P") == 8
+
+
+def test_fills_suffix_reuse_exact():
+    wl = spmm("t", 4, 2, 4, 1.0, 1.0)
+    mp = tiny_mapping(wl, perm=("K", "M", "N"))
+    # P relevant dims (M,K); outer nest = [K:2, M:4, N:4]; innermost N is
+    # irrelevant -> suffix; fills = tile(1) * 2 * 4 = 8
+    assert mp.fills("glb", "P") == 8
+    # Q relevant (K,N): all of K,N relevant, M in middle thrashes
+    # fills = 2 * 4 * 4 = 32
+    assert mp.fills("glb", "Q") == 32
+
+
+def test_spatial_multicast_does_not_multiply():
+    """An irrelevant spatial loop multicasts: no extra upstream traffic."""
+    wl = spmm("t", 4, 2, 4, 1.0, 1.0)
+    factors = [dict(), dict(), {"M": 4}, dict(), dict()]
+    factors[0] = {d: s for d, s in wl.dim_sizes.items()}
+    factors[0]["M"] = 1
+    mp = Mapping(workload=wl, factors=tuple(factors),
+                 perms=tuple(("M", "N", "K") for _ in range(5)))
+    # Q irrelevant to M; M is spatial at L2_S -> GLB reads of Q not scaled
+    # by the M fanout
+    fills_q = mp.fills("pebuf", "Q")
+    assert fills_q == 2 * 4                      # |Q| once
+    # P IS relevant to M (distribution, not multicast), and the temporal
+    # N loop outside K thrashes P: fills = N(4) * K(2) * M3(4) = 32
+    assert mp.fills("pebuf", "P") == 32
+
+
+# ------------------------------------------------------- sparsity
+def test_gate_saves_energy_not_cycles():
+    wl = spmm("t", 16, 16, 16, 0.5, 0.5)
+    mp = balanced_mapping(wl, 256, 4)
+    base = strategy_uncompressed(mp)
+    rep0 = evaluate(Design(mp, base), accel.MOBILE)
+    gated = SparseStrategy(formats=base.formats,
+                           sg={"L2": 0, "L3": 0, "C": 3})   # gate P<->Q
+    rep1 = evaluate(Design(mp, gated), accel.MOBILE)
+    assert rep0.valid and rep1.valid
+    assert rep1.energy_pj < rep0.energy_pj
+    assert rep1.cycles == rep0.cycles
+
+
+def test_skip_saves_energy_and_cycles():
+    wl = spmm("t", 16, 16, 16, 0.5, 0.5)
+    mp = balanced_mapping(wl, 256, 4)
+    base = strategy_uncompressed(mp)
+    # compress Q (leader) on its innermost temporal sub-dim so skip is legal
+    fmts = dict(base.formats)
+    genes = [0, 0, 0, 0, 0]
+    subs = [i for i in range(5)]
+    fmts["Q"] = make_tensor_format(mp, "Q", (0, 0, 0, 1, 1))
+    ok, why = fmts["Q"].valid()
+    assert ok, why
+    skipped = SparseStrategy(formats=fmts, sg={"L2": 0, "L3": 0, "C": 4})
+    rep0 = evaluate(Design(mp, base), accel.MOBILE)
+    rep1 = evaluate(Design(mp, skipped), accel.MOBILE)
+    if not rep1.valid:
+        pytest.skip(f"mapping made skip invalid: {rep1.reason}")
+    assert rep1.energy_pj < rep0.energy_pj
+    assert rep1.compute_cycles < rep0.compute_cycles
+
+
+def test_denser_tensors_cost_more():
+    """With Gate P<->Q at compute, MAC energy scales with dP*dQ."""
+    reps = []
+    for dens in (0.1, 0.5, 1.0):
+        wl = spmm("t", 32, 32, 32, dens, dens)
+        mp = balanced_mapping(wl, 256, 4)
+        st = strategy_uncompressed(mp)
+        st = SparseStrategy(formats=st.formats,
+                            sg={"L2": 0, "L3": 0, "C": 3})
+        rep = evaluate(Design(mp, st), accel.MOBILE)
+        assert rep.valid, rep.reason
+        reps.append(rep.energy_pj)
+    assert reps[0] < reps[1] < reps[2]
+
+
+# ------------------------------------------------------- formats
+def test_bitmask_metadata_is_one_bit_per_position():
+    fmt = TensorFormat("P", (FMT_B,), (64,))
+    data_b, meta_b = fiber_tree_bytes(fmt, density=0.25, word_bytes=2)
+    assert meta_b == 64 / 8
+    assert data_b == 64 * 0.25 * 2
+
+
+def test_uncompressed_has_no_metadata():
+    fmt = TensorFormat("P", (FMT_U, FMT_U), (8, 8))
+    data_b, meta_b = fiber_tree_bytes(fmt, density=0.1)
+    assert meta_b == 0.0
+    assert data_b == 64 * 2
+
+
+def test_uop_needs_partner():
+    assert not TensorFormat("P", (FMT_UOP,), (8,)).valid()[0]
+    assert not TensorFormat("P", (FMT_UOP, FMT_U), (8, 8)).valid()[0]
+    assert TensorFormat("P", (FMT_UOP, FMT_CP), (8, 8)).valid()[0]
+
+
+def test_csr_is_uop_cp():
+    """UOP(dim M) - CP(dim K) == CSR (paper §III.A.2)."""
+    fmt = TensorFormat("P", (FMT_UOP, FMT_CP), (32, 64))
+    d = 0.1
+    data_b, meta_b = fiber_tree_bytes(fmt, density=d)
+    nnz = 32 * 64 * d
+    # CP coords: ~log2(64) bits per nnz; UOP offsets: 33 * log2(2048) bits
+    assert meta_b >= nnz * 6 / 8
+    assert data_b == pytest.approx(nnz * 2)
+
+
+# ------------------------------------------------------- validity
+def test_fanout_overflow_invalid():
+    wl = spmm("t", 64, 64, 64, 1.0, 1.0)
+    factors = [dict(), dict(), {"M": 64, "N": 64}, dict(), {"K": 64}]
+    mp = Mapping(workload=wl, factors=tuple(factors),
+                 perms=tuple(("M", "N", "K") for _ in range(5)))
+    st = strategy_uncompressed(mp)
+    rep = evaluate(Design(mp, st), accel.EDGE)    # 256 PEs, 1 MAC
+    assert not rep.valid
+    assert "fanout" in rep.reason
+
+
+def test_glb_overflow_invalid():
+    wl = spmm("t", 512, 512, 512, 1.0, 1.0)
+    # everything in GLB tile (all factors at L2_T)
+    factors = [dict(), dict(wl.dim_sizes), dict(), dict(), dict()]
+    mp = Mapping(workload=wl, factors=tuple(factors),
+                 perms=tuple(("M", "N", "K") for _ in range(5)))
+    st = strategy_uncompressed(mp)
+    rep = evaluate(Design(mp, st), accel.EDGE)    # 128 KB GLB < 1.5 MB tiles
+    assert not rep.valid
+    assert "GLB overflow" in rep.reason
+
+
+def test_skip_uncompressed_leader_invalid():
+    wl = spmm("t", 16, 16, 16, 0.5, 0.5)
+    mp = balanced_mapping(wl, 256, 4)
+    base = strategy_uncompressed(mp)
+    bad = SparseStrategy(formats=base.formats, sg={"L2": 4, "L3": 0, "C": 0})
+    rep = evaluate(Design(mp, bad), accel.MOBILE)
+    assert not rep.valid
+    assert "uncompressed" in rep.reason
+
+
+def test_edp_is_cycles_times_energy():
+    wl = spmm("t", 16, 16, 16, 0.5, 0.5)
+    mp = balanced_mapping(wl, 256, 4)
+    rep = evaluate(Design(mp, strategy_uncompressed(mp)), accel.MOBILE)
+    assert rep.valid
+    assert rep.edp == pytest.approx(rep.cycles * rep.energy_pj)

@@ -1,0 +1,147 @@
+"""Unit + property tests for the genome encoding (prime factors, cantor)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (GenomeSpec, all_permutations, cantor_decode,
+                                 cantor_encode)
+from repro.core.direct_encoding import DirectValueSpec
+from repro.core.workload import (pad_to_composite, prime_factorize, spmm,
+                                 batched_spmm)
+
+
+# ---------------------------------------------------------------- cantor
+@pytest.mark.parametrize("d", [2, 3, 4])
+def test_cantor_roundtrip(d):
+    for c in range(math.factorial(d)):
+        assert cantor_encode(cantor_decode(c, d)) == c
+
+
+def test_cantor_identity_is_zero():
+    assert cantor_encode((0, 1, 2)) == 0          # MKN == code 0 (paper: 1)
+    assert cantor_decode(0, 3) == (0, 1, 2)
+
+
+def test_cantor_outer_loop_dominates():
+    """Codes sharing the leading element are contiguous — the property that
+    makes local search meaningful (paper Fig. 10)."""
+    perms = all_permutations(3)
+    # first 2 codes start with dim 0, next 2 with dim 1, last 2 with dim 2
+    assert [p[0] for p in perms.tolist()] == [0, 0, 1, 1, 2, 2]
+
+
+# ---------------------------------------------------------------- primes
+@given(st.integers(min_value=1, max_value=10_000))
+def test_prime_factorize(n):
+    fs = prime_factorize(n)
+    prod = 1
+    for p in fs:
+        prod *= p
+    assert prod == n
+    assert fs == sorted(fs)
+
+
+@given(st.integers(min_value=2, max_value=100_000))
+def test_pad_to_composite(n):
+    m = pad_to_composite(n)
+    assert m >= n
+    assert max(prime_factorize(m)) <= 7
+
+
+# ---------------------------------------------------------------- genome
+@st.composite
+def workloads(draw):
+    m = draw(st.integers(min_value=2, max_value=64))
+    k = draw(st.integers(min_value=2, max_value=64))
+    n = draw(st.integers(min_value=2, max_value=64))
+    dp = draw(st.floats(min_value=0.01, max_value=1.0))
+    dq = draw(st.floats(min_value=0.01, max_value=1.0))
+    return spmm(f"mm_{m}x{k}x{n}", m, k, n, dp, dq)
+
+
+@settings(max_examples=25, deadline=None)
+@given(workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_decode_never_raises_and_tiling_constraint_holds(wl, seed):
+    """Prime-factor encoding guarantees the tiling constraint by
+    construction (paper §IV.B)."""
+    spec = GenomeSpec(wl)
+    rng = np.random.default_rng(seed)
+    g = spec.random_genomes(rng, 4)
+    for row in g:
+        design = spec.decode(row)
+        for d in wl.dim_order:
+            prod = 1
+            for lvl in range(5):
+                prod *= design.mapping.factors[lvl].get(d, 1)
+            assert prod == wl.dim_sizes[d]
+
+
+@settings(max_examples=25, deadline=None)
+@given(workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_mapping_encode_decode_roundtrip(wl, seed):
+    spec = GenomeSpec(wl)
+    rng = np.random.default_rng(seed)
+    g = spec.random_genomes(rng, 2)
+    for row in g:
+        mp = spec.decode(row).mapping
+        g2 = spec.encode_mapping(mp)
+        mp2 = spec.decode(g2).mapping
+        assert mp2.factors == mp.factors
+        assert mp2.perms == mp.perms
+
+
+def test_genome_layout_matches_paper_fig13():
+    wl = spmm("mm", 32, 64, 48, 0.2, 0.5)
+    spec = GenomeSpec(wl)
+    assert list(spec.segments) == ["perm", "tiling", "fmt_P", "fmt_Q",
+                                   "fmt_Z", "sg"]
+    assert len(spec.segments["perm"]) == 5
+    assert len(spec.segments["tiling"]) == len(wl.prime_factors)
+    assert len(spec.segments["sg"]) == 3
+    assert spec.gene_ub[spec.segments["perm"].start] == 6      # 3! perms
+    assert spec.gene_ub[spec.segments["sg"].start] == 7        # 7 S/G opts
+
+
+def test_multidim_workload_widens_genome():
+    """Paper §IV.G / Fig. 15: a 4-dim workload gets A_4^4 = 24 perm codes."""
+    wl = batched_spmm("bmm", 4, 8, 8, 8, 0.5, 0.5)
+    spec = GenomeSpec(wl)
+    assert spec.gene_ub[spec.segments["perm"].start] == 24
+    rng = np.random.default_rng(0)
+    for row in spec.random_genomes(rng, 8):
+        spec.decode(row)   # must not raise
+
+
+def test_direct_encoding_mostly_invalid():
+    """The paper's motivation for prime-factor encoding: direct value
+    encoding leaves almost no valid tilings."""
+    wl = spmm("mm", 32, 64, 48, 0.2, 0.5)
+    spec = GenomeSpec(wl)
+    dspec = DirectValueSpec(spec)
+    rng = np.random.default_rng(0)
+    g = dspec.random_genomes(rng, 500)
+    n_ok = sum(dspec.to_canonical(row) is not None for row in g)
+    assert n_ok < 25   # <5% valid even with divisor-based sampling
+
+
+def test_direct_encoding_roundtrip_when_valid():
+    """A hand-built tiling-satisfying direct genome converts and decodes."""
+    wl = spmm("mm", 16, 16, 16, 0.5, 0.5)
+    spec = GenomeSpec(wl)
+    dspec = DirectValueSpec(spec)
+    g = np.zeros(dspec.length, dtype=np.int64)
+    g[dspec.perm_sl] = 0
+    # factors per dim: (4, 4, 1, 1, 1) -> product 16
+    facs = np.array([4, 4, 1, 1, 1] * 3, dtype=np.int64)
+    g[dspec.fact_sl] = facs
+    c = dspec.to_canonical(g)
+    assert c is not None
+    design = spec.decode(c)
+    for d in wl.dim_order:
+        assert design.mapping.factors[0].get(d, 1) == 4
+        assert design.mapping.factors[1].get(d, 1) == 4
+    # violating the product constraint -> None
+    g[dspec.fact_sl.start] = 2
+    assert dspec.to_canonical(g) is None

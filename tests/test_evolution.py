@@ -1,0 +1,118 @@
+"""ES engine tests: sensitivity, HSHI, operators, end-to-end improvement."""
+import numpy as np
+import pytest
+
+from repro.core import accel, search
+from repro.core.encoding import GenomeSpec
+from repro.core.evolution import (ESConfig, annealing_p_high, crossover,
+                                  evolve, lhs_init, mutate)
+from repro.core.jax_cost import JaxCostModel
+from repro.core.sensitivity import calibrate
+from repro.core.workload import spmm
+
+WL = spmm("mm_es", 32, 64, 48, 0.2, 0.5)
+
+
+@pytest.fixture(scope="module")
+def env():
+    spec, ev = search.get_evaluator(WL, "cloud")
+    return spec, ev
+
+
+def test_annealing_schedule():
+    """Eq. (6): P_h decreasing over generations, 0.8 at g=0, 0 at g=G."""
+    vals = [annealing_p_high(g, 100) for g in range(0, 101, 10)]
+    assert vals[0] == pytest.approx(0.8)
+    assert vals[-1] == pytest.approx(0.0)
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_sensitivity_calibration(env):
+    spec, ev = env
+    rng = np.random.default_rng(0)
+    sens = calibrate(spec, ev, rng, n_contexts=3, n_samples=8)
+    assert sens.scores.shape == (spec.length,)
+    assert sens.high_mask.any()
+    assert not sens.high_mask.all()
+    assert (sens.scores >= 0).all()
+    # threshold is the 3/4-range rule
+    smax, smin = sens.scores.max(), sens.scores.min()
+    assert sens.threshold == pytest.approx(0.75 * (smax - smin) + smin)
+
+
+def test_high_segments_contiguous(env):
+    spec, ev = env
+    rng = np.random.default_rng(0)
+    sens = calibrate(spec, ev, rng, n_contexts=2, n_samples=6)
+    for a, b in sens.high_segments():
+        assert b > a
+        assert sens.high_mask[a:b].all()
+
+
+def test_crossover_respects_high_segments(env):
+    spec, ev = env
+    rng = np.random.default_rng(0)
+    sens = calibrate(spec, ev, rng, n_contexts=2, n_samples=6)
+    parents = np.stack([np.zeros(spec.length, dtype=np.int64),
+                        np.ones(spec.length, dtype=np.int64)])
+    kids = crossover(parents, 64, spec, rng, sens)
+    # no kid may switch parent INSIDE a high-sensitivity segment
+    for kid in kids:
+        for a, b in sens.high_segments():
+            seg = kid[a:b]
+            assert (seg == seg[0]).all(), "high-sens segment fragmented"
+
+
+def test_mutation_stays_in_range(env):
+    spec, ev = env
+    rng = np.random.default_rng(0)
+    g = spec.random_genomes(rng, 32)
+    m = mutate(g, spec, rng, p_mut=1.0, genes_per=4, sens=None, p_high=0.5)
+    assert (m >= 0).all() and (m < spec.gene_ub[None, :]).all()
+    assert (m != g).any()
+
+
+def test_lhs_init_covers_strata(env):
+    spec, ev = env
+    rng = np.random.default_rng(0)
+    pop = lhs_init(spec, rng, 50)
+    assert pop.shape == (50, spec.length)
+    assert (pop >= 0).all() and (pop < spec.gene_ub[None, :]).all()
+    # stratification: perm gene should hit most of its 6 values
+    pg = pop[:, spec.segments["perm"].start]
+    assert len(np.unique(pg)) >= 5
+
+
+def test_sparsemap_beats_random_and_finds_valid(env):
+    spec, ev = env
+    res = evolve(spec, ev, ESConfig(budget=2500, seed=0))
+    assert np.isfinite(res.best_edp)
+    assert res.valid_evals > 0
+    assert res.evals <= 2500
+    assert len(res.history) == res.evals
+    # best-so-far curve is monotonically non-increasing
+    assert (res.history[1:] <= res.history[:-1]).all()
+    # better than pure random sampling at the same budget
+    rnd = search.run("random_mapper", WL, "cloud", budget=2500, seed=0)
+    assert res.best_edp <= rnd.best_edp * 5     # same order or better
+
+
+def test_fixed_genes_respected(env):
+    spec, ev = env
+    sg = spec.segments["sg"]
+    fixed = {sg.start: 0, sg.start + 1: 0, sg.start + 2: 3}
+    res = evolve(spec, ev, ESConfig(budget=600, seed=1, use_hshi=False,
+                                    use_custom_ops=False),
+                 fixed_genes=fixed)
+    if res.best_genome is not None:
+        for k, v in fixed.items():
+            assert res.best_genome[k] == v
+
+
+def test_seeds_injected(env):
+    spec, ev = env
+    seed_g = spec.random_genomes(np.random.default_rng(5), 1)
+    res = evolve(spec, ev, ESConfig(budget=300, seed=2, use_hshi=False,
+                                    use_custom_ops=False),
+                 seeds=seed_g)
+    assert res.evals <= 300

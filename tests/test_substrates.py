@@ -1,0 +1,171 @@
+"""Substrate tests: data pipeline determinism, checkpoint/restore,
+supervisor crash recovery, straggler monitor, gradient compression math,
+and the multi-device selftest (subprocess with forced host devices)."""
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import smoke_config
+from repro.configs.shapes import ShapeSpec
+from repro.data.pipeline import DataConfig, SyntheticLM, make_data
+from repro.optim.compression import (dequantize_int8, init_error_feedback,
+                                     quantize_int8, topk_ef_step,
+                                     topk_sparsify)
+from repro.runtime.fault_tolerance import (ElasticPlan, StepMonitor,
+                                           Supervisor)
+
+
+# --------------------------------------------------------------- data
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8)
+    d = SyntheticLM(cfg)
+    a = d.batch_at(17)
+    b = d.batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch_at(18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8)
+    d = SyntheticLM(cfg)
+    s0 = d.batch_at(5, shard=(0, 4))
+    s1 = d.batch_at(5, shard=(1, 4))
+    assert s0["tokens"].shape == (2, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_data_token_range():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4)
+    d = SyntheticLM(cfg)
+    b = d.batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_make_data_matches_arch():
+    mc = smoke_config("qwen2-vl-7b")
+    sh = ShapeSpec("t", 64, 4, "train")
+    d = make_data(mc, sh)
+    b = d.batch_at(0)
+    assert "frontend" in b
+    assert b["frontend"].shape == (4, mc.n_frontend_tokens, mc.d_model)
+    assert b["tokens"].shape[1] == 64 - mc.n_frontend_tokens
+
+
+# --------------------------------------------------------------- ckpt
+def test_checkpoint_roundtrip_and_prune():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, tree, keep_last=2)
+        assert ckpt.latest_step(d) == 5
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(steps) == 2          # pruned
+        restored = ckpt.restore(d, 5, tree)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.ones((3, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 0, tree)
+        bad = {"a": jnp.ones((4, 4))}
+        with pytest.raises(ValueError):
+            ckpt.restore(d, 0, bad)
+
+
+# --------------------------------------------------------------- FT
+def test_supervisor_recovers_from_crash():
+    with tempfile.TemporaryDirectory() as d:
+        crashed = {"done": False}
+
+        def step_fn(state, step):
+            if step == 7 and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("injected node failure")
+            return {"x": state["x"] + 1.0}
+
+        sup = Supervisor(d, ckpt_every=3, max_restarts=2)
+        state, report = sup.run({"x": jnp.float32(0)}, step_fn, 10)
+        assert report["restarts"] == 1
+        assert float(state["x"]) == 10.0     # every step applied once
+
+
+def test_supervisor_gives_up():
+    with tempfile.TemporaryDirectory() as d:
+        def step_fn(state, step):
+            raise RuntimeError("permafail")
+        sup = Supervisor(d, ckpt_every=1, max_restarts=2)
+        with pytest.raises(RuntimeError):
+            sup.run({"x": jnp.float32(0)}, step_fn, 3)
+
+
+def test_straggler_monitor():
+    m = StepMonitor(warmup_steps=2, straggler_factor=2.0)
+    flags = [m.observe(i, 0.1) for i in range(5)]
+    assert not any(flags)
+    assert m.observe(5, 0.5)            # 5x slower -> straggler
+    assert m.straggler_rate > 0
+
+
+def test_elastic_plan():
+    p = ElasticPlan.plan(n_devices=256, model_parallel=16)
+    assert p.data_parallel == 16
+    p2 = ElasticPlan.plan(n_devices=240, model_parallel=16)
+    assert p2.data_parallel == 15       # shrink tolerated
+    with pytest.raises(RuntimeError):
+        ElasticPlan.plan(n_devices=8, model_parallel=16)
+    assert p.host_shard(3) == (3, 16)
+
+
+# --------------------------------------------------------------- comp
+def test_int8_quantize_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((128,)) * 3, jnp.float32)
+    q, s = quantize_int8(x)
+    y = dequantize_int8(q, s)
+    assert float(jnp.abs(y - x).max()) <= float(s) * 0.51
+
+
+def test_topk_error_feedback_preserves_mass():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    ef = init_error_feedback(g)
+    total_sent = jnp.zeros_like(g["w"])
+    for _ in range(50):
+        comp, ef = topk_ef_step(g, ef, frac=0.05)
+        total_sent = total_sent + comp["w"]
+    # with a CONSTANT gradient, sent mass converges to ~n * g
+    np.testing.assert_allclose(np.asarray(total_sent) / 50,
+                               np.asarray(g["w"]), atol=0.35)
+
+
+def test_topk_sparsity_level():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1000,)),
+                    jnp.float32)
+    sx, mask = topk_sparsify(x, 0.01)
+    assert 5 <= int(mask.sum()) <= 20
+
+
+# --------------------------------------------------------------- multi-dev
+def test_multidevice_selftest_subprocess():
+    """pipeline PP + compressed psum + sharded-vs-single train step +
+    elastic restore, on 8 forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.selftest"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "SELFTEST OK" in r.stdout, r.stdout + "\n" + r.stderr

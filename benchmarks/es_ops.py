@@ -1,0 +1,178 @@
+"""ES operator micro-benchmark + MultiSearch compilation-sharing check.
+
+Two benchmarks backing the vectorized-engine claims:
+
+* ``bench_operators`` — throughput (individuals/s) of the vectorized
+  ``mutate`` + ``crossover`` (and HSHI round sampling / best-so-far
+  tracking) vs the seed per-individual Python loops, at the paper's
+  pop_size=100 on a paper workload genome.
+* ``bench_multisearch`` — a 2-workload sweep through ``MultiSearch``
+  must perform FEWER XLA compilations than sequential ``search.run``
+  calls (signature alignment) while matching their best-EDP results.
+
+    PYTHONPATH=src python -m benchmarks.es_ops
+    PYTHONPATH=src python -m benchmarks.run --only es_ops,multisearch
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+
+# ---------------------------------------------------- seed reference ops
+
+
+def _ref_mutate(genomes, spec, rng, p_mut, genes_per, sens, p_high):
+    out = genomes.copy()
+    L = spec.length
+    for i in range(len(out)):
+        if rng.random() >= p_mut:
+            continue
+        if sens is not None:
+            seg = sens.high_indices if rng.random() < p_high \
+                else sens.low_indices
+            if len(seg) == 0:
+                seg = np.arange(L)
+        else:
+            seg = np.arange(L)
+        for _ in range(genes_per):
+            g = int(seg[rng.integers(0, len(seg))])
+            out[i, g] = rng.integers(0, spec.gene_ub[g])
+    return out
+
+
+def _ref_crossover(parents, n_children, spec, rng, sens):
+    L = spec.length
+    if sens is not None:
+        pts = {0, L}
+        for a, b in sens.high_segments():
+            pts.add(a)
+            pts.add(b)
+        cut_points = sorted(pts - {0, L}) or [L // 2]
+    else:
+        cut_points = list(range(1, L))
+    kids = np.empty((n_children, L), dtype=parents.dtype)
+    for i in range(n_children):
+        a, b = rng.integers(0, len(parents), 2)
+        cut = cut_points[rng.integers(0, len(cut_points))]
+        kids[i, :cut] = parents[a, :cut]
+        kids[i, cut:] = parents[b, cut:]
+    return kids
+
+
+def _time(fn, min_seconds: float = 0.4) -> float:
+    """Calls/second of fn()."""
+    fn()                                    # warmup
+    n = 0
+    t0 = time.perf_counter()
+    while True:
+        fn()
+        n += 1
+        dt = time.perf_counter() - t0
+        if dt >= min_seconds:
+            return n / dt
+
+
+def bench_operators(pop_size: int = 100, workload_name: str = "mm3"
+                    ) -> Dict[str, float]:
+    from repro.configs.paper_workloads import by_name
+    from repro.core.encoding import GenomeSpec
+    from repro.core.evolution import crossover, mutate
+    from repro.core.sensitivity import SensitivityResult
+
+    wl = by_name(workload_name)
+    spec = GenomeSpec(wl)
+    high = np.zeros(spec.length, dtype=bool)
+    high[spec.segments["perm"].slice] = True
+    high[spec.segments["sg"].slice] = True
+    sens = SensitivityResult(
+        scores=high.astype(np.float64), high_mask=high,
+        valid_pool=spec.random_genomes(np.random.default_rng(0), 64),
+        threshold=0.75, evals_used=0)
+
+    rng = np.random.default_rng(1)
+    pop = spec.random_genomes(rng, pop_size)
+    parents = pop[:40]
+
+    def vec_pair():
+        kids = crossover(parents, pop_size, spec, rng, sens)
+        mutate(kids, spec, rng, 0.9, 2, sens, 0.5)
+
+    def ref_pair():
+        kids = _ref_crossover(parents, pop_size, spec, rng, sens)
+        _ref_mutate(kids, spec, rng, 0.9, 2, sens, 0.5)
+
+    vec_cps = _time(vec_pair)
+    ref_cps = _time(ref_pair)
+    out = dict(
+        workload=workload_name, pop_size=pop_size, genome_len=spec.length,
+        vectorized_pairs_per_s=vec_cps * pop_size,
+        reference_pairs_per_s=ref_cps * pop_size,
+        speedup=vec_cps / ref_cps)
+
+    # individual operators, for the breakdown
+    out["mutate_speedup"] = (
+        _time(lambda: mutate(pop, spec, rng, 0.9, 2, sens, 0.5)) /
+        _time(lambda: _ref_mutate(pop, spec, rng, 0.9, 2, sens, 0.5)))
+    out["crossover_speedup"] = (
+        _time(lambda: crossover(parents, pop_size, spec, rng, sens)) /
+        _time(lambda: _ref_crossover(parents, pop_size, spec, rng, sens)))
+    return out
+
+
+def bench_multisearch(budget: int = 1000, seed: int = 0
+                      ) -> Dict[str, float]:
+    from repro.configs.paper_workloads import by_name
+    from repro.core import jax_cost, search
+
+    # mm1 (prime bucket 16) and mm4 (bucket 32): two natural signatures
+    wls = [by_name("mm1"), by_name("mm4")]
+
+    search.clear_cache()
+    t0 = time.perf_counter()
+    seq = {w.name: search.run("sparsemap", w, "cloud", budget=budget,
+                              seed=seed) for w in wls}
+    seq_s = time.perf_counter() - t0
+    seq_compiles = jax_cost.compilation_count()
+
+    search.clear_cache()
+    t0 = time.perf_counter()
+    ms = search.MultiSearch(
+        [search.SearchTask(w, "cloud", budget=budget, seed=seed)
+         for w in wls])
+    multi = ms.run()
+    multi_s = time.perf_counter() - t0
+    multi_compiles = jax_cost.compilation_count()
+
+    match = all(
+        (not np.isfinite(seq[w.name].best_edp)) or
+        abs(np.log10(multi[f"{w.name}@cloud"].best_edp) -
+            np.log10(seq[w.name].best_edp)) < 1e-3
+        for w in wls)
+    return dict(
+        budget=budget, seq_compiles=seq_compiles,
+        multi_compiles=multi_compiles, seq_seconds=seq_s,
+        multi_seconds=multi_s, edp_match=match,
+        signatures=ms.stats["signatures"],
+        natural_signatures=ms.stats["natural_signatures"])
+
+
+def main() -> None:
+    ops = bench_operators()
+    print(f"es_ops: pop={ops['pop_size']} L={ops['genome_len']} "
+          f"({ops['workload']}) — mutate {ops['mutate_speedup']:.1f}x, "
+          f"crossover {ops['crossover_speedup']:.1f}x, "
+          f"mutate+crossover {ops['speedup']:.1f}x "
+          f"({ops['vectorized_pairs_per_s']:.3g} vs "
+          f"{ops['reference_pairs_per_s']:.3g} individuals/s)")
+    ms = bench_multisearch()
+    print(f"multisearch: compiles {ms['multi_compiles']} vs sequential "
+          f"{ms['seq_compiles']}, signatures {ms['signatures']} vs "
+          f"{ms['natural_signatures']}, edp_match={ms['edp_match']}, "
+          f"{ms['multi_seconds']:.1f}s vs {ms['seq_seconds']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,7 @@ def main(argv=None) -> None:
                     help="paper-scale budgets (20k evals/workload)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig7,fig17,fig18,"
-                         "table_iv,roofline,arch_dse")
+                         "table_iv,roofline,arch_dse,es_ops,multisearch")
     args = ap.parse_args(argv)
 
     budget = args.budget or (300 if args.quick else
@@ -35,6 +35,23 @@ def main(argv=None) -> None:
         return only is None or name in only
 
     print("name,seconds,derived")
+
+    if want("es_ops"):
+        from benchmarks import es_ops
+        t0 = time.time()
+        ops = es_ops.bench_operators(pop_size=100)
+        print(f"es_ops,{time.time()-t0:.1f},"
+              f"mutate_speedup={ops['mutate_speedup']:.1f}x;"
+              f"crossover_speedup={ops['crossover_speedup']:.1f}x;"
+              f"combined_speedup={ops['speedup']:.1f}x")
+
+    if want("multisearch"):
+        from benchmarks import es_ops
+        t0 = time.time()
+        ms = es_ops.bench_multisearch(budget=min(budget, 2000))
+        print(f"multisearch,{time.time()-t0:.1f},"
+              f"compiles={ms['multi_compiles']}_vs_seq_"
+              f"{ms['seq_compiles']};edp_match={ms['edp_match']}")
 
     if want("fig2"):
         t0 = time.time()

@@ -5,6 +5,8 @@ Public entry points:
     repro.core.workload   — SpMM/SpConv workload definitions (Table III)
     repro.core.accel      — platform models (Table II) + TPU constants
     repro.core.search     — run("sparsemap"| baselines, workload, platform)
+                            + MultiSearch / run_sweep for concurrent
+                            multi-workload searches on shared compilations
     repro.core.evolution  — the ES engine (HSHI, annealing mutation, SAC)
     repro.core.autoshard  — beyond-paper: the same ES over the distributed
                             sharding space of this framework
@@ -14,4 +16,5 @@ from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
 from .evolution import ESConfig, SearchResult, evolve
 from .jax_cost import JaxCostModel
+from .search import MultiSearch, SearchTask, run_sweep
 from .workload import Workload, batched_spmm, spconv, spmm

@@ -281,9 +281,11 @@ def ppo(spec: GenomeSpec, batch_eval, budget: int, seed: int,
     while not tracker.exhausted:
         n = min(batch, budget - tracker.evals)
         pi = softmax(logits)                       # (L, V)
-        g = np.empty((n, L), dtype=np.int64)
-        for j in range(L):
-            g[:, j] = rng.choice(maxv, size=n, p=pi[j])
+        # vectorized inverse-CDF sampling: one uniform matrix, all genes
+        cdf = np.cumsum(pi, axis=-1)               # (L, V)
+        u = rng.random((n, L))
+        g = (u[:, :, None] > cdf[None, :, :]).sum(axis=-1)
+        g = np.minimum(g, spec.gene_ub[None, :] - 1).astype(np.int64)
         edp = tracker.register(g, batch_eval(g))
         rew = np.where(np.isfinite(edp), 0.0, -1.0)
         ok = np.isfinite(edp)
@@ -332,13 +334,13 @@ def dqn(spec: GenomeSpec, batch_eval, budget: int, seed: int,
     while not tracker.exhausted:
         eps = eps_start + (eps_end - eps_start) * min(step / total_steps, 1)
         n = min(batch, budget - tracker.evals)
-        g = np.empty((n, L), dtype=np.int64)
-        for i in range(n):
-            for j in range(L):
-                if rng.random() < eps:
-                    g[i, j] = rng.integers(0, spec.gene_ub[j])
-                else:
-                    g[i, j] = int(np.argmax(q[j, :spec.gene_ub[j]]))
+        # vectorized epsilon-greedy: out-of-range q is -1e9, so the full-
+        # row argmax is the masked argmax
+        explore = rng.random((n, L)) < eps
+        rand_vals = rng.integers(0, spec.gene_ub, size=(n, L),
+                                 dtype=np.int64)
+        greedy = np.argmax(q, axis=1).astype(np.int64)
+        g = np.where(explore, rand_vals, greedy[None, :])
         edp = tracker.register(g, batch_eval(g))
         rew = np.where(np.isfinite(edp), 0.0, -1.0)
         ok = np.isfinite(edp)
@@ -355,10 +357,13 @@ def dqn(spec: GenomeSpec, batch_eval, budget: int, seed: int,
 # ---------------------------------------------------------------- registry
 
 
-def sparsemap(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-              platform=None, **kw) -> SearchResult:
-    # scale population with the budget so calibration + HSHI never starve
-    # the evolutionary phase at CI-scale budgets
+def sparsemap_setup(spec: GenomeSpec, platform, budget: int, seed: int,
+                    **kw) -> Tuple[ESConfig, Optional[np.ndarray]]:
+    """Shared SparseMap search setup: the ESConfig (population scaled with
+    the budget so calibration + HSHI never starve the evolutionary phase
+    at CI-scale budgets) and the engineer-default seed genomes.  Used by
+    both :func:`sparsemap` and ``search.MultiSearch`` so single and
+    concurrent searches are configured identically."""
     if "pop_size" not in kw:
         kw["pop_size"] = int(min(100, max(24, budget // 20)))
     cfg = ESConfig(budget=budget, seed=seed, **kw)
@@ -377,6 +382,12 @@ def sparsemap(spec: GenomeSpec, batch_eval, budget: int, seed: int,
         for k, v in manual_sparse_genes(spec).items():
             g1[k] = v
         seeds = np.stack([g0, g1])
+    return cfg, seeds
+
+
+def sparsemap(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+              platform=None, **kw) -> SearchResult:
+    cfg, seeds = sparsemap_setup(spec, platform, budget, seed, **kw)
     return evolve(spec, batch_eval, cfg, seeds=seeds)
 
 

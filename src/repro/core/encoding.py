@@ -115,6 +115,8 @@ class GenomeSpec:
             ub[self.segments[f"fmt_{tn}"].slice] = 5
         ub[self.segments["sg"].slice] = N_SG
         self.gene_ub = ub
+        self._gene_ub_minus1 = ub - 1
+        self._gene_ub_f64 = ub.astype(np.float64)[None, :]
         self._perm_table = all_permutations(self.d)
 
     # ------------------------------------------------------------ decode
@@ -174,11 +176,16 @@ class GenomeSpec:
 
     # ------------------------------------------------------------ sampling
     def random_genomes(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """One vectorized draw for the whole (n, L) population.  The
+        multiply-and-floor formulation consumes exactly n*L uniforms, so
+        seeded streams stay reproducible across code paths."""
         return (rng.random((n, self.length)) *
-                self.gene_ub[None, :]).astype(np.int64)
+                self._gene_ub_f64).astype(np.int64)
 
     def clip(self, genomes: np.ndarray) -> np.ndarray:
-        return np.clip(genomes, 0, self.gene_ub[None, :] - 1)
+        """Clamp genes into range.  Always returns a fresh array (callers
+        mutate the result in place); the bound array is precomputed."""
+        return np.clip(genomes, 0, self._gene_ub_minus1[None, :])
 
     # segment boundaries, used by sensitivity-aware crossover
     def segment_bounds(self) -> List[int]:

@@ -16,17 +16,27 @@ Components:
 
 `evolve` also implements the ablation variants of Fig. 18: standard ES with
 LHS init, uniform crossover/mutation (``use_hshi=False, use_custom_ops=False``).
+
+Every operator is array-at-once: mutation draws its gene indices and
+replacement values as (pop, genes_per) matrices, crossover assembles all
+children with one ``np.where`` over an index grid, HSHI samples one
+(n_cubes, L) candidate matrix per round, and best-so-far tracking uses
+``np.minimum.accumulate``.  The engine itself is a *generator*
+(:func:`evolve_requests`): it yields genome batches and receives evaluation
+dicts, so a driver — :func:`evolve` for a single search, or
+``repro.core.search.MultiSearch`` for a fleet — decides when and on which
+evaluator each batch runs.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, Generator, List, Optional
 
 import numpy as np
 
 from .encoding import GenomeSpec
-from .sensitivity import SensitivityResult, calibrate
+from .sensitivity import SensitivityResult, build_probes, score_probes
 
 
 @dataclasses.dataclass
@@ -83,13 +93,16 @@ class _Budget:
         valid = np.asarray(out["valid"])[:n]
         edp = np.asarray(out["edp"], dtype=np.float64)[:n].copy()
         edp[~valid] = np.inf
-        for i in range(n):
-            if edp[i] < self.best:
+        if n > 0:
+            # best-so-far curve over the batch, continuing self.best
+            curve = np.minimum(np.minimum.accumulate(edp), self.best)
+            if curve[-1] < self.best:
+                i = int(np.argmin(edp))     # first index achieving the min
                 self.best = float(edp[i])
                 self.best_genome = genomes[i].copy()
-            self.hist.append(self.best)
-        self.evals += n
-        self.valid += int(valid.sum())
+            self.hist.extend(curve.tolist())
+            self.evals += n
+            self.valid += int(valid.sum())
         full = np.full(len(genomes), np.inf)
         full[:n] = edp
         return full
@@ -99,14 +112,34 @@ class _Budget:
         return self.evals >= self.budget
 
 
+# The generator engine yields (B, L) genome batches and is sent back the
+# evaluator's output dict for that batch.
+Requests = Generator[np.ndarray, Dict, Dict]
+
+
+def _drive(gen: Requests, batch_eval):
+    """Run a request generator to completion against one evaluator and
+    return its StopIteration value verbatim."""
+    try:
+        req = next(gen)
+        while True:
+            req = gen.send(batch_eval(req))
+    except StopIteration as stop:
+        return stop.value
+
+
 # ---------------------------------------------------------------- HSHI
 
 
-def hshi_init(spec: GenomeSpec, batch_eval, sens: SensitivityResult,
-              rng: np.random.Generator, pop_size: int,
-              n_cubes: Optional[int], cube_budget: int,
-              tracker: _Budget) -> np.ndarray:
-    """High-sensitivity hypercube initialization (Fig. 11)."""
+def _hshi_requests(spec: GenomeSpec, sens: SensitivityResult,
+                   rng: np.random.Generator, pop_size: int,
+                   n_cubes: Optional[int], cube_budget: int,
+                   tracker: _Budget) -> Requests:
+    """High-sensitivity hypercube initialization (Fig. 11), vectorized:
+    each round draws ONE (n_cubes, L) candidate matrix — low-sensitivity
+    genes seeded from the calibration valid pool with a single masked
+    gather, cube constraints applied as per-cube [low, high) windows on
+    the high-sensitivity columns."""
     L = spec.length
     ub = spec.gene_ub
     n_cubes = n_cubes or pop_size
@@ -117,75 +150,82 @@ def hshi_init(spec: GenomeSpec, batch_eval, sens: SensitivityResult,
     bins = np.ones(L, dtype=np.int64)
     if H > 0:
         per = max(1, int(round(n_cubes ** (1.0 / H))))
-        for g in hi:
-            bins[g] = min(per, ub[g])
+        bins[hi] = np.minimum(per, ub[hi])
 
-    def sample_in_cube(cube_coords: Dict[int, int], n: int) -> np.ndarray:
-        g = spec.random_genomes(rng, n)
-        # low-sensitivity genes: seed from the calibration valid pool
-        if len(sens.valid_pool) > 0:
-            take = rng.random(n) < 0.5
-            rows = rng.integers(0, len(sens.valid_pool), n)
-            low = sens.low_indices
-            for i in range(n):
-                if take[i]:
-                    g[i, low] = sens.valid_pool[rows[i], low]
-        for gene, b in cube_coords.items():
-            lowv = (ub[gene] * b) // bins[gene]
-            highv = max(lowv + 1, (ub[gene] * (b + 1)) // bins[gene])
-            g[:, gene] = lowv + (rng.random(n) *
-                                 (highv - lowv)).astype(np.int64)
-        return spec.clip(g)
+    n_list = max(n_cubes, pop_size)
+    # mixed-radix cube coordinates for every cube: (n_list, H)
+    total = int(np.prod(bins[hi])) if H else 1
+    cc = np.arange(n_list, dtype=np.int64) % max(total, 1)
+    coords = np.empty((n_list, H), dtype=np.int64)
+    for j, g in enumerate(hi):
+        coords[:, j] = cc % bins[g]
+        cc //= bins[g]
+    if H:
+        lowv = (ub[hi][None, :] * coords) // bins[hi][None, :]
+        highv = np.maximum(
+            lowv + 1, (ub[hi][None, :] * (coords + 1)) // bins[hi][None, :])
 
-    # enumerate cube coordinates (mixed radix over high-sens genes)
-    pop: List[np.ndarray] = []
-    cube_list: List[Dict[int, int]] = []
-    total = int(np.prod([bins[g] for g in hi])) if H else 1
-    for c in range(max(n_cubes, pop_size)):
-        coords = {}
-        cc = c % max(total, 1)
-        for g in hi:
-            coords[g] = cc % bins[g]
-            cc //= bins[g]
-        cube_list.append(coords)
+    low_mask = np.zeros(L, dtype=bool)
+    low_mask[sens.low_indices] = True
+    pool = sens.valid_pool
 
-    # batched cube search: each round evaluates one candidate per cube
-    # (constant batch size, so jit compiles a single shape)
-    found: Dict[int, np.ndarray] = {}
-    found_edp: Dict[int, float] = {}
-    fallback: Dict[int, np.ndarray] = {}
+    found = np.zeros((n_list, L), dtype=np.int64)
+    found_edp = np.full(n_list, np.inf)
+    has_found = np.zeros(n_list, dtype=bool)
+    fallback: Optional[np.ndarray] = None
+
     for _ in range(cube_budget):
-        if len(found) == len(cube_list) or tracker.exhausted:
+        if has_found.all() or tracker.exhausted:
             break
-        cands = np.concatenate(
-            [sample_in_cube(c, 1) for c in cube_list], axis=0)
-        out = batch_eval(cands)
-        edp = tracker.register(cands, out)
-        for j in range(len(cube_list)):
-            fallback[j] = cands[j]
-            if np.isfinite(edp[j]) and edp[j] < found_edp.get(j, np.inf):
-                found[j] = cands[j]
-                found_edp[j] = float(edp[j])
+        g = spec.random_genomes(rng, n_list)
+        # low-sensitivity genes: seed from the calibration valid pool
+        if len(pool) > 0:
+            take = rng.random(n_list) < 0.5
+            rows = rng.integers(0, len(pool), n_list)
+            g = np.where(take[:, None] & low_mask[None, :],
+                         pool[rows], g)
+        if H:
+            g[:, hi] = lowv + (rng.random((n_list, H)) *
+                               (highv - lowv)).astype(np.int64)
+        cands = spec.clip(g)
+        out = yield cands
+        edp = tracker.register(cands, out)[:n_list]
+        fallback = cands
+        better = np.isfinite(edp) & (edp < found_edp)
+        found_edp = np.where(better, edp, found_edp)
+        found = np.where(better[:, None], cands, found)
+        has_found |= better
 
-    for c in range(len(cube_list)):
-        pop.append(found.get(c, fallback.get(
-            c, spec.random_genomes(rng, 1)[0])))
-        if len(pop) >= pop_size:
-            break
-    while len(pop) < pop_size:
-        pop.append(spec.random_genomes(rng, 1)[0])
-    return np.stack(pop[:pop_size])
+    pop = np.where(has_found[:, None], found,
+                   fallback if fallback is not None
+                   else spec.random_genomes(rng, n_list))
+    if len(pop) < pop_size:     # unreachable (n_list >= pop_size); safety
+        pop = np.concatenate(
+            [pop, spec.random_genomes(rng, pop_size - len(pop))], axis=0)
+    return pop[:pop_size]
+
+
+def hshi_init(spec: GenomeSpec, batch_eval, sens: SensitivityResult,
+              rng: np.random.Generator, pop_size: int,
+              n_cubes: Optional[int], cube_budget: int,
+              tracker: _Budget) -> np.ndarray:
+    """Drive :func:`_hshi_requests` against a single evaluator."""
+    return _drive(_hshi_requests(spec, sens, rng, pop_size, n_cubes,
+                                 cube_budget, tracker), batch_eval)
 
 
 def lhs_init(spec: GenomeSpec, rng: np.random.Generator,
              pop_size: int) -> np.ndarray:
-    """Latin hypercube sampling over all genes (standard-ES baseline)."""
+    """Latin hypercube sampling over all genes (standard-ES baseline).
+    One permuted strata matrix; every column is an independent shuffle."""
     L = spec.length
-    g = np.empty((pop_size, L), dtype=np.int64)
-    for j in range(L):
-        strata = (np.arange(pop_size) + rng.random(pop_size)) / pop_size
-        rng.shuffle(strata)
-        g[:, j] = (strata * spec.gene_ub[j]).astype(np.int64)
+    strata = np.broadcast_to(
+        np.arange(pop_size, dtype=np.float64)[:, None],
+        (pop_size, L)).copy()
+    strata = rng.permuted(strata, axis=0)
+    strata = (strata + rng.random((pop_size, L))) / pop_size
+    g = (strata * spec.gene_ub[None, :].astype(np.float64)
+         ).astype(np.int64)
     return spec.clip(g)
 
 
@@ -201,22 +241,41 @@ def annealing_p_high(gen: int, total_gens: int) -> float:
 def mutate(genomes: np.ndarray, spec: GenomeSpec, rng: np.random.Generator,
            p_mut: float, genes_per: int,
            sens: Optional[SensitivityResult], p_high: float) -> np.ndarray:
-    """Annealing mutation (sens given) or uniform mutation (sens=None)."""
+    """Annealing mutation (sens given) or uniform mutation (sens=None).
+
+    Fully batched: gene indices are drawn as an (n, genes_per) matrix —
+    one shared uniform draw mapped into the high- or low-sensitivity
+    segment per row — and the replacement values come from a single
+    element-wise ``rng.integers(0, ub[gene])`` call.  Duplicate draws
+    within a row overwrite in draw order, exactly like the sequential
+    formulation."""
     out = genomes.copy()
+    n = len(out)
+    if n == 0 or genes_per <= 0:
+        return out
     L = spec.length
-    for i in range(len(out)):
-        if rng.random() >= p_mut:
-            continue
-        if sens is not None:
-            seg = sens.high_indices if rng.random() < p_high \
-                else sens.low_indices
-            if len(seg) == 0:
-                seg = np.arange(L)
-        else:
-            seg = np.arange(L)
-        for _ in range(genes_per):
-            g = int(seg[rng.integers(0, len(seg))])
-            out[i, g] = rng.integers(0, spec.gene_ub[g])
+    all_idx = np.arange(L)
+    active = rng.random(n) < p_mut
+    if sens is not None:
+        hi = sens.high_indices
+        lo = sens.low_indices
+        if len(hi) == 0:
+            hi = all_idx
+        if len(lo) == 0:
+            lo = all_idx
+        use_high = rng.random(n) < p_high
+        u = rng.random((n, genes_per))
+        gene = np.where(use_high[:, None],
+                        hi[(u * len(hi)).astype(np.int64)],
+                        lo[(u * len(lo)).astype(np.int64)])
+    else:
+        gene = rng.integers(0, L, size=(n, genes_per))
+    vals = rng.integers(0, spec.gene_ub[gene])
+    act_rows = np.nonzero(active)[0]
+    if len(act_rows):
+        rows = np.repeat(act_rows, genes_per)
+        out[rows, gene[act_rows].reshape(-1)] = \
+            vals[act_rows].reshape(-1)
     return out
 
 
@@ -225,7 +284,11 @@ def crossover(parents: np.ndarray, n_children: int, spec: GenomeSpec,
               sens: Optional[SensitivityResult]) -> np.ndarray:
     """Single-point crossover.  With ``sens``: sensitivity-aware — cut
     points restricted to high-sensitivity segment boundaries (plus genome
-    ends), never splitting a high-sensitivity run."""
+    ends), never splitting a high-sensitivity run.
+
+    Batched: parent pairs and cut points are drawn as vectors and all
+    children are assembled with one ``np.where`` over the gene index
+    grid."""
     L = spec.length
     if sens is not None:
         pts = {0, L}
@@ -235,30 +298,31 @@ def crossover(parents: np.ndarray, n_children: int, spec: GenomeSpec,
         cut_points = sorted(pts - {0, L}) or [L // 2]
     else:
         cut_points = list(range(1, L))
-    kids = np.empty((n_children, L), dtype=parents.dtype)
-    for i in range(n_children):
-        a, b = rng.integers(0, len(parents), 2)
-        cut = cut_points[rng.integers(0, len(cut_points))]
-        kids[i, :cut] = parents[a, :cut]
-        kids[i, cut:] = parents[b, cut:]
-    return kids
+    cut_arr = np.asarray(cut_points, dtype=np.int64)
+    ab = rng.integers(0, len(parents), size=(n_children, 2))
+    cuts = cut_arr[rng.integers(0, len(cut_arr), size=n_children)]
+    col = np.arange(L, dtype=np.int64)[None, :]
+    kids = np.where(col < cuts[:, None], parents[ab[:, 0]],
+                    parents[ab[:, 1]])
+    return np.ascontiguousarray(kids, dtype=parents.dtype)
 
 
 # ---------------------------------------------------------------- main loop
 
 
-def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
-           sens: Optional[SensitivityResult] = None,
-           fixed_genes: Optional[Dict[int, int]] = None,
-           seeds: Optional[np.ndarray] = None) -> SearchResult:
-    """Run SparseMap's ES (or an ablation variant) under an eval budget.
+def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
+                    sens: Optional[SensitivityResult] = None,
+                    fixed_genes: Optional[Dict[int, int]] = None,
+                    seeds: Optional[np.ndarray] = None) -> Requests:
+    """The ES as a request generator: ``yield``s every genome batch that
+    needs evaluating and is ``send``-ed the evaluator's output dict.
 
-    ``fixed_genes`` pins gene indices to values (used by the SAGE-like
-    baseline to freeze the mapping segment).  ``seeds`` (n, L) are injected
-    into the initial population verbatim.
+    This is the primitive both :func:`evolve` (single search) and
+    ``search.MultiSearch`` (many concurrent searches round-robined over
+    shared jitted evaluators) are built on.  Returns the extras dict via
+    ``StopIteration.value``; all bookkeeping lives in ``tracker``.
     """
     rng = np.random.default_rng(cfg.seed)
-    tracker = _Budget(cfg.budget)
 
     def apply_fixed(g: np.ndarray) -> np.ndarray:
         if fixed_genes:
@@ -277,8 +341,11 @@ def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
             n_ctx -= 1
         while n_ctx * n_smp * spec.length > calib_target and n_smp > 4:
             n_smp -= 1
-        sens = calibrate(spec, batch_eval, rng,
-                         n_contexts=n_ctx, n_samples=n_smp)
+        probes, gene_idx, sampled_vals = build_probes(
+            spec, rng, n_contexts=n_ctx, n_samples=n_smp)
+        out = yield probes
+        sens = score_probes(spec, probes, gene_idx, sampled_vals, out, rng,
+                            n_contexts=n_ctx, n_samples=n_smp)
         tracker.evals += sens.evals_used        # calibration counts
         tracker.hist.extend([tracker.best] * sens.evals_used)
 
@@ -287,14 +354,14 @@ def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
         n_cubes = cfg.n_cubes or cfg.pop_size
         cube_budget = min(cfg.cube_budget,
                           max(2, int(0.15 * cfg.budget) // max(n_cubes, 1)))
-        pop = hshi_init(spec, batch_eval, sens, rng, cfg.pop_size,
-                        n_cubes, cube_budget, tracker)
+        pop = yield from _hshi_requests(spec, sens, rng, cfg.pop_size,
+                                        n_cubes, cube_budget, tracker)
     else:
         pop = lhs_init(spec, rng, cfg.pop_size)
     if seeds is not None and len(seeds):
         pop[: len(seeds)] = seeds[: len(pop)]
     pop = apply_fixed(pop)
-    out = batch_eval(pop)
+    out = yield pop
     edp = tracker.register(pop, out)
 
     op_sens = sens if cfg.use_custom_ops else None
@@ -316,7 +383,7 @@ def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
         kids = mutate(kids, spec, rng, cfg.p_mutation,
                       cfg.genes_per_mutation, op_sens, p_high)
         kids = apply_fixed(spec.clip(kids))
-        kout = batch_eval(kids)
+        kout = yield kids
         kedp = tracker.register(kids, kout)
 
         pop = np.concatenate([elites, kids], axis=0)
@@ -332,15 +399,32 @@ def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
             # beyond-paper: re-seed the non-elite population
             fresh = lhs_init(spec, rng, cfg.pop_size - n_elite)
             fresh = apply_fixed(fresh)
-            fout = batch_eval(fresh)
+            fout = yield fresh
             fedp = tracker.register(fresh, fout)
             pop = np.concatenate([elites, fresh], axis=0)
             edp = np.concatenate([elite_edp, fedp])
             since_improve = 0
 
+    return dict(generations=gen,
+                sensitivity=None if sens is None else sens.scores)
+
+
+def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,
+           sens: Optional[SensitivityResult] = None,
+           fixed_genes: Optional[Dict[int, int]] = None,
+           seeds: Optional[np.ndarray] = None) -> SearchResult:
+    """Run SparseMap's ES (or an ablation variant) under an eval budget.
+
+    ``fixed_genes`` pins gene indices to values (used by the SAGE-like
+    baseline to freeze the mapping segment).  ``seeds`` (n, L) are injected
+    into the initial population verbatim.
+    """
+    tracker = _Budget(cfg.budget)
+    extras = _drive(
+        evolve_requests(spec, cfg, tracker, sens=sens,
+                        fixed_genes=fixed_genes, seeds=seeds),
+        batch_eval) or {}
     return SearchResult(
         best_edp=tracker.best, best_genome=tracker.best_genome,
         history=np.asarray(tracker.hist), evals=tracker.evals,
-        valid_evals=tracker.valid,
-        extras=dict(generations=gen,
-                    sensitivity=None if sens is None else sens.scores))
+        valid_evals=tracker.valid, extras=extras)

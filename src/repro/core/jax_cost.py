@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import lru_cache, partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,36 @@ def platform_vector(p: Platform) -> np.ndarray:
 
 def _bucket(n: int, size: int = 16) -> int:
     return ((n + size - 1) // size) * size
+
+
+# Registry of live jitted evaluators, keyed by compilation signature
+# (ndims, padded prime count) — used to count actual XLA compilations
+# (one per distinct traced argument-shape set per signature).
+_JIT_FNS: Dict[Tuple[int, int], object] = {}
+
+
+def compilation_count() -> int:
+    """Total XLA compilations held by the shared evaluator cache: the sum
+    of per-signature jit cache sizes (each distinct batch shape traced on
+    a signature is one compilation)."""
+    total = 0
+    for fn in _JIT_FNS.values():
+        try:
+            total += fn._cache_size()
+        except Exception:       # private API; degrade to signature count
+            total += 1
+    return total
+
+
+def compile_signatures() -> Tuple[Tuple[int, int], ...]:
+    """The (ndims, prime-bucket) signatures built so far."""
+    return tuple(sorted(_JIT_FNS))
+
+
+def clear_compile_cache() -> None:
+    """Drop all shared jitted evaluators (benchmarking hook)."""
+    _jitted_eval.cache_clear()
+    _JIT_FNS.clear()
 
 
 # ---------------------------------------------------------------- kernel
@@ -256,7 +286,9 @@ def _jitted_eval(d: int, n_primes_pad: int):
 
     batched = jax.vmap(eval_one,
                        in_axes=(0, 0, 0, 0) + (None,) * 8)
-    return jax.jit(batched)
+    fn = jax.jit(batched)
+    _JIT_FNS[(d, n_primes_pad)] = fn
+    return fn
 
 
 # ---------------------------------------------------------------- wrapper
@@ -264,16 +296,22 @@ def _jitted_eval(d: int, n_primes_pad: int):
 
 class JaxCostModel:
     """Batch evaluator bound to one (workload, platform) pair.  Instances
-    with the same (ndims, prime bucket) share a single XLA compilation."""
+    with the same (ndims, prime bucket) share a single XLA compilation.
 
-    def __init__(self, spec: GenomeSpec, platform: Platform):
+    ``n_pad`` widens the prime axis beyond the workload's natural bucket so
+    a group of concurrent searches over different workloads can be forced
+    onto ONE compilation signature (``search.MultiSearch``); the padding
+    primes are 1.0 and are numerically inert."""
+
+    def __init__(self, spec: GenomeSpec, platform: Platform,
+                 n_pad: Optional[int] = None):
         self.spec = spec
         self.platform = platform
         wl = spec.workload
         d = wl.ndims
         self.d = d
         self.n_primes = spec.n_primes
-        self.n_pad = _bucket(max(self.n_primes, 1))
+        self.n_pad = _bucket(max(self.n_primes, 1, int(n_pad or 0)))
 
         primes = np.ones(self.n_pad, dtype=np.float32)
         prime_dim = np.zeros(self.n_pad, dtype=np.int32)
@@ -302,6 +340,11 @@ class JaxCostModel:
         self._sl_fmt = [(s[f"fmt_{t.name}"].start, s[f"fmt_{t.name}"].stop)
                         for t in wl.tensors]
         self._sl_sg = (s["sg"].start, s["sg"].stop)
+
+    @property
+    def signature(self) -> Tuple[int, int]:
+        """The (ndims, prime-bucket) compilation signature."""
+        return (self.d, self.n_pad)
 
     def __call__(self, genomes) -> Dict[str, np.ndarray]:
         """genomes: (B, L) ints -> dict of (B,) arrays.  Pads the batch to

@@ -8,33 +8,58 @@ platform) under an evaluation budget.
 
 Evaluator instances are cached per (workload, platform) because jit
 compilation of the batch cost model dominates small searches.
+
+Multi-workload sweeps use :class:`MultiSearch`, which runs one ES
+population per (workload, platform) pair *concurrently*: every pending
+population is round-robined through the shared jitted evaluator, ordered
+by (ndims, prime-bucket) compilation signature, and — with
+``align_signatures=True`` — each workload's prime axis is padded up to the
+largest bucket among its same-ndims peers so the whole group shares ONE
+XLA compilation instead of tracing per workload:
+
+    results = search.run_sweep([wl_a, wl_b], "cloud", budget=20_000)
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple, Union
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import accel
-from .baselines import METHODS
+from .baselines import METHODS, sparsemap_setup
 from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
-from .evolution import SearchResult
-from .jax_cost import JaxCostModel
+from .evolution import SearchResult, _Budget, evolve_requests
+from .jax_cost import JaxCostModel, _bucket
 from .workload import Workload
 
-_CACHE: Dict[Tuple[int, str], Tuple[GenomeSpec, JaxCostModel]] = {}
+_CACHE: Dict[Tuple[int, str, Optional[int]],
+             Tuple[GenomeSpec, JaxCostModel]] = {}
 
 
-def get_evaluator(workload: Workload, platform: Union[str, accel.Platform]
+def _platform(platform: Union[str, accel.Platform]) -> accel.Platform:
+    return accel.PLATFORMS[platform] if isinstance(platform, str) \
+        else platform
+
+
+def get_evaluator(workload: Workload, platform: Union[str, accel.Platform],
+                  n_pad: Optional[int] = None
                   ) -> Tuple[GenomeSpec, JaxCostModel]:
-    plat = accel.PLATFORMS[platform] if isinstance(platform, str) else platform
-    key = (id(workload), plat.name)
+    plat = _platform(platform)
+    key = (id(workload), plat.name, n_pad)
     if key not in _CACHE:
         spec = GenomeSpec(workload)
-        _CACHE[key] = (spec, JaxCostModel(spec, plat))
+        _CACHE[key] = (spec, JaxCostModel(spec, plat, n_pad=n_pad))
     return _CACHE[key]
+
+
+def clear_cache() -> None:
+    """Drop cached evaluators AND the shared jitted kernels (benchmark
+    hook for counting compilations from a cold start)."""
+    from . import jax_cost
+    _CACHE.clear()
+    jax_cost.clear_compile_cache()
 
 
 def run(method: str, workload: Workload,
@@ -42,7 +67,7 @@ def run(method: str, workload: Workload,
         seed: int = 0, **kw) -> SearchResult:
     if method not in METHODS:
         raise KeyError(f"unknown method {method!r}; have {list(METHODS)}")
-    plat = accel.PLATFORMS[platform] if isinstance(platform, str) else platform
+    plat = _platform(platform)
     spec, ev = get_evaluator(workload, plat)
     return METHODS[method](spec, ev, budget, seed, plat, **kw)
 
@@ -58,5 +83,161 @@ def report_best(workload: Workload, platform: Union[str, accel.Platform],
     d = decode_best(workload, result)
     if d is None:
         return None
-    plat = accel.PLATFORMS[platform] if isinstance(platform, str) else platform
+    plat = _platform(platform)
     return evaluate(d, plat)
+
+
+# ---------------------------------------------------------------- multi
+
+
+@dataclasses.dataclass
+class SearchTask:
+    """One (workload, platform) search in a :class:`MultiSearch` fleet."""
+    workload: Workload
+    platform: Union[str, accel.Platform] = "cloud"
+    budget: int = 20_000
+    seed: int = 0
+    name: Optional[str] = None
+    es_kw: Dict = dataclasses.field(default_factory=dict)
+
+    def resolved_name(self) -> str:
+        if self.name:
+            return self.name
+        return f"{self.workload.name}@{_platform(self.platform).name}"
+
+
+@dataclasses.dataclass
+class _TaskState:
+    name: str
+    gen: object                      # the evolve_requests generator
+    tracker: _Budget
+    ev: JaxCostModel
+    natural: Tuple[int, int]
+    req: Optional[np.ndarray] = None
+    extras: Optional[Dict] = None
+
+    @property
+    def signature(self) -> Tuple[int, int]:
+        return self.ev.signature
+
+
+class MultiSearch:
+    """Run one SparseMap ES population per (workload, platform) pair
+    concurrently.
+
+    Each task's engine is an :func:`evolve_requests` generator; every
+    round, each pending population's next batch is evaluated and the
+    generator advanced, with tasks ordered by compilation signature so
+    same-signature populations hit the shared jitted evaluator
+    back-to-back.  With ``align_signatures=True`` (default), each
+    workload's prime axis is padded up to the largest bucket among its
+    same-ndims peers, collapsing the group onto one (ndims, bucket)
+    signature — a sweep over the paper's workload table then reuses
+    compilations instead of paying XLA tracing per workload (the padding
+    primes are 1.0 and numerically inert).
+
+    After :meth:`run`, ``stats`` holds the round count plus the aligned
+    and natural signature sets.
+    """
+
+    def __init__(self, tasks: Iterable, align_signatures: bool = True):
+        norm: List[SearchTask] = []
+        for t in tasks:
+            if isinstance(t, SearchTask):
+                norm.append(t)
+            elif isinstance(t, Workload):
+                norm.append(SearchTask(t))
+            else:
+                norm.append(SearchTask(*t))
+        if not norm:
+            raise ValueError("MultiSearch needs at least one task")
+        self.tasks = norm
+        self.align_signatures = align_signatures
+        self.stats: Dict = {}
+
+    def run(self) -> Dict[str, SearchResult]:
+        naturals = [(t.workload.ndims,
+                     _bucket(max(len(t.workload.prime_factors), 1)))
+                    for t in self.tasks]
+        pad_for: Dict[int, int] = {}
+        if self.align_signatures:
+            for d, bucket in naturals:
+                pad_for[d] = max(pad_for.get(d, 0), bucket)
+
+        states: List[_TaskState] = []
+        seen_names: Dict[str, int] = {}
+        for task, natural in zip(self.tasks, naturals):
+            plat = _platform(task.platform)
+            n_pad = pad_for.get(natural[0]) if self.align_signatures \
+                else None
+            if n_pad == natural[1]:
+                n_pad = None        # natural bucket: share the plain entry
+            spec, ev = get_evaluator(task.workload, plat, n_pad=n_pad)
+            cfg, seeds = sparsemap_setup(spec, plat, task.budget,
+                                         task.seed, **task.es_kw)
+            tracker = _Budget(cfg.budget)
+            gen = evolve_requests(spec, cfg, tracker, seeds=seeds)
+            name = task.resolved_name()
+            if name in seen_names:
+                seen_names[name] += 1
+                name = f"{name}#{seen_names[name]}"
+            else:
+                seen_names[name] = 0
+            states.append(_TaskState(name=name, gen=gen, tracker=tracker,
+                                     ev=ev, natural=natural))
+
+        # group same-signature populations so they share warm compilations
+        states.sort(key=lambda s: s.signature)
+
+        alive: List[_TaskState] = []
+        for st in states:
+            try:
+                st.req = next(st.gen)
+                alive.append(st)
+            except StopIteration as stop:
+                st.extras = stop.value or {}
+
+        rounds = 0
+        while alive:
+            pending: List[_TaskState] = []
+            for st in alive:
+                out = st.ev(st.req)
+                try:
+                    st.req = st.gen.send(out)
+                    pending.append(st)
+                except StopIteration as stop:
+                    st.extras = stop.value or {}
+            alive = pending
+            rounds += 1
+
+        results: Dict[str, SearchResult] = {}
+        for st in states:
+            extras = dict(st.extras or {})
+            extras["signature"] = st.signature
+            extras["natural_signature"] = st.natural
+            results[st.name] = SearchResult(
+                best_edp=st.tracker.best,
+                best_genome=st.tracker.best_genome,
+                history=np.asarray(st.tracker.hist),
+                evals=st.tracker.evals,
+                valid_evals=st.tracker.valid,
+                extras=extras)
+        self.stats = dict(
+            rounds=rounds,
+            signatures=sorted({s.signature for s in states}),
+            natural_signatures=sorted({s.natural for s in states}))
+        return results
+
+
+def run_sweep(workloads: Sequence[Workload],
+              platform: Union[str, accel.Platform] = "cloud",
+              budget: int = 20_000, seed: int = 0,
+              align_signatures: bool = True, **es_kw
+              ) -> Dict[str, SearchResult]:
+    """Convenience wrapper: one concurrent SparseMap search per workload
+    (e.g. the paper's Table III list) on a shared platform."""
+    ms = MultiSearch(
+        [SearchTask(wl, platform, budget=budget, seed=seed,
+                    es_kw=dict(es_kw)) for wl in workloads],
+        align_signatures=align_signatures)
+    return ms.run()

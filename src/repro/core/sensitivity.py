@@ -15,11 +15,18 @@ over I independent context combinations (Eq. 3).  Genes with
 are *high-sensitivity*; the rest are low-sensitivity (Eq. 5).  Valid
 genomes discovered during calibration are pooled and reused by the
 high-sensitivity hypercube initialization to seed low-sensitivity genes.
+
+Split into :func:`build_probes` / :func:`score_probes` so the evaluation
+can be routed through a shared batch evaluator by an external driver
+(``search.MultiSearch``); :func:`calibrate` composes the two around a
+direct ``batch_eval`` call.  Scoring is fully vectorized: all pairwise
+ratios for every (context, gene) cell are computed in one broadcasted
+pass over the (I, L, S, S) pair lattice.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -59,6 +66,77 @@ class SensitivityResult:
         return segs
 
 
+def build_probes(spec: GenomeSpec, rng: np.random.Generator,
+                 n_contexts: int = 6, n_samples: int = 12
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build the full probe batch: for each context i and gene v,
+    ``n_samples`` genomes identical to context i except gene v.  Returns
+    (probes, gene_idx, sampled_vals); probe row i*L*S + v*S + s is context
+    i with gene v resampled."""
+    L = spec.length
+    contexts = spec.random_genomes(rng, n_contexts)            # (I, L)
+    probes = np.repeat(contexts, L * n_samples, axis=0)        # (I*L*S, L)
+    gene_idx = np.tile(np.repeat(np.arange(L), n_samples), n_contexts)
+    sampled_vals = (rng.random(len(probes)) *
+                    spec.gene_ub[gene_idx]).astype(np.int64)
+    probes[np.arange(len(probes)), gene_idx] = sampled_vals
+    return probes, gene_idx, sampled_vals
+
+
+def score_probes(spec: GenomeSpec, probes: np.ndarray, gene_idx: np.ndarray,
+                 sampled_vals: np.ndarray, out: dict,
+                 rng: np.random.Generator, n_contexts: int, n_samples: int,
+                 max_pairs: int = 32) -> SensitivityResult:
+    """Compute sensitivity scores from the evaluated probe batch."""
+    L = spec.length
+    S = n_samples
+    valid = np.asarray(out["valid"]).reshape(n_contexts, L, S)
+    edp = np.asarray(out["edp"], dtype=np.float64).reshape(n_contexts, L, S)
+    vals = sampled_vals.astype(np.float64).reshape(n_contexts, L, S)
+
+    # The seed implementation subsampled pairs per cell purely to bound
+    # the Python-loop cost; vectorized, every eligible pair of a normal
+    # calibration (S <= ~32) is cheap, and using them all avoids biasing
+    # against cells with few valid samples.  Only truly huge lattices get
+    # a (shared) subsample, scaled so ~max_pairs pairs survive per cell.
+    iu, ju = np.triu_indices(S, k=1)
+    if len(iu) > max(max_pairs * 16, 512):
+        sel = rng.choice(len(iu), max(max_pairs * 16, 512), replace=False)
+        iu, ju = iu[sel], ju[sel]
+
+    ok_a = valid[..., iu]
+    ok_b = valid[..., ju]
+    va = vals[..., iu]
+    vb = vals[..., ju]
+    pair_ok = ok_a & ok_b & (va != vb)
+    # neutralize invalid entries (inf EDP) before arithmetic
+    ea = np.where(ok_a, edp[..., iu], 0.0)
+    eb = np.where(ok_b, edp[..., ju], 0.0)
+    num = np.abs(ea - eb)
+    den = np.abs(va - vb) * np.maximum(np.minimum(ea, eb), 1e-30)
+    ratio = np.where(pair_ok, num / np.where(pair_ok, den, 1.0), 0.0)
+
+    n_pairs = pair_ok.sum(axis=-1)                  # (I, L)
+    cell_ok = (valid.sum(axis=-1) >= 2) & (n_pairs > 0)
+    cell_score = np.where(
+        cell_ok, ratio.sum(axis=-1) / np.maximum(n_pairs, 1), 0.0)
+    scores = cell_score.sum(axis=0)                 # (L,)
+    counts = cell_ok.sum(axis=0)
+    with np.errstate(invalid="ignore"):
+        scores = np.where(counts > 0, scores / np.maximum(counts, 1), 0.0)
+
+    smax, smin = scores.max(), scores.min()
+    threshold = 0.75 * (smax - smin) + smin
+    high = scores > threshold
+    if not high.any():         # degenerate: everything equal
+        high = scores >= smax
+
+    pool = probes[np.asarray(out["valid"])]
+    return SensitivityResult(scores=scores, high_mask=high,
+                             valid_pool=pool, threshold=float(threshold),
+                             evals_used=len(probes))
+
+
 def calibrate(spec: GenomeSpec, batch_eval, rng: np.random.Generator,
               n_contexts: int = 6, n_samples: int = 12,
               max_pairs: int = 32) -> SensitivityResult:
@@ -69,61 +147,9 @@ def calibrate(spec: GenomeSpec, batch_eval, rng: np.random.Generator,
 
     One batched evaluation covers all genes x contexts x samples.
     """
-    L = spec.length
-    ub = spec.gene_ub
-
-    # Build the full probe batch: for each context i and gene v, n_samples
-    # genomes identical to context i except gene v.
-    contexts = spec.random_genomes(rng, n_contexts)            # (I, L)
-    probes = np.repeat(contexts, L * n_samples, axis=0)        # (I*L*S, L)
-    gene_idx = np.tile(np.repeat(np.arange(L), n_samples), n_contexts)
-    sampled_vals = (rng.random(len(probes)) *
-                    ub[gene_idx]).astype(np.int64)
-    probes[np.arange(len(probes)), gene_idx] = sampled_vals
-
+    probes, gene_idx, sampled_vals = build_probes(
+        spec, rng, n_contexts=n_contexts, n_samples=n_samples)
     out = batch_eval(probes)
-    valid = np.asarray(out["valid"])
-    edp = np.asarray(out["edp"], dtype=np.float64)
-
-    scores = np.zeros(L)
-    counts = np.zeros(L)
-    idx = 0
-    for i in range(n_contexts):
-        for v in range(L):
-            sl = slice(idx, idx + n_samples)
-            idx += n_samples
-            vv = sampled_vals[sl]
-            ok = valid[sl]
-            if ok.sum() < 2:
-                continue
-            vals = vv[ok].astype(np.float64)
-            es = edp[sl][ok]
-            # pairwise ratio (subsample pairs if large)
-            n = len(vals)
-            pairs = [(a, b) for a in range(n) for b in range(a + 1, n)
-                     if vals[a] != vals[b]]
-            if len(pairs) > max_pairs:
-                sel = rng.choice(len(pairs), max_pairs, replace=False)
-                pairs = [pairs[j] for j in sel]
-            if not pairs:
-                continue
-            s = 0.0
-            for a, b in pairs:
-                s += (abs(es[a] - es[b]) /
-                      (abs(vals[a] - vals[b]) * max(min(es[a], es[b]), 1e-30)))
-            scores[v] += s / len(pairs)
-            counts[v] += 1
-
-    with np.errstate(invalid="ignore"):
-        scores = np.where(counts > 0, scores / np.maximum(counts, 1), 0.0)
-
-    smax, smin = scores.max(), scores.min()
-    threshold = 0.75 * (smax - smin) + smin
-    high = scores > threshold
-    if not high.any():         # degenerate: everything equal
-        high = scores >= smax
-
-    pool = probes[valid]
-    return SensitivityResult(scores=scores, high_mask=high,
-                             valid_pool=pool, threshold=float(threshold),
-                             evals_used=len(probes))
+    return score_probes(spec, probes, gene_idx, sampled_vals, out, rng,
+                        n_contexts=n_contexts, n_samples=n_samples,
+                        max_pairs=max_pairs)

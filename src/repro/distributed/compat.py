@@ -1,0 +1,30 @@
+"""JAX version-compat shim for ``shard_map``.
+
+``from jax import shard_map`` only exists on newer JAX; on 0.4.x the
+implementation lives in ``jax.experimental.shard_map``.  The replication-
+check keyword was also renamed (``check_rep`` -> ``check_vma``) along the
+way.  This module exposes one :func:`shard_map` with the NEW surface
+(keyword-only ``mesh/in_specs/out_specs/check_vma``) and translates to
+whatever the installed JAX accepts.  See COMPAT.md.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # JAX >= 0.6: public API
+    from jax import shard_map as _shard_map
+except ImportError:                     # JAX 0.4.x/0.5.x: experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {}
+    if check_vma is not None:
+        if "check_vma" in _PARAMS:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in _PARAMS:
+            kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -11,9 +11,10 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compat import shard_map
 
 
 def test_pipeline():

@@ -37,6 +37,7 @@ from repro.configs.shapes import ShapeSpec
 from repro.core.accel import TPU_V5E
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import batch_axes_of, make_production_mesh
+from repro.launch.xla_compat import xla_cost_analysis
 from repro.launch.steps import (build_prefill_step, build_serve_step,
                                 build_train_step)
 from repro.models import sharding as shard_ctx
@@ -176,7 +177,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t1, 1)
 
-            ca = compiled.cost_analysis() or {}
+            ca = xla_cost_analysis(compiled)
             # raw XLA numbers (NOTE: while-loop bodies counted ONCE —
             # see hlo_analysis docstring; kept for reference)
             rec["xla_flops_raw"] = float(ca.get("flops", 0.0))

@@ -1,0 +1,90 @@
+"""Tiny fallback for the subset of ``hypothesis`` this repo's tests use,
+so the suite still COLLECTS AND RUNS where hypothesis is not installed
+(it is an optional test extra — see pyproject.toml / COMPAT.md).
+
+The shim is NOT hypothesis: no shrinking, no failure database, just
+seeded pseudo-random example generation for ``@given`` with the
+``integers`` / ``floats`` / ``composite`` strategies and a pass-through
+``settings`` decorator.  Real hypothesis is preferred automatically when
+importable:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value: float, max_value: float, **_: object) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(min_value + rng.random() *
+                          (max_value - min_value)))
+
+
+def _composite(fn):
+    """``@st.composite`` — the wrapped function receives ``draw``."""
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        def draw_fn(rng):
+            def draw(strategy):
+                return strategy.example_from(rng)
+            return fn(draw, *args, **kwargs)
+        return _Strategy(draw_fn)
+    return make
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, composite=_composite)
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline=None, **_: object):
+    def deco(test_fn):
+        test_fn._shim_max_examples = max_examples
+        return test_fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(test_fn):
+        # NOTE: no functools.wraps — pytest would introspect the wrapped
+        # signature and treat the drawn parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(test_fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = [s.example_from(rng) for s in strats]
+                test_fn(*drawn)
+        wrapper.__name__ = test_fn.__name__
+        wrapper.__qualname__ = test_fn.__qualname__
+        wrapper.__doc__ = test_fn.__doc__
+        wrapper.__module__ = test_fn.__module__
+        wrapper._shim_max_examples = getattr(
+            test_fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco

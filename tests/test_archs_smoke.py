@@ -12,6 +12,8 @@ from repro.configs import ARCHS, get_config, smoke_config
 from repro.models.model import Model
 from repro.optim import optimizer as opt
 
+pytestmark = pytest.mark.slow      # jit-compiles every assigned arch
+
 ALL = sorted(ARCHS)
 
 

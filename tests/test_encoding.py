@@ -3,7 +3,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:        # hypothesis is an optional test extra (pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.encoding import (GenomeSpec, all_permutations, cantor_decode,
                                  cantor_encode)

@@ -1,0 +1,411 @@
+"""Equivalence tests for the vectorized ES engine: the array-at-once
+operators must match the seed (per-individual Python loop) implementations
+— exactly for best-so-far tracking and sensitivity scoring, and in
+per-gene marginal statistics / end-to-end search trajectories for the
+stochastic operators (the RNG streams differ, the distributions must
+not)."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_workloads import by_name
+from repro.core import search
+from repro.core.baselines import sparsemap_setup
+from repro.core.encoding import GenomeSpec
+from repro.core.evolution import (ESConfig, _Budget, annealing_p_high,
+                                  crossover, evolve, hshi_init, lhs_init,
+                                  mutate)
+from repro.core.sensitivity import SensitivityResult, build_probes, \
+    score_probes
+from repro.core.workload import spmm
+
+WL = spmm("mm_vec", 32, 64, 48, 0.2, 0.5)
+
+
+def _make_sens(spec, seed=0):
+    """Synthetic sensitivity: perm + sg genes high, a small valid pool."""
+    rng = np.random.default_rng(seed)
+    high = np.zeros(spec.length, dtype=bool)
+    high[spec.segments["perm"].slice] = True
+    high[spec.segments["sg"].slice] = True
+    scores = high.astype(np.float64)
+    return SensitivityResult(scores=scores, high_mask=high,
+                             valid_pool=spec.random_genomes(rng, 64),
+                             threshold=0.75, evals_used=0)
+
+
+# ------------------------------------------------- seed reference ops
+
+
+def ref_mutate(genomes, spec, rng, p_mut, genes_per, sens, p_high):
+    out = genomes.copy()
+    L = spec.length
+    for i in range(len(out)):
+        if rng.random() >= p_mut:
+            continue
+        if sens is not None:
+            seg = sens.high_indices if rng.random() < p_high \
+                else sens.low_indices
+            if len(seg) == 0:
+                seg = np.arange(L)
+        else:
+            seg = np.arange(L)
+        for _ in range(genes_per):
+            g = int(seg[rng.integers(0, len(seg))])
+            out[i, g] = rng.integers(0, spec.gene_ub[g])
+    return out
+
+
+def ref_crossover(parents, n_children, spec, rng, sens):
+    L = spec.length
+    if sens is not None:
+        pts = {0, L}
+        for a, b in sens.high_segments():
+            pts.add(a)
+            pts.add(b)
+        cut_points = sorted(pts - {0, L}) or [L // 2]
+    else:
+        cut_points = list(range(1, L))
+    kids = np.empty((n_children, L), dtype=parents.dtype)
+    for i in range(n_children):
+        a, b = rng.integers(0, len(parents), 2)
+        cut = cut_points[rng.integers(0, len(cut_points))]
+        kids[i, :cut] = parents[a, :cut]
+        kids[i, cut:] = parents[b, cut:]
+    return kids
+
+
+class RefBudget:
+    """The seed's per-element best-so-far loop."""
+
+    def __init__(self, budget):
+        self.budget = budget
+        self.evals = 0
+        self.valid = 0
+        self.best = np.inf
+        self.best_genome = None
+        self.hist = []
+
+    def register(self, genomes, out):
+        n = min(len(genomes), self.budget - self.evals)
+        valid = np.asarray(out["valid"])[:n]
+        edp = np.asarray(out["edp"], dtype=np.float64)[:n].copy()
+        edp[~valid] = np.inf
+        for i in range(n):
+            if edp[i] < self.best:
+                self.best = float(edp[i])
+                self.best_genome = genomes[i].copy()
+            self.hist.append(self.best)
+        self.evals += n
+        self.valid += int(valid.sum())
+        full = np.full(len(genomes), np.inf)
+        full[:n] = edp
+        return full
+
+    @property
+    def exhausted(self):
+        return self.evals >= self.budget
+
+
+def ref_evolve(spec, batch_eval, cfg, sens, seeds=None):
+    """The seed main loop over the reference operators (sens given, so no
+    calibration — exactly the operator-dependent part of the search)."""
+    rng = np.random.default_rng(cfg.seed)
+    tracker = RefBudget(cfg.budget)
+    pop = hshi_init(spec, batch_eval, sens, rng, cfg.pop_size,
+                    cfg.n_cubes or cfg.pop_size,
+                    min(cfg.cube_budget,
+                        max(2, int(0.15 * cfg.budget) //
+                            max(cfg.n_cubes or cfg.pop_size, 1))),
+                    tracker)
+    if seeds is not None and len(seeds):
+        pop[: len(seeds)] = seeds[: len(pop)]
+    edp = tracker.register(pop, batch_eval(pop))
+    n_parents = max(2, int(cfg.pop_size * cfg.parent_frac))
+    n_elite = max(1, int(cfg.pop_size * cfg.elite_frac))
+    total_gens = max(1, (cfg.budget - tracker.evals) // cfg.pop_size)
+    gen = 0
+    while not tracker.exhausted:
+        order = np.argsort(edp)
+        parents = pop[order[:n_parents]]
+        elites = pop[order[:n_elite]].copy()
+        elite_edp = edp[order[:n_elite]].copy()
+        p_high = annealing_p_high(gen, total_gens)
+        kids = ref_crossover(parents, cfg.pop_size - n_elite, spec, rng,
+                             sens)
+        kids = ref_mutate(kids, spec, rng, cfg.p_mutation,
+                          cfg.genes_per_mutation, sens, p_high)
+        kids = spec.clip(kids)
+        kedp = tracker.register(kids, batch_eval(kids))
+        pop = np.concatenate([elites, kids], axis=0)
+        edp = np.concatenate([elite_edp, kedp])
+        gen += 1
+    return tracker
+
+
+# ------------------------------------------------- budget tracking
+
+
+def test_budget_register_matches_reference_exactly():
+    rng = np.random.default_rng(3)
+    a, b = _Budget(500), RefBudget(500)
+    for _ in range(6):
+        genomes = rng.integers(0, 50, size=(100, 7))
+        edp = np.exp(rng.normal(20, 4, size=100))
+        valid = rng.random(100) < 0.3
+        out = dict(edp=np.where(valid, edp, np.inf), valid=valid)
+        ea = a.register(genomes, out)
+        eb = b.register(genomes, out)
+        np.testing.assert_array_equal(ea, eb)
+    assert a.best == b.best
+    assert a.evals == b.evals == 500
+    assert a.valid == b.valid
+    assert a.hist == b.hist
+    np.testing.assert_array_equal(a.best_genome, b.best_genome)
+
+
+def test_budget_register_tie_keeps_first_genome():
+    a, b = _Budget(10), RefBudget(10)
+    genomes = np.arange(8).reshape(4, 2)
+    out = dict(edp=np.array([5.0, 3.0, 3.0, 7.0]),
+               valid=np.ones(4, bool))
+    a.register(genomes, out)
+    b.register(genomes, out)
+    np.testing.assert_array_equal(a.best_genome, b.best_genome)
+
+
+# ------------------------------------------------- operator marginals
+
+
+def test_mutate_marginals_match_reference():
+    spec = GenomeSpec(WL)
+    sens = _make_sens(spec)
+    n = 6000
+    base = spec.random_genomes(np.random.default_rng(0), n)
+    vec = mutate(base, spec, np.random.default_rng(1),
+                 p_mut=0.7, genes_per=2, sens=sens, p_high=0.6)
+    ref = ref_mutate(base, spec, np.random.default_rng(2),
+                     p_mut=0.7, genes_per=2, sens=sens, p_high=0.6)
+    for m in (vec, ref):
+        assert (m >= 0).all() and (m < spec.gene_ub[None, :]).all()
+    # fraction of mutated rows ~ p_mut * P(any drawn value differs)
+    row_frac_v = (vec != base).any(axis=1).mean()
+    row_frac_r = (ref != base).any(axis=1).mean()
+    assert abs(row_frac_v - row_frac_r) < 0.03
+    # per-gene mutation rate: high genes get more mass at p_high=0.6
+    gene_rate_v = (vec != base).mean(axis=0)
+    gene_rate_r = (ref != base).mean(axis=0)
+    np.testing.assert_allclose(gene_rate_v, gene_rate_r, atol=0.02)
+    hi = sens.high_indices
+    lo = sens.low_indices
+    assert gene_rate_v[hi].mean() > gene_rate_v[lo].mean()
+
+
+def test_mutate_uniform_marginals_match_reference():
+    spec = GenomeSpec(WL)
+    n = 6000
+    base = np.zeros((n, spec.length), dtype=np.int64)
+    vec = mutate(base, spec, np.random.default_rng(1),
+                 p_mut=1.0, genes_per=3, sens=None, p_high=0.0)
+    ref = ref_mutate(base, spec, np.random.default_rng(2),
+                     p_mut=1.0, genes_per=3, sens=None, p_high=0.0)
+    np.testing.assert_allclose((vec != base).mean(axis=0),
+                               (ref != base).mean(axis=0), atol=0.02)
+    # replacement values uniform over [0, ub): compare per-gene means of
+    # the touched entries
+    for impl in (vec, ref):
+        touched = impl != base
+        j = int(np.argmax(touched.sum(axis=0)))
+        vals = impl[touched[:, j], j]
+        assert abs(vals.mean() - (spec.gene_ub[j] - 1) / 2.0) \
+            < 0.1 * spec.gene_ub[j]
+
+
+def test_crossover_marginals_match_reference():
+    spec = GenomeSpec(WL)
+    sens = _make_sens(spec)
+    parents = np.stack([np.zeros(spec.length, dtype=np.int64),
+                        np.ones(spec.length, dtype=np.int64)])
+    n = 8000
+    vec = crossover(parents, n, spec, np.random.default_rng(1), sens)
+    ref = ref_crossover(parents, n, spec, np.random.default_rng(2), sens)
+    # per-gene probability of inheriting parent 1 must agree
+    np.testing.assert_allclose(vec.mean(axis=0), ref.mean(axis=0),
+                               atol=0.025)
+    # high-sensitivity runs never fragmented (both impls)
+    for kids in (vec, ref):
+        for a, b in sens.high_segments():
+            seg = kids[:, a:b]
+            assert (seg == seg[:, :1]).all()
+
+
+def test_crossover_uniform_marginals_match_reference():
+    spec = GenomeSpec(WL)
+    parents = np.stack([np.zeros(spec.length, dtype=np.int64),
+                        np.ones(spec.length, dtype=np.int64)])
+    n = 8000
+    vec = crossover(parents, n, spec, np.random.default_rng(1), None)
+    ref = ref_crossover(parents, n, spec, np.random.default_rng(2), None)
+    np.testing.assert_allclose(vec.mean(axis=0), ref.mean(axis=0),
+                               atol=0.025)
+
+
+def test_lhs_init_stratification_preserved():
+    spec = GenomeSpec(WL)
+    pop = lhs_init(spec, np.random.default_rng(0), 60)
+    assert pop.shape == (60, spec.length)
+    assert (pop >= 0).all() and (pop < spec.gene_ub[None, :]).all()
+    # every gene with ub >= pop hits ~pop distinct strata; the 6-valued
+    # perm gene must hit all 6
+    pg = pop[:, spec.segments["perm"].start]
+    assert len(np.unique(pg)) == 6
+
+
+# ------------------------------------------------- sensitivity scoring
+
+
+def ref_score_probes(spec, probes, gene_idx, sampled_vals, out, rng,
+                     n_contexts, n_samples, max_pairs):
+    """The seed's triple-loop scoring (pair subsampling disabled by a
+    large max_pairs so both impls use every pair)."""
+    L = spec.length
+    valid = np.asarray(out["valid"])
+    edp = np.asarray(out["edp"], dtype=np.float64)
+    scores = np.zeros(L)
+    counts = np.zeros(L)
+    idx = 0
+    for i in range(n_contexts):
+        for v in range(L):
+            sl = slice(idx, idx + n_samples)
+            idx += n_samples
+            vv = sampled_vals[sl]
+            ok = valid[sl]
+            if ok.sum() < 2:
+                continue
+            vals = vv[ok].astype(np.float64)
+            es = edp[sl][ok]
+            n = len(vals)
+            pairs = [(a, b) for a in range(n) for b in range(a + 1, n)
+                     if vals[a] != vals[b]]
+            if not pairs:
+                continue
+            s = 0.0
+            for a, b in pairs:
+                s += (abs(es[a] - es[b]) /
+                      (abs(vals[a] - vals[b]) *
+                       max(min(es[a], es[b]), 1e-30)))
+            scores[v] += s / len(pairs)
+            counts[v] += 1
+    return np.where(counts > 0, scores / np.maximum(counts, 1), 0.0)
+
+
+def test_sensitivity_scores_match_reference():
+    spec, ev = search.get_evaluator(WL, "cloud")
+    rng = np.random.default_rng(0)
+    n_ctx, n_smp = 3, 8
+    probes, gene_idx, vals = build_probes(spec, rng, n_ctx, n_smp)
+    out = ev(probes)
+    big = 10_000        # use ALL pairs in both implementations
+    sens = score_probes(spec, probes, gene_idx, vals, out,
+                        np.random.default_rng(1), n_ctx, n_smp,
+                        max_pairs=big)
+    ref = ref_score_probes(spec, probes, gene_idx, vals, out,
+                           np.random.default_rng(2), n_ctx, n_smp,
+                           max_pairs=big)
+    np.testing.assert_allclose(sens.scores, ref, rtol=1e-10, atol=1e-12)
+
+
+# ------------------------------------------------- HSHI + trajectories
+
+
+def _cheap_eval(spec):
+    """Deterministic numpy evaluator: valid iff the first tiling gene is
+    even; EDP = a smooth positive function of the genome."""
+    til = spec.segments["tiling"].start
+
+    def ev(genomes):
+        g = np.asarray(genomes)
+        valid = (g[:, til] % 2) == 0
+        edp = 1e6 + (g * np.arange(1, spec.length + 1)[None, :]).sum(1)
+        return dict(valid=valid,
+                    edp=np.where(valid, edp.astype(np.float64), np.inf))
+    return ev
+
+
+def test_hshi_marginals_match_reference_seed_behavior():
+    spec = GenomeSpec(WL)
+    sens = _make_sens(spec)
+    ev = _cheap_eval(spec)
+    pops = []
+    for seed in (1, 2):
+        tracker = _Budget(4000)
+        pop = hshi_init(spec, ev, sens, np.random.default_rng(seed),
+                        pop_size=100, n_cubes=100, cube_budget=8,
+                        tracker=tracker)
+        assert pop.shape == (100, spec.length)
+        assert (pop >= 0).all() and (pop < spec.gene_ub[None, :]).all()
+        assert tracker.evals > 0
+        pops.append(pop)
+    # cube stratification: the high-sensitivity perm gene must spread
+    # across its value range rather than collapse
+    pg = pops[0][:, spec.segments["perm"].start]
+    assert len(np.unique(pg)) >= 4
+    # most cubes found a valid individual under the cheap validity rule
+    til = spec.segments["tiling"].start
+    assert (pops[0][:, til] % 2 == 0).mean() > 0.8
+
+
+@pytest.mark.parametrize("wl_name", ["mm1", "mm3"])
+def test_evolve_trajectory_matches_reference(wl_name):
+    """End-to-end: vectorized evolve vs the seed loop w/ reference
+    operators — same budget, same precomputed sensitivity, same seeds —
+    must land within tolerance of each other on paper workloads."""
+    wl = by_name(wl_name)
+    spec, ev = search.get_evaluator(wl, "cloud")
+    from repro.core.sensitivity import calibrate
+    sens = calibrate(spec, ev, np.random.default_rng(0),
+                     n_contexts=3, n_samples=8)
+    cfg, seeds = sparsemap_setup(spec, search._platform("cloud"),
+                                 budget=700, seed=0)
+    res = evolve(spec, ev, cfg, sens=sens, seeds=seeds)
+    ref = ref_evolve(spec, ev, cfg, sens, seeds=seeds)
+    assert res.evals == ref.evals == 700
+    assert np.isfinite(res.best_edp) and np.isfinite(ref.best)
+    assert abs(res.valid_fraction - ref.valid / ref.evals) < 0.2
+    assert abs(np.log10(res.best_edp) - np.log10(ref.best)) < 1.0
+
+
+# ------------------------------------------------- MultiSearch
+
+
+def test_multisearch_matches_sequential_and_aligns_signatures():
+    mm1, mm4 = by_name("mm1"), by_name("mm4")
+    seq = {w.name: search.run("sparsemap", w, "cloud", budget=400, seed=0)
+           for w in (mm1, mm4)}
+    ms = search.MultiSearch(
+        [search.SearchTask(w, "cloud", budget=400, seed=0)
+         for w in (mm1, mm4)])
+    res = ms.run()
+    assert set(res) == {"mm1@cloud", "mm4@cloud"}
+    # aligned group collapses two natural signatures onto one
+    assert len(ms.stats["signatures"]) < len(ms.stats["natural_signatures"])
+    for w in (mm1, mm4):
+        a = seq[w.name]
+        b = res[f"{w.name}@cloud"]
+        assert b.evals == a.evals
+        if np.isfinite(a.best_edp):
+            # same RNG streams; only the inert prime padding differs
+            assert abs(np.log10(b.best_edp) - np.log10(a.best_edp)) < 1e-3
+        assert b.extras["natural_signature"] != b.extras["signature"] or \
+            w.name == "mm4"
+
+
+def test_run_sweep_same_signature_is_exact():
+    mm1, mm3 = by_name("mm1"), by_name("mm3")   # same (3, 16) signature
+    seq = {w.name: search.run("sparsemap", w, "cloud", budget=300, seed=1)
+           for w in (mm1, mm3)}
+    res = search.run_sweep([mm1, mm3], "cloud", budget=300, seed=1)
+    for w in (mm1, mm3):
+        b = res[f"{w.name}@cloud"]
+        assert b.best_edp == seq[w.name].best_edp
+        np.testing.assert_array_equal(
+            np.asarray(b.history), np.asarray(seq[w.name].history))

@@ -20,6 +20,9 @@ def run_cmd(args, timeout=900):
                           text=True, timeout=timeout, env=env, cwd=ROOT)
 
 
+pytestmark = pytest.mark.slow      # subprocess lower+compile integration
+
+
 def test_dryrun_single_cell():
     """xlstm decode_32k: the fastest cell — full lower+compile on the
     256-chip production mesh with roofline extraction."""

@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:        # hypothesis is an optional test extra (pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models.moe import moe_ffn, moe_ffn_grouped
 

@@ -158,6 +158,7 @@ def test_topk_sparsity_level():
 
 
 # --------------------------------------------------------------- multi-dev
+@pytest.mark.slow
 def test_multidevice_selftest_subprocess():
     """pipeline PP + compressed psum + sharded-vs-single train step +
     elastic restore, on 8 forced host devices."""

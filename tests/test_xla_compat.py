@@ -1,0 +1,71 @@
+"""Unit tests for the JAX version-compat shims (COMPAT.md): the
+cost_analysis normalizer (dict / list-of-dicts / None returns) and the
+shard_map compat import."""
+import numpy as np
+import pytest
+
+from repro.launch.xla_compat import normalize_cost_analysis, \
+    xla_cost_analysis
+
+
+class _FakeCompiled:
+    def __init__(self, ca):
+        self._ca = ca
+
+    def cost_analysis(self):
+        if isinstance(self._ca, Exception):
+            raise self._ca
+        return self._ca
+
+
+def test_dict_return_passes_through():
+    ca = {"flops": 10.0, "bytes accessed": 4.0}
+    out = xla_cost_analysis(_FakeCompiled(ca))
+    assert out == ca
+    assert out is not ca                       # defensive copy
+
+
+def test_list_of_dicts_is_flattened():
+    out = xla_cost_analysis(_FakeCompiled([{"flops": 10.0}]))
+    assert out.get("flops") == 10.0
+
+
+def test_list_of_dicts_sums_numeric_keys():
+    out = normalize_cost_analysis(
+        [{"flops": 10.0, "backend": "cpu"},
+         {"flops": 5.0, "bytes accessed": 2.0, "backend": "cpu2"}])
+    assert out["flops"] == 15.0
+    assert out["bytes accessed"] == 2.0
+    assert out["backend"] == "cpu"             # first occurrence kept
+
+
+def test_none_and_errors_give_empty_dict():
+    assert xla_cost_analysis(_FakeCompiled(None)) == {}
+    assert xla_cost_analysis(
+        _FakeCompiled(RuntimeError("unsupported"))) == {}
+    assert normalize_cost_analysis([None, {"flops": 1.0}]) == {"flops": 1.0}
+
+
+def test_real_compiled_artifact():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    c = jax.jit(lambda x: x @ x).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    out = xla_cost_analysis(c)
+    assert isinstance(out, dict)
+    assert out.get("flops", 0.0) > 0
+
+
+def test_shard_map_compat_runs():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
+    with mesh:
+        fn = shard_map(lambda a: a * 2.0, mesh=mesh,
+                       in_specs=P(), out_specs=P(), check_vma=False)
+        y = fn(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(y), [0.0, 2.0, 4.0, 6.0])

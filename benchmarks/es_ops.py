@@ -1,6 +1,6 @@
-"""ES operator micro-benchmark + MultiSearch compilation-sharing check.
+"""ES operator micro-benchmark + MultiSearch compilation-sharing checks.
 
-Two benchmarks backing the vectorized-engine claims:
+Three benchmarks backing the vectorized/concurrent-engine claims:
 
 * ``bench_operators`` — throughput (individuals/s) of the vectorized
   ``mutate`` + ``crossover`` (and HSHI round sampling / best-so-far
@@ -9,9 +9,14 @@ Two benchmarks backing the vectorized-engine claims:
 * ``bench_multisearch`` — a 2-workload sweep through ``MultiSearch``
   must perform FEWER XLA compilations than sequential ``search.run``
   calls (signature alignment) while matching their best-EDP results.
+* ``bench_method_sweep`` — a 2-workload x 3-method fig17-style grid via
+  ``run_method_sweep(stack_batches=True)`` must perform strictly fewer
+  XLA compilations AND fewer device dispatches per round (one padded
+  mega-batch per signature) than the sequential equivalent, while
+  matching sequential per-method best-EDP exactly at fixed seeds.
 
     PYTHONPATH=src python -m benchmarks.es_ops
-    PYTHONPATH=src python -m benchmarks.run --only es_ops,multisearch
+    PYTHONPATH=src python -m benchmarks.run --only es_ops,multisearch,method_sweep
 """
 from __future__ import annotations
 
@@ -159,6 +164,47 @@ def bench_multisearch(budget: int = 1000, seed: int = 0
         natural_signatures=ms.stats["natural_signatures"])
 
 
+def bench_method_sweep(budget: int = 2000, seed: int = 0
+                       ) -> Dict[str, float]:
+    """Sequential fig17-style grid vs one stacked MultiSearch fleet:
+    compilations, device dispatches, wall-clock, and exact result parity."""
+    from repro.configs.paper_workloads import by_name
+    from repro.core import jax_cost, search
+
+    wls = [by_name("mm1"), by_name("mm3")]      # shared (3, 16) signature
+    methods = ["sparsemap", "pso", "random_mapper"]
+
+    search.clear_cache()
+    t0 = time.perf_counter()
+    seq = {m: {w.name: search.run(m, w, "cloud", budget=budget, seed=seed)
+               for w in wls} for m in methods}
+    seq_s = time.perf_counter() - t0
+    seq_compiles = jax_cost.compilation_count()
+    seq_dispatches = jax_cost.dispatch_count()
+
+    search.clear_cache()
+    stats: Dict = {}
+    t0 = time.perf_counter()
+    grid = search.run_method_sweep(methods, wls, "cloud", budget=budget,
+                                   seed=seed, stack_batches=True,
+                                   stats_out=stats)
+    sweep_s = time.perf_counter() - t0
+    sweep_compiles = jax_cost.compilation_count()
+
+    exact = all(
+        seq[m][w.name].best_edp == grid[m][w.name].best_edp and
+        np.array_equal(seq[m][w.name].history, grid[m][w.name].history)
+        for m in methods for w in wls)
+    return dict(
+        budget=budget, n_methods=len(methods), n_workloads=len(wls),
+        seq_compiles=seq_compiles, sweep_compiles=sweep_compiles,
+        seq_dispatches=seq_dispatches, sweep_dispatches=stats["dispatches"],
+        rounds=stats["rounds"],
+        dispatches_per_round=stats["dispatches"] / max(stats["rounds"], 1),
+        seq_dispatches_per_round=seq_dispatches / max(stats["rounds"], 1),
+        seq_seconds=seq_s, sweep_seconds=sweep_s, edp_exact=exact)
+
+
 def main() -> None:
     ops = bench_operators()
     print(f"es_ops: pop={ops['pop_size']} L={ops['genome_len']} "
@@ -172,6 +218,15 @@ def main() -> None:
           f"{ms['seq_compiles']}, signatures {ms['signatures']} vs "
           f"{ms['natural_signatures']}, edp_match={ms['edp_match']}, "
           f"{ms['multi_seconds']:.1f}s vs {ms['seq_seconds']:.1f}s")
+    sw = bench_method_sweep()
+    print(f"method_sweep: {sw['n_workloads']} workloads x "
+          f"{sw['n_methods']} methods — compiles {sw['sweep_compiles']} vs "
+          f"sequential {sw['seq_compiles']}, dispatches "
+          f"{sw['sweep_dispatches']} vs {sw['seq_dispatches']} "
+          f"({sw['dispatches_per_round']:.1f} vs "
+          f"{sw['seq_dispatches_per_round']:.1f} per round), "
+          f"edp_exact={sw['edp_exact']}, "
+          f"{sw['sweep_seconds']:.1f}s vs {sw['seq_seconds']:.1f}s")
 
 
 if __name__ == "__main__":

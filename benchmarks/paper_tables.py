@@ -38,25 +38,43 @@ def _write_csv(name: str, header: Sequence[str], rows: List[Sequence]):
 def fig17_baselines(budget: int = 1500, seeds: Sequence[int] = (0,),
                     workload_names: Sequence[str] = ("conv2", "conv4",
                                                      "conv5", "conv7"),
-                    platform: str = "cloud") -> List[Dict]:
+                    platform: str = "cloud",
+                    concurrent: bool = True) -> List[Dict]:
     """Fig. 17(a)/(b): SparseMap vs classical optimizers on pruned-VGG16
-    layers (EDP + valid-point fraction under the same budget)."""
+    layers (EDP + valid-point fraction under the same budget).
+
+    With ``concurrent=True`` (default) the whole grid runs as ONE
+    mega-batched ``search.run_method_sweep`` fleet per seed — same results
+    at fixed seeds, one device dispatch per signature per round instead of
+    one per (method, workload)."""
     methods = ["sparsemap", "pso", "mcts", "tbpsa", "ppo", "dqn"]
+    wls = [by_name(n) for n in workload_names]
+    results: Dict[str, Dict[str, List]] = \
+        {m: {w.name: [] for w in wls} for m in methods}
+    t0 = time.time()
+    for seed in seeds:
+        if concurrent:
+            grid = search.run_method_sweep(methods, wls, platform,
+                                           budget=budget, seed=seed)
+            for m in methods:
+                for w in wls:
+                    results[m][w.name].append(grid[m][w.name])
+        else:
+            for m in methods:
+                for w in wls:
+                    results[m][w.name].append(
+                        search.run(m, w, platform, budget=budget,
+                                   seed=seed))
+    grid_seconds = round(time.time() - t0, 1)
     rows, out = [], []
     for wname in workload_names:
-        wl = by_name(wname)
         for method in methods:
-            edps, valids = [], []
-            for seed in seeds:
-                t0 = time.time()
-                res = search.run(method, wl, platform, budget=budget,
-                                 seed=seed)
-                edps.append(res.best_edp)
-                valids.append(res.valid_fraction)
+            rs = results[method][wname]
             rec = dict(workload=wname, method=method,
-                       edp=float(np.min(edps)),
-                       valid_frac=float(np.mean(valids)),
-                       budget=budget, seconds=round(time.time() - t0, 1))
+                       edp=float(np.min([r.best_edp for r in rs])),
+                       valid_frac=float(np.mean([r.valid_fraction
+                                                 for r in rs])),
+                       budget=budget, grid_seconds=grid_seconds)
             out.append(rec)
             rows.append([wname, method, rec["edp"], rec["valid_frac"],
                          budget])

@@ -22,7 +22,8 @@ def main(argv=None) -> None:
                     help="paper-scale budgets (20k evals/workload)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig7,fig17,fig18,"
-                         "table_iv,roofline,arch_dse,es_ops,multisearch")
+                         "table_iv,roofline,arch_dse,es_ops,multisearch,"
+                         "method_sweep")
     args = ap.parse_args(argv)
 
     budget = args.budget or (300 if args.quick else
@@ -52,6 +53,17 @@ def main(argv=None) -> None:
         print(f"multisearch,{time.time()-t0:.1f},"
               f"compiles={ms['multi_compiles']}_vs_seq_"
               f"{ms['seq_compiles']};edp_match={ms['edp_match']}")
+
+    if want("method_sweep"):
+        from benchmarks import es_ops
+        t0 = time.time()
+        sw = es_ops.bench_method_sweep(budget=min(budget, 2000))
+        print(f"method_sweep,{time.time()-t0:.1f},"
+              f"compiles={sw['sweep_compiles']}_vs_seq_"
+              f"{sw['seq_compiles']};"
+              f"dispatches_per_round={sw['dispatches_per_round']:.1f}"
+              f"_vs_seq_{sw['seq_dispatches_per_round']:.1f};"
+              f"edp_exact={sw['edp_exact']}")
 
     if want("fig2"):
         t0 = time.time()

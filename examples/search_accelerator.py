@@ -26,18 +26,26 @@ def main(argv=None):
     print(f"extracted {len(workloads)} GEMMs from {args.arch} "
           f"(50% pruned weights, 60% dense activations)\n")
 
+    methods = ("sparsemap", "sage_like", "random_mapper")
     for plat in args.platforms.split(","):
         print(f"== platform: {plat}")
+        # the whole (method x workload) grid runs as one concurrent
+        # mega-batched fleet — same results as per-method search.run
+        # at fixed seeds, one device dispatch per signature per round
+        t0 = time.time()
+        stats = {}
+        grid = search.run_method_sweep(methods, workloads, plat,
+                                       budget=args.budget, seed=0,
+                                       stats_out=stats)
         for wl in workloads:
-            row = {}
-            for method in ("sparsemap", "sage_like", "random_mapper"):
-                res = search.run(method, wl, plat, budget=args.budget,
-                                 seed=0)
-                row[method] = res.best_edp
+            row = {m: grid[m][wl.name].best_edp for m in methods}
             ours = row["sparsemap"]
             print(f"  {wl.name:>28s}: ours {ours:10.3e}  "
                   f"SAGE-like {row['sage_like'] / ours:6.1f}x  "
                   f"Sparseloop-like {row['random_mapper'] / ours:6.1f}x")
+        print(f"  [{len(workloads) * len(methods)} searches, "
+              f"{stats['rounds']} rounds, {stats['dispatches']} device "
+              f"dispatches, {time.time() - t0:.1f}s]")
     print("\n(EDP = cycles x pJ; larger ratio = larger our advantage)")
 
 

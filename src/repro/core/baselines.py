@@ -4,6 +4,17 @@ Every method consumes the same genome representation (`GenomeSpec`), the
 same batch evaluator and the same evaluation budget, and returns a
 `SearchResult` so convergence curves are directly comparable (Fig. 17/18).
 
+Each optimizer is written as a *request generator* (``*_requests``)
+conforming to the :data:`repro.core.evolution.Requests` protocol: it
+``yield``s every (B, L) genome batch that needs evaluating, is ``send``-ed
+the evaluator's output dict, and returns an extras dict via
+``StopIteration``.  The closed-form functions (``pso``, ``tbpsa``, ...)
+simply drive their generator against one evaluator; ``search.MultiSearch``
+instead round-robins a heterogeneous fleet of generators over shared
+jitted evaluators — optionally concatenating all same-signature pending
+batches into one mega-batch dispatch per round.  ``make_requests`` is the
+registry entry point for drivers.
+
 Prior-work proxies (§V):
 * ``random_mapper``  — Sparseloop-Mapper-like: random mapping sampling under
   a fixed, manually chosen sparse strategy.
@@ -12,21 +23,22 @@ Prior-work proxies (§V):
 
 Classical baselines (Fig. 17): PSO, MCTS, TBPSA, PPO, DQN — compact but
 faithful implementations; they are *expected* to drown in invalid points,
-which is the paper's point.
+which is the paper's point.  (``standard_es`` runs on the DIRECT value
+encoding with its own genome adapter, so it is the one method without a
+request generator over canonical genomes.)
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .encoding import GenomeSpec, all_permutations, cantor_encode
-from .evolution import ESConfig, SearchResult, _Budget, evolve, lhs_init
-from .mapping import N_LEVELS, balanced_mapping
+from .encoding import GenomeSpec
+from .evolution import (ESConfig, Requests, SearchResult, _Budget, _drive,
+                        evolve_requests)
+from .mapping import balanced_mapping
 from .sparse import MAX_FMT_GENES
-from .workload import Workload
 
 
 # ---------------------------------------------------------------- helpers
@@ -38,6 +50,17 @@ def _finish(tracker: _Budget, **extras) -> SearchResult:
                         history=np.asarray(tracker.hist),
                         evals=tracker.evals, valid_evals=tracker.valid,
                         extras=extras)
+
+
+def _run_closed(method: str, spec: GenomeSpec, batch_eval, budget: int,
+                seed: int, platform=None, **kw) -> SearchResult:
+    """Drive a registered request generator to completion against one
+    evaluator — the closed-form path every ``METHODS`` entry uses, so a
+    sequential ``search.run`` and a concurrent ``search.MultiSearch`` task
+    execute literally the same code."""
+    gen, tracker = make_requests(method, spec, platform, budget, seed, **kw)
+    extras = _drive(gen, batch_eval) or {}
+    return _finish(tracker, **extras)
 
 
 def manual_sparse_genes(spec: GenomeSpec) -> Dict[int, int]:
@@ -73,34 +96,35 @@ def fixed_mapping_genes(spec: GenomeSpec, n_pe: int, macs_per_pe: int
 # ---------------------------------------------------------------- proxies
 
 
-def random_mapper(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-                  platform=None) -> SearchResult:
+def random_mapper_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
+                           platform=None) -> Requests:
     """Sparseloop-Mapper-like: uniform random mapping search, sparse
     strategy fixed manually.  (The paper incorporates the manual settings
     into its random sampling space.)"""
     rng = np.random.default_rng(seed)
-    tracker = _Budget(budget)
     fixed = manual_sparse_genes(spec)
     chunk = 512
     while not tracker.exhausted:
-        g = spec.random_genomes(rng, min(chunk, budget - tracker.evals))
+        g = spec.random_genomes(
+            rng, min(chunk, tracker.budget - tracker.evals))
         for k, v in fixed.items():
             g[:, k] = v
-        tracker.register(g, batch_eval(g))
-    return _finish(tracker, method="random_mapper")
+        out = yield g
+        tracker.register(g, out)
+    return dict(method="random_mapper")
 
 
-def sage_like(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-              platform) -> SearchResult:
-    """SAGE-like: sparse-strategy search under a FIXED mapping (the
-    balanced output-stationary mapping).
+def random_mapper(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+                  platform=None) -> SearchResult:
+    return _run_closed("random_mapper", spec, batch_eval, budget, seed,
+                       platform)
 
-    SAGE knows its accelerator template, so the search space excludes
-    format choices that are structurally impossible under the fixed
-    mapping (formats on spatially-unrolled sub-dimensions stay
-    uncompressed), and it starts from the engineer's uncompressed default.
-    What it cannot do — the paper's point — is adapt the mapping itself.
-    """
+
+def _sage_like_setup(spec: GenomeSpec, platform, budget: int, seed: int,
+                     **kw) -> Tuple[ESConfig, Dict[int, int], np.ndarray]:
+    """SAGE-like search space: fixed balanced-OS mapping, format genes of
+    spatially-unrolled sub-dimensions pinned uncompressed, started from the
+    engineer's uncompressed default."""
     from .cost_model import spatial_subdim_indices, tiled_subdims
     fixed = fixed_mapping_genes(spec, platform.n_pe, platform.macs_per_pe)
     # pin format genes of spatially-unrolled sub-dimensions to U
@@ -115,20 +139,34 @@ def sage_like(spec: GenomeSpec, batch_eval, budget: int, seed: int,
             gidx = i + max(MAX_FMT_GENES - k, 0)
             if 0 <= gidx < MAX_FMT_GENES:
                 fixed[seg.start + gidx] = 0
-    cfg = ESConfig(budget=budget, seed=seed, use_hshi=False,
-                   use_custom_ops=False, pop_size=64)
-    return evolve(spec, batch_eval, cfg, fixed_genes=fixed,
-                  seeds=genome0[None, :])
+    params = dict(use_hshi=False, use_custom_ops=False, pop_size=64)
+    params.update(kw)
+    cfg = ESConfig(budget=budget, seed=seed, **params)
+    return cfg, fixed, genome0
+
+
+def sage_like(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+              platform, **kw) -> SearchResult:
+    """SAGE-like: sparse-strategy search under a FIXED mapping (the
+    balanced output-stationary mapping).
+
+    SAGE knows its accelerator template, so the search space excludes
+    format choices that are structurally impossible under the fixed
+    mapping (formats on spatially-unrolled sub-dimensions stay
+    uncompressed), and it starts from the engineer's uncompressed default.
+    What it cannot do — the paper's point — is adapt the mapping itself.
+    """
+    return _run_closed("sage_like", spec, batch_eval, budget, seed,
+                       platform, **kw)
 
 
 # ---------------------------------------------------------------- PSO
 
 
-def pso(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-        platform=None, n_particles: int = 50,
-        w: float = 0.72, c1: float = 1.49, c2: float = 1.49) -> SearchResult:
+def pso_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
+                 platform=None, n_particles: int = 50, w: float = 0.72,
+                 c1: float = 1.49, c2: float = 1.49) -> Requests:
     rng = np.random.default_rng(seed)
-    tracker = _Budget(budget)
     L = spec.length
     ub = spec.gene_ub.astype(np.float64)
     x = rng.random((n_particles, L)) * ub
@@ -139,8 +177,9 @@ def pso(spec: GenomeSpec, batch_eval, budget: int, seed: int,
     gbest_f = np.inf
     while not tracker.exhausted:
         g = spec.clip(x.astype(np.int64))
-        edp = tracker.register(g, batch_eval(g))
-        improved = edp < pbest_f
+        out = yield g
+        edp = tracker.register(g, out)
+        improved = edp < pbest_f            # NaN tail compares False
         pbest_f = np.where(improved, edp, pbest_f)
         pbest_x[improved] = x[improved]
         i = int(np.argmin(pbest_f))
@@ -149,20 +188,25 @@ def pso(spec: GenomeSpec, batch_eval, budget: int, seed: int,
         r1, r2 = rng.random((2, n_particles, L))
         v = w * v + c1 * r1 * (pbest_x - x) + c2 * r2 * (gbest_x[None] - x)
         x = np.clip(x + v, 0, ub - 1e-6)
-    return _finish(tracker, method="pso")
+    return dict(method="pso")
+
+
+def pso(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+        platform=None, **kw) -> SearchResult:
+    return _run_closed("pso", spec, batch_eval, budget, seed, platform,
+                       **kw)
 
 
 # ---------------------------------------------------------------- MCTS
 
 
-def mcts(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-         platform=None, max_children: int = 8, c_ucb: float = 1.4,
-         rollout_batch: int = 16) -> SearchResult:
+def mcts_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
+                  platform=None, max_children: int = 8, c_ucb: float = 1.4,
+                  rollout_batch: int = 16) -> Requests:
     """Gene-by-gene tree search with UCB1 selection and random rollouts.
     Large per-gene ranges are subsampled to ``max_children`` branches
     (standard progressive-widening practice)."""
     rng = np.random.default_rng(seed)
-    tracker = _Budget(budget)
     L = spec.length
 
     class Node:
@@ -209,10 +253,11 @@ def mcts(spec: GenomeSpec, batch_eval, budget: int, seed: int,
             prefix.append(int(best_v))
             node = node.children[int(best_v)]
         # rollout: complete randomly (batched)
-        n = min(rollout_batch, budget - tracker.evals)
+        n = min(rollout_batch, tracker.budget - tracker.evals)
         g = spec.random_genomes(rng, n)
         g[:, :len(prefix)] = np.asarray(prefix, dtype=np.int64)[None, :]
-        edp = tracker.register(g, batch_eval(g))
+        out = yield g
+        edp = tracker.register(g, out)
         r = max(reward(float(e)) for e in edp)
         # backprop along path
         node = root
@@ -225,47 +270,59 @@ def mcts(spec: GenomeSpec, batch_eval, budget: int, seed: int,
                 node.value += r
             else:
                 break
-    return _finish(tracker, method="mcts")
+    return dict(method="mcts")
+
+
+def mcts(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+         platform=None, **kw) -> SearchResult:
+    return _run_closed("mcts", spec, batch_eval, budget, seed, platform,
+                       **kw)
 
 
 # ---------------------------------------------------------------- TBPSA
 
 
-def tbpsa(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-          platform=None, mu: int = 12, llambda: int = 48) -> SearchResult:
+def tbpsa_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
+                   platform=None, mu: int = 12, llambda: int = 48
+                   ) -> Requests:
     """Test-based population-size-adaptation ES (nevergrad's TBPSA family):
     gaussian search distribution in the continuous relaxation, mean/state
     updated from the mu best of each lambda batch."""
     rng = np.random.default_rng(seed)
-    tracker = _Budget(budget)
     L = spec.length
     ub = spec.gene_ub.astype(np.float64)
     mean = ub / 2.0
     sigma = ub / 4.0
     while not tracker.exhausted:
-        n = min(llambda, budget - tracker.evals)
+        n = min(llambda, tracker.budget - tracker.evals)
         x = mean[None] + rng.standard_normal((n, L)) * sigma[None]
         g = spec.clip(np.clip(x, 0, ub - 1e-6).astype(np.int64))
-        edp = tracker.register(g, batch_eval(g))
+        out = yield g
+        edp = tracker.register(g, out)
         order = np.argsort(edp)[:mu]
         sel = x[order]
         new_mean = sel.mean(axis=0)
         sigma = 0.9 * sigma + 0.1 * (sel.std(axis=0) + 1e-3)
         mean = np.clip(new_mean, 0, ub - 1e-6)
-    return _finish(tracker, method="tbpsa")
+    return dict(method="tbpsa")
+
+
+def tbpsa(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+          platform=None, **kw) -> SearchResult:
+    return _run_closed("tbpsa", spec, batch_eval, budget, seed, platform,
+                       **kw)
 
 
 # ---------------------------------------------------------------- PPO-lite
 
 
-def ppo(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-        platform=None, batch: int = 64, lr: float = 0.15,
-        clip_eps: float = 0.2, epochs: int = 3) -> SearchResult:
+def ppo_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
+                 platform=None, batch: int = 64, lr: float = 0.15,
+                 clip_eps: float = 0.2, epochs: int = 3) -> Requests:
     """Factorized-categorical policy over genes, trained with the clipped
     PPO objective on a normalized -log10(EDP) reward; invalid designs give
     reward -1 (the sparse-reward regime the paper §I points at)."""
     rng = np.random.default_rng(seed)
-    tracker = _Budget(budget)
     L = spec.length
     maxv = int(spec.gene_ub.max())
     logits = np.zeros((L, maxv))
@@ -279,14 +336,15 @@ def ppo(spec: GenomeSpec, batch_eval, budget: int, seed: int,
         return e / e.sum(axis=-1, keepdims=True)
 
     while not tracker.exhausted:
-        n = min(batch, budget - tracker.evals)
+        n = min(batch, tracker.budget - tracker.evals)
         pi = softmax(logits)                       # (L, V)
         # vectorized inverse-CDF sampling: one uniform matrix, all genes
         cdf = np.cumsum(pi, axis=-1)               # (L, V)
         u = rng.random((n, L))
         g = (u[:, :, None] > cdf[None, :, :]).sum(axis=-1)
         g = np.minimum(g, spec.gene_ub[None, :] - 1).astype(np.int64)
-        edp = tracker.register(g, batch_eval(g))
+        out = yield g
+        edp = tracker.register(g, out)
         rew = np.where(np.isfinite(edp), 0.0, -1.0)
         ok = np.isfinite(edp)
         if ok.any():
@@ -310,30 +368,35 @@ def ppo(spec: GenomeSpec, batch_eval, budget: int, seed: int,
             logits += lr * grad.mean(axis=0)
             for j in range(L):
                 logits[j, spec.gene_ub[j]:] = -1e9
-    return _finish(tracker, method="ppo")
+    return dict(method="ppo")
+
+
+def ppo(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+        platform=None, **kw) -> SearchResult:
+    return _run_closed("ppo", spec, batch_eval, budget, seed, platform,
+                       **kw)
 
 
 # ---------------------------------------------------------------- DQN-lite
 
 
-def dqn(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-        platform=None, batch: int = 32, lr: float = 0.2,
-        eps_start: float = 0.9, eps_end: float = 0.05,
-        gamma: float = 0.98) -> SearchResult:
+def dqn_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
+                 platform=None, batch: int = 32, lr: float = 0.2,
+                 eps_start: float = 0.9, eps_end: float = 0.05,
+                 gamma: float = 0.98) -> Requests:
     """Sequential gene-picking MDP with a factored Q table (gene position x
     value), epsilon-greedy, TD(0) bootstrapping along the episode."""
     rng = np.random.default_rng(seed)
-    tracker = _Budget(budget)
     L = spec.length
     maxv = int(spec.gene_ub.max())
     q = np.zeros((L, maxv))
     for j in range(L):
         q[j, spec.gene_ub[j]:] = -1e9
     step = 0
-    total_steps = max(budget // batch, 1)
+    total_steps = max(tracker.budget // batch, 1)
     while not tracker.exhausted:
         eps = eps_start + (eps_end - eps_start) * min(step / total_steps, 1)
-        n = min(batch, budget - tracker.evals)
+        n = min(batch, tracker.budget - tracker.evals)
         # vectorized epsilon-greedy: out-of-range q is -1e9, so the full-
         # row argmax is the masked argmax
         explore = rng.random((n, L)) < eps
@@ -341,7 +404,8 @@ def dqn(spec: GenomeSpec, batch_eval, budget: int, seed: int,
                                  dtype=np.int64)
         greedy = np.argmax(q, axis=1).astype(np.int64)
         g = np.where(explore, rand_vals, greedy[None, :])
-        edp = tracker.register(g, batch_eval(g))
+        out = yield g
+        edp = tracker.register(g, out)
         rew = np.where(np.isfinite(edp), 0.0, -1.0)
         ok = np.isfinite(edp)
         rew[ok] = -np.log10(np.maximum(edp[ok], 1.0)) / 10.0
@@ -351,7 +415,13 @@ def dqn(spec: GenomeSpec, batch_eval, budget: int, seed: int,
                     gamma * np.max(q[j + 1, :spec.gene_ub[j + 1]])
                 q[j, g[i, j]] += lr * (target - q[j, g[i, j]])
         step += 1
-    return _finish(tracker, method="dqn")
+    return dict(method="dqn")
+
+
+def dqn(spec: GenomeSpec, batch_eval, budget: int, seed: int,
+        platform=None, **kw) -> SearchResult:
+    return _run_closed("dqn", spec, batch_eval, budget, seed, platform,
+                       **kw)
 
 
 # ---------------------------------------------------------------- registry
@@ -387,8 +457,8 @@ def sparsemap_setup(spec: GenomeSpec, platform, budget: int, seed: int,
 
 def sparsemap(spec: GenomeSpec, batch_eval, budget: int, seed: int,
               platform=None, **kw) -> SearchResult:
-    cfg, seeds = sparsemap_setup(spec, platform, budget, seed, **kw)
-    return evolve(spec, batch_eval, cfg, seeds=seeds)
+    return _run_closed("sparsemap", spec, batch_eval, budget, seed,
+                       platform, **kw)
 
 
 def standard_es(spec: GenomeSpec, batch_eval, budget: int, seed: int,
@@ -403,9 +473,67 @@ def pfce_es(spec: GenomeSpec, batch_eval, budget: int, seed: int,
             platform=None) -> SearchResult:
     """Fig. 18 curve 'PFCE': prime-factor + cantor encoding only (the
     encoding is intrinsic to GenomeSpec; custom operators + HSHI off)."""
+    return _run_closed("pfce_es", spec, batch_eval, budget, seed, platform)
+
+
+# -------- request-generator factories (the MultiSearch entry points)
+
+
+def _factory_sparsemap(spec: GenomeSpec, platform, budget: int, seed: int,
+                       **kw) -> Tuple[Requests, _Budget]:
+    cfg, seeds = sparsemap_setup(spec, platform, budget, seed, **kw)
+    tracker = _Budget(cfg.budget)
+    return evolve_requests(spec, cfg, tracker, seeds=seeds), tracker
+
+
+def _factory_pfce_es(spec: GenomeSpec, platform, budget: int, seed: int,
+                     **kw) -> Tuple[Requests, _Budget]:
     cfg = ESConfig(budget=budget, seed=seed, use_hshi=False,
-                   use_custom_ops=False)
-    return evolve(spec, batch_eval, cfg)
+                   use_custom_ops=False, **kw)
+    tracker = _Budget(cfg.budget)
+    return evolve_requests(spec, cfg, tracker), tracker
+
+
+def _factory_sage_like(spec: GenomeSpec, platform, budget: int, seed: int,
+                       **kw) -> Tuple[Requests, _Budget]:
+    cfg, fixed, genome0 = _sage_like_setup(spec, platform, budget, seed,
+                                           **kw)
+    tracker = _Budget(cfg.budget)
+    return evolve_requests(spec, cfg, tracker, fixed_genes=fixed,
+                           seeds=genome0[None, :]), tracker
+
+
+def _gen_factory(gen_fn: Callable) -> Callable:
+    def factory(spec: GenomeSpec, platform, budget: int, seed: int,
+                **kw) -> Tuple[Requests, _Budget]:
+        tracker = _Budget(budget)
+        return gen_fn(spec, tracker, seed, platform=platform, **kw), tracker
+    return factory
+
+
+#: method name -> (spec, platform, budget, seed, **kw) -> (Requests, _Budget)
+REQUEST_METHODS: Dict[str, Callable] = {
+    "sparsemap": _factory_sparsemap,
+    "pfce_es": _factory_pfce_es,
+    "sage_like": _factory_sage_like,
+    "random_mapper": _gen_factory(random_mapper_requests),
+    "pso": _gen_factory(pso_requests),
+    "mcts": _gen_factory(mcts_requests),
+    "tbpsa": _gen_factory(tbpsa_requests),
+    "ppo": _gen_factory(ppo_requests),
+    "dqn": _gen_factory(dqn_requests),
+}
+
+
+def make_requests(method: str, spec: GenomeSpec, platform, budget: int,
+                  seed: int, **kw) -> Tuple[Requests, _Budget]:
+    """Build the (request generator, budget tracker) pair for ``method``.
+    Every method here can be driven sequentially (``_drive``) or as part
+    of a concurrent ``search.MultiSearch`` fleet."""
+    if method not in REQUEST_METHODS:
+        raise KeyError(f"method {method!r} has no request generator; "
+                       f"have {sorted(REQUEST_METHODS)}")
+    return REQUEST_METHODS[method](spec, platform, budget, seed, **kw)
 
 
 METHODS: Dict[str, Callable] = {

@@ -85,11 +85,18 @@ class _Budget:
         self.best = np.inf
         self.best_genome: Optional[np.ndarray] = None
         self.hist: List[float] = []
+        self.last_n = 0                 # rows counted by the last register
 
     def register(self, genomes: np.ndarray, out: Dict) -> np.ndarray:
-        """Record a batch; returns EDP array (inf where invalid).
-        Truncates the batch if it would exceed the budget."""
+        """Record a batch; returns a full-length EDP array: ``inf`` where
+        a row was evaluated and invalid, ``NaN`` where the batch was
+        truncated by the budget and the row was NOT counted.  The NaN tail
+        is deliberate — selection code must not mistake budget truncation
+        for "evaluated and invalid" (both compare False and sort last, but
+        only NaN rows may be dropped from learning updates).  The number
+        of counted rows is also exposed as ``last_n``."""
         n = min(len(genomes), self.budget - self.evals)
+        self.last_n = n
         valid = np.asarray(out["valid"])[:n]
         edp = np.asarray(out["edp"], dtype=np.float64)[:n].copy()
         edp[~valid] = np.inf
@@ -103,7 +110,7 @@ class _Budget:
             self.hist.extend(curve.tolist())
             self.evals += n
             self.valid += int(valid.sum())
-        full = np.full(len(genomes), np.inf)
+        full = np.full(len(genomes), np.nan)
         full[:n] = edp
         return full
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import lru_cache, partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,9 +74,15 @@ def _bucket(n: int, size: int = 16) -> int:
 
 
 # Registry of live jitted evaluators, keyed by compilation signature
-# (ndims, padded prime count) — used to count actual XLA compilations
-# (one per distinct traced argument-shape set per signature).
-_JIT_FNS: Dict[Tuple[int, int], object] = {}
+# (ndims, padded prime count, kind) where kind is "bcast" (workload
+# constants broadcast over the batch) or "stacked" (per-row constants,
+# the mega-batch kernel) — used to count actual XLA compilations (one
+# per distinct traced argument-shape set per signature).
+_JIT_FNS: Dict[Tuple[int, int, str], object] = {}
+
+# Device dispatches issued through JaxCostModel / eval_stacked since the
+# last reset — the per-round dispatch-count benchmark hook.
+_DISPATCHES = 0
 
 
 def compilation_count() -> int:
@@ -94,21 +100,39 @@ def compilation_count() -> int:
 
 def compile_signatures() -> Tuple[Tuple[int, int], ...]:
     """The (ndims, prime-bucket) signatures built so far."""
-    return tuple(sorted(_JIT_FNS))
+    return tuple(sorted({(k[0], k[1]) for k in _JIT_FNS}))
+
+
+def dispatch_count() -> int:
+    """Device dispatches issued since the last reset (each batched
+    evaluator call — per-task or mega-batch — is one dispatch)."""
+    return _DISPATCHES
+
+
+def reset_dispatch_count() -> None:
+    global _DISPATCHES
+    _DISPATCHES = 0
 
 
 def clear_compile_cache() -> None:
     """Drop all shared jitted evaluators (benchmarking hook)."""
     _jitted_eval.cache_clear()
     _JIT_FNS.clear()
+    reset_dispatch_count()
 
 
 # ---------------------------------------------------------------- kernel
 
 
-@lru_cache(maxsize=16)
-def _jitted_eval(d: int, n_primes_pad: int):
-    """Build the jitted batch evaluator for (ndims=d, padded prime count)."""
+@lru_cache(maxsize=32)
+def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
+    """Build the jitted batch evaluator for (ndims=d, padded prime count).
+
+    With ``stacked=False`` the workload/platform quantities are broadcast
+    over the batch (one workload per call); with ``stacked=True`` they are
+    batched per row, so rows belonging to *different* workloads and
+    platforms can be concatenated into one mega-batch and evaluated in a
+    single device dispatch (``eval_stacked``)."""
     nl = N_LEVELS * d
     perm_table = jnp.asarray(all_permutations(d), jnp.int32)
     store_outer_lv = jnp.asarray(STORE_OUTER)       # (3 stores, 5 levels)
@@ -284,10 +308,9 @@ def _jitted_eval(d: int, n_primes_pad: int):
                     edp=jnp.where(valid, edp, big),
                     log10_edp=jnp.where(valid, log10_edp, big))
 
-    batched = jax.vmap(eval_one,
-                       in_axes=(0, 0, 0, 0) + (None,) * 8)
-    fn = jax.jit(batched)
-    _JIT_FNS[(d, n_primes_pad)] = fn
+    in_axes = (0,) * 12 if stacked else (0, 0, 0, 0) + (None,) * 8
+    fn = jax.jit(jax.vmap(eval_one, in_axes=in_axes))
+    _JIT_FNS[(d, n_primes_pad, "stacked" if stacked else "bcast")] = fn
     return fn
 
 
@@ -319,19 +342,24 @@ class JaxCostModel:
         for i, (dd, p) in enumerate(spec.primes):
             primes[i] = p
             prime_dim[i] = dim_idx[dd]
-        self._primes = jnp.asarray(primes)
-        self._prime_dim = jnp.asarray(prime_dim)
-        self._relevance = jnp.asarray(
-            [[dim in t.dims for dim in wl.dim_order] for t in wl.tensors],
-            bool)
-        self._densities = jnp.asarray(
-            [wl.density_of(t.name) for t in wl.tensors], jnp.float32)
-        self._full_elems = jnp.asarray(
-            [t.size(wl.dim_sizes) for t in wl.tensors], jnp.float32)
-        self._total_macs = jnp.float32(wl.macs)
-        self._z_onehot = jnp.asarray(
-            [1.0 if t.is_output else 0.0 for t in wl.tensors], jnp.float32)
-        self._plat = jnp.asarray(platform_vector(platform))
+        # numpy copies kept for eval_stacked (per-row tiling across a
+        # heterogeneous mega-batch); jnp copies feed the broadcast kernel
+        self._np_consts = (
+            primes,
+            prime_dim,
+            np.asarray([[dim in t.dims for dim in wl.dim_order]
+                        for t in wl.tensors], bool),
+            np.asarray([wl.density_of(t.name) for t in wl.tensors],
+                       np.float32),
+            np.asarray([t.size(wl.dim_sizes) for t in wl.tensors],
+                       np.float32),
+            np.float32(wl.macs),
+            np.asarray([1.0 if t.is_output else 0.0 for t in wl.tensors],
+                       np.float32),
+            platform_vector(platform))
+        (self._primes, self._prime_dim, self._relevance, self._densities,
+         self._full_elems, self._total_macs, self._z_onehot, self._plat) = \
+            [jnp.asarray(c) for c in self._np_consts]
 
         self._fn = _jitted_eval(d, self.n_pad)
         s = spec.segments
@@ -346,26 +374,123 @@ class JaxCostModel:
         """The (ndims, prime-bucket) compilation signature."""
         return (self.d, self.n_pad)
 
-    def __call__(self, genomes) -> Dict[str, np.ndarray]:
-        """genomes: (B, L) ints -> dict of (B,) arrays.  Pads the batch to
-        the next power of two and the prime axis to its bucket."""
+    def _prepare(self, genomes: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Slice a (B, L) genome batch into the kernel's (perm, tiling,
+        fmt, sg) inputs, padding the prime axis to its bucket.  For one
+        compilation signature these arrays have identical trailing shapes
+        across workloads — the property mega-batch stacking relies on."""
         genomes = np.asarray(genomes, dtype=np.int32)
         n = len(genomes)
-        padded = max(64, 1 << max(0, (n - 1)).bit_length())
-        if padded != n:
-            pad = np.zeros((padded - n, genomes.shape[1]), dtype=np.int32)
-            genomes = np.concatenate([genomes, pad], axis=0)
         perm = genomes[:, self._sl_perm[0]:self._sl_perm[1]]
         til = genomes[:, self._sl_til[0]:self._sl_til[1]]
         if self.n_pad != self.n_primes:
             til = np.concatenate(
-                [til, np.zeros((padded, self.n_pad - self.n_primes),
+                [til, np.zeros((n, self.n_pad - self.n_primes),
                                dtype=np.int32)], axis=1)
         fmt = np.stack([genomes[:, a:b] for a, b in self._sl_fmt], axis=1)
         sg = genomes[:, self._sl_sg[0]:self._sl_sg[1]]
+        return perm, til, fmt, sg
+
+    def __call__(self, genomes) -> Dict[str, np.ndarray]:
+        """genomes: (B, L) ints -> dict of (B,) arrays.  Pads the batch to
+        the next power of two and the prime axis to its bucket."""
+        global _DISPATCHES
+        n = len(genomes)
+        padded = _pad_batch(n)
+        perm, til, fmt, sg = self._prepare(genomes)
+        if padded != n:
+            perm, til, fmt, sg = (
+                np.concatenate(
+                    [a, np.zeros((padded - n,) + a.shape[1:], np.int32)],
+                    axis=0) for a in (perm, til, fmt, sg))
+        _DISPATCHES += 1
         out = self._fn(jnp.asarray(perm), jnp.asarray(til),
                        jnp.asarray(fmt), jnp.asarray(sg),
                        self._primes, self._prime_dim, self._relevance,
                        self._densities, self._full_elems, self._total_macs,
                        self._z_onehot, self._plat)
-        return {k: np.asarray(v)[:n] for k, v in out.items()}
+        return _canonical({k: np.asarray(v)[:n] for k, v in out.items()})
+
+
+def _pad_batch(n: int) -> int:
+    """Batch-axis padding shared by every dispatch path: next power of
+    two, floor 64 — ES populations and the baselines' odd native batch
+    sizes (48, 50, 64) all land on the same few warm shapes."""
+    return max(64, 1 << max(0, (n - 1)).bit_length())
+
+
+def _canonical(out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Recompute the derived outputs (edp, log10_edp) in numpy from the
+    kernel's float32 cycles/energy.  XLA is free to fuse the final
+    ``cycles * energy`` differently in the broadcast vs stacked kernel
+    (observed: 1-ULP drift), so deriving them outside the jit makes every
+    dispatch path bit-identical for the same rows."""
+    cycles = out["cycles"]
+    energy = out["energy_pj"]
+    with np.errstate(over="ignore"):
+        out["edp"] = cycles * energy
+        out["log10_edp"] = (np.log10(np.maximum(cycles, 1e-30)) +
+                            np.log10(np.maximum(energy, 1e-30))
+                            ).astype(cycles.dtype)
+    return out
+
+
+def eval_stacked(models: Sequence["JaxCostModel"],
+                 batches: Sequence[np.ndarray],
+                 pad_floor: int = 0) -> List[Dict[str, np.ndarray]]:
+    """Evaluate several (model, genome-batch) pairs sharing one
+    compilation signature in a SINGLE device dispatch.
+
+    The batches are concatenated along the batch axis, each model's
+    workload/platform constants are tiled across its rows, and the
+    stacked-constants kernel variant runs once on the padded mega-batch;
+    the output dict is then sliced back per input pair.  Rows are
+    evaluated by exactly the same per-row computation as the broadcast
+    kernel, so results are bit-identical to per-model calls.
+
+    ``pad_floor`` raises the batch padding beyond the power-of-two rule —
+    drivers pass the watermark of earlier rounds so a shrinking fleet
+    keeps hitting an already-compiled mega-batch shape instead of tracing
+    a new one (padding rows are zero genomes, sliced off)."""
+    global _DISPATCHES
+    if len(models) != len(batches):
+        raise ValueError("models and batches must pair up")
+    sig = models[0].signature
+    if any(m.signature != sig for m in models):
+        raise ValueError(
+            f"eval_stacked needs one shared signature, got "
+            f"{sorted({m.signature for m in models})}")
+    sizes = [len(b) for b in batches]
+    total = sum(sizes)
+    padded = max(_pad_batch(total), int(pad_floor))
+    preps = [m._prepare(b) for m, b in zip(models, batches)]
+    ins = []
+    for cols in zip(*preps):
+        arr = np.concatenate(cols, axis=0)
+        if padded != total:
+            arr = np.concatenate(
+                [arr, np.zeros((padded - total,) + arr.shape[1:],
+                               np.int32)], axis=0)
+        ins.append(arr)
+    consts = []
+    for j in range(len(models[0]._np_consts)):
+        rows = [np.broadcast_to(m._np_consts[j],
+                                (n,) + np.shape(m._np_consts[j]))
+                for m, n in zip(models, sizes)]
+        if padded != total:
+            rows.append(np.broadcast_to(
+                models[0]._np_consts[j],
+                (padded - total,) + np.shape(models[0]._np_consts[j])))
+        consts.append(np.concatenate(rows, axis=0))
+    fn = _jitted_eval(sig[0], sig[1], stacked=True)
+    _DISPATCHES += 1
+    out = fn(*[jnp.asarray(a) for a in ins],
+             *[jnp.asarray(c) for c in consts])
+    flat = _canonical({k: np.asarray(v) for k, v in out.items()})
+    sliced: List[Dict[str, np.ndarray]] = []
+    off = 0
+    for n in sizes:
+        sliced.append({k: v[off:off + n] for k, v in flat.items()})
+        off += n
+    return sliced

@@ -6,35 +6,44 @@ platform) under an evaluation budget.
     print(res.best_edp, res.valid_fraction)
     design = search.decode_best(workload, res)
 
-Evaluator instances are cached per (workload, platform) because jit
-compilation of the batch cost model dominates small searches.
+Evaluator instances are cached per (workload content, platform) because
+jit compilation of the batch cost model dominates small searches; the key
+is :meth:`Workload.cache_key`, so content-equal workloads share one
+evaluator and a recycled object id can never alias a stale entry.
 
-Multi-workload sweeps use :class:`MultiSearch`, which runs one ES
-population per (workload, platform) pair *concurrently*: every pending
-population is round-robined through the shared jitted evaluator, ordered
-by (ndims, prime-bucket) compilation signature, and — with
-``align_signatures=True`` — each workload's prime axis is padded up to the
-largest bucket among its same-ndims peers so the whole group shares ONE
-XLA compilation instead of tracing per workload:
+Concurrent sweeps use :class:`MultiSearch`, the repo's method-agnostic
+search runtime: every task — any (method, workload, platform) triple whose
+method has a request generator in ``baselines.REQUEST_METHODS`` — is a
+generator that yields genome batches, and each round every pending task's
+batch is evaluated and its generator advanced.  Tasks are ordered by
+(ndims, prime-bucket) compilation signature; with ``align_signatures=True``
+each workload's prime axis is padded up to the largest bucket among its
+same-ndims peers so the whole group shares ONE XLA compilation, and with
+``stack_batches=True`` all same-signature pending batches are concatenated
+into one padded mega-batch per round — a single device dispatch per
+signature instead of one per task:
 
     results = search.run_sweep([wl_a, wl_b], "cloud", budget=20_000)
+    grid = search.run_method_sweep(["sparsemap", "pso", "random_mapper"],
+                                   [wl_a, wl_b], "cloud", budget=20_000)
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from . import accel
-from .baselines import METHODS, sparsemap_setup
+from . import accel, jax_cost
+from .baselines import METHODS, REQUEST_METHODS, make_requests
 from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
-from .evolution import SearchResult, _Budget, evolve_requests
+from .evolution import SearchResult, _Budget
 from .jax_cost import JaxCostModel, _bucket
 from .workload import Workload
 
-_CACHE: Dict[Tuple[int, str, Optional[int]],
+_CACHE: Dict[Tuple[Tuple, str, Optional[int]],
              Tuple[GenomeSpec, JaxCostModel]] = {}
 
 
@@ -47,7 +56,7 @@ def get_evaluator(workload: Workload, platform: Union[str, accel.Platform],
                   n_pad: Optional[int] = None
                   ) -> Tuple[GenomeSpec, JaxCostModel]:
     plat = _platform(platform)
-    key = (id(workload), plat.name, n_pad)
+    key = (workload.cache_key(), plat.name, n_pad)
     if key not in _CACHE:
         spec = GenomeSpec(workload)
         _CACHE[key] = (spec, JaxCostModel(spec, plat, n_pad=n_pad))
@@ -57,7 +66,6 @@ def get_evaluator(workload: Workload, platform: Union[str, accel.Platform],
 def clear_cache() -> None:
     """Drop cached evaluators AND the shared jitted kernels (benchmark
     hook for counting compilations from a cold start)."""
-    from . import jax_cost
     _CACHE.clear()
     jax_cost.clear_compile_cache()
 
@@ -92,27 +100,44 @@ def report_best(workload: Workload, platform: Union[str, accel.Platform],
 
 @dataclasses.dataclass
 class SearchTask:
-    """One (workload, platform) search in a :class:`MultiSearch` fleet."""
+    """One (method, workload, platform) search in a :class:`MultiSearch`
+    fleet.  ``method`` must have a request generator
+    (``baselines.REQUEST_METHODS``); ``method_kw`` is forwarded to its
+    factory (``es_kw`` is the pre-method-agnostic alias and is merged in).
+    """
     workload: Workload
     platform: Union[str, accel.Platform] = "cloud"
     budget: int = 20_000
     seed: int = 0
     name: Optional[str] = None
+    method: str = "sparsemap"
+    method_kw: Dict = dataclasses.field(default_factory=dict)
     es_kw: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.method not in REQUEST_METHODS:
+            raise KeyError(
+                f"method {self.method!r} has no request generator; "
+                f"have {sorted(REQUEST_METHODS)}")
+        if self.es_kw:
+            self.method_kw = {**self.es_kw, **self.method_kw}
 
     def resolved_name(self) -> str:
         if self.name:
             return self.name
-        return f"{self.workload.name}@{_platform(self.platform).name}"
+        base = f"{self.workload.name}@{_platform(self.platform).name}"
+        return base if self.method == "sparsemap" else \
+            f"{self.method}:{base}"
 
 
 @dataclasses.dataclass
 class _TaskState:
     name: str
-    gen: object                      # the evolve_requests generator
+    gen: object                      # the method's request generator
     tracker: _Budget
     ev: JaxCostModel
     natural: Tuple[int, int]
+    method: str
     req: Optional[np.ndarray] = None
     extras: Optional[Dict] = None
 
@@ -122,25 +147,39 @@ class _TaskState:
 
 
 class MultiSearch:
-    """Run one SparseMap ES population per (workload, platform) pair
-    concurrently.
+    """Run a fleet of (method, workload, platform) searches concurrently.
 
-    Each task's engine is an :func:`evolve_requests` generator; every
-    round, each pending population's next batch is evaluated and the
-    generator advanced, with tasks ordered by compilation signature so
-    same-signature populations hit the shared jitted evaluator
-    back-to-back.  With ``align_signatures=True`` (default), each
-    workload's prime axis is padded up to the largest bucket among its
-    same-ndims peers, collapsing the group onto one (ndims, bucket)
-    signature — a sweep over the paper's workload table then reuses
-    compilations instead of paying XLA tracing per workload (the padding
-    primes are 1.0 and numerically inert).
+    Each task's engine is a request generator (``evolve_requests`` for
+    SparseMap populations, ``baselines.*_requests`` for the baseline
+    optimizers); every round, each pending task's next batch is evaluated
+    and the generator advanced, with tasks ordered by compilation
+    signature so same-signature tasks hit the shared jitted evaluator
+    back-to-back.
 
-    After :meth:`run`, ``stats`` holds the round count plus the aligned
-    and natural signature sets.
+    With ``align_signatures=True`` (default), each workload's prime axis
+    is padded up to the largest bucket among its same-ndims peers,
+    collapsing the group onto one (ndims, bucket) signature — a sweep over
+    the paper's workload table then reuses compilations instead of paying
+    XLA tracing per workload (the padding primes are 1.0 and numerically
+    inert).
+
+    With ``stack_batches=True``, every round concatenates all
+    same-signature pending batches into ONE padded mega-batch and issues a
+    single device dispatch per signature (``jax_cost.eval_stacked``),
+    slicing the results back per task.  Rows run through the same per-row
+    kernel math either way, so stacked and per-task dispatch give
+    bit-identical results; the baselines' odd native batch sizes (48, 50,
+    64) simply become rows of the shared power-of-two-padded mega-batch.
+
+    After :meth:`run`, ``stats`` holds the round count, device-dispatch
+    count, and the aligned and natural signature sets.  Duplicate resolved
+    task names are made explicit: every colliding name gets a ``#k``
+    suffix (``name#0``, ``name#1``, ...), so no two tasks ever silently
+    share a results key.
     """
 
-    def __init__(self, tasks: Iterable, align_signatures: bool = True):
+    def __init__(self, tasks: Iterable, align_signatures: bool = True,
+                 stack_batches: bool = False):
         norm: List[SearchTask] = []
         for t in tasks:
             if isinstance(t, SearchTask):
@@ -153,7 +192,38 @@ class MultiSearch:
             raise ValueError("MultiSearch needs at least one task")
         self.tasks = norm
         self.align_signatures = align_signatures
+        self.stack_batches = stack_batches
+        self.final_names: List[str] = self._resolve_names(norm)
         self.stats: Dict = {}
+
+    @staticmethod
+    def _resolve_names(tasks: Sequence[SearchTask]) -> List[str]:
+        base = [t.resolved_name() for t in tasks]
+        dup = {n for n, c in Counter(base).items() if c > 1}
+        taken = set(base)       # every base name reserves its spot
+        next_k: Dict[str, int] = {}
+        names = []
+        for n in base:
+            if n not in dup:
+                names.append(n)
+                continue
+            k = next_k.get(n, 0)
+            while f"{n}#{k}" in taken:  # don't collide with explicit names
+                k += 1
+            next_k[n] = k + 1
+            taken.add(f"{n}#{k}")
+            names.append(f"{n}#{k}")
+        return names
+
+    @staticmethod
+    def _advance(st: _TaskState, out: Dict) -> bool:
+        """Send an evaluation to a task's generator; False when done."""
+        try:
+            st.req = st.gen.send(out)
+            return True
+        except StopIteration as stop:
+            st.extras = stop.value or {}
+            return False
 
     def run(self) -> Dict[str, SearchResult]:
         naturals = [(t.workload.ndims,
@@ -165,28 +235,23 @@ class MultiSearch:
                 pad_for[d] = max(pad_for.get(d, 0), bucket)
 
         states: List[_TaskState] = []
-        seen_names: Dict[str, int] = {}
-        for task, natural in zip(self.tasks, naturals):
+        for task, natural, name in zip(self.tasks, naturals,
+                                       self.final_names):
             plat = _platform(task.platform)
             n_pad = pad_for.get(natural[0]) if self.align_signatures \
                 else None
             if n_pad == natural[1]:
                 n_pad = None        # natural bucket: share the plain entry
             spec, ev = get_evaluator(task.workload, plat, n_pad=n_pad)
-            cfg, seeds = sparsemap_setup(spec, plat, task.budget,
-                                         task.seed, **task.es_kw)
-            tracker = _Budget(cfg.budget)
-            gen = evolve_requests(spec, cfg, tracker, seeds=seeds)
-            name = task.resolved_name()
-            if name in seen_names:
-                seen_names[name] += 1
-                name = f"{name}#{seen_names[name]}"
-            else:
-                seen_names[name] = 0
+            gen, tracker = make_requests(task.method, spec, plat,
+                                         task.budget, task.seed,
+                                         **task.method_kw)
             states.append(_TaskState(name=name, gen=gen, tracker=tracker,
-                                     ev=ev, natural=natural))
+                                     ev=ev, natural=natural,
+                                     method=task.method))
 
-        # group same-signature populations so they share warm compilations
+        # group same-signature tasks so they share warm compilations (and,
+        # when stacking, one mega-batch); stable within a signature
         states.sort(key=lambda s: s.signature)
 
         alive: List[_TaskState] = []
@@ -197,16 +262,49 @@ class MultiSearch:
             except StopIteration as stop:
                 st.extras = stop.value or {}
 
+        # Adaptive per-signature mega-batch shape: the pad floor grows to
+        # the largest padded round immediately (shrinking fleets keep
+        # hitting the warm shape), and decays to the recent maximum after
+        # K consecutive rounds needing at most HALF the current shape —
+        # one extra XLA trace instead of paying mostly-padding kernel
+        # compute every round after a one-off spike (e.g. round-1
+        # calibration probes + random_mapper's 512-row chunks).
+        K = 3
+        pad_hwm: Dict[Tuple[int, int], int] = {}
+        pad_recent: Dict[Tuple[int, int], List[int]] = {}
         rounds = 0
+        dispatch0 = jax_cost.dispatch_count()
         while alive:
             pending: List[_TaskState] = []
-            for st in alive:
-                out = st.ev(st.req)
-                try:
-                    st.req = st.gen.send(out)
-                    pending.append(st)
-                except StopIteration as stop:
-                    st.extras = stop.value or {}
+            if self.stack_batches:
+                groups: Dict[Tuple[int, int], List[_TaskState]] = {}
+                for st in alive:
+                    groups.setdefault(st.signature, []).append(st)
+                for sig in sorted(groups):
+                    grp = groups[sig]
+                    hwm = pad_hwm.get(sig, 0)
+                    outs = jax_cost.eval_stacked(
+                        [s.ev for s in grp], [s.req for s in grp],
+                        pad_floor=hwm)
+                    target = jax_cost._pad_batch(
+                        sum(len(s.req) for s in grp))
+                    hist = pad_recent.setdefault(sig, [])
+                    hist.append(target)
+                    del hist[:-K]
+                    if target > hwm:
+                        pad_hwm[sig] = target
+                        hist.clear()
+                    elif len(hist) == K and \
+                            all(t <= hwm // 2 for t in hist):
+                        pad_hwm[sig] = max(hist)
+                        hist.clear()
+                    for st, out in zip(grp, outs):
+                        if self._advance(st, out):
+                            pending.append(st)
+            else:
+                for st in alive:
+                    if self._advance(st, st.ev(st.req)):
+                        pending.append(st)
             alive = pending
             rounds += 1
 
@@ -215,6 +313,7 @@ class MultiSearch:
             extras = dict(st.extras or {})
             extras["signature"] = st.signature
             extras["natural_signature"] = st.natural
+            extras.setdefault("method", st.method)
             results[st.name] = SearchResult(
                 best_edp=st.tracker.best,
                 best_genome=st.tracker.best_genome,
@@ -224,6 +323,7 @@ class MultiSearch:
                 extras=extras)
         self.stats = dict(
             rounds=rounds,
+            dispatches=jax_cost.dispatch_count() - dispatch0,
             signatures=sorted({s.signature for s in states}),
             natural_signatures=sorted({s.natural for s in states}))
         return results
@@ -232,12 +332,53 @@ class MultiSearch:
 def run_sweep(workloads: Sequence[Workload],
               platform: Union[str, accel.Platform] = "cloud",
               budget: int = 20_000, seed: int = 0,
-              align_signatures: bool = True, **es_kw
-              ) -> Dict[str, SearchResult]:
+              align_signatures: bool = True, stack_batches: bool = False,
+              **es_kw) -> Dict[str, SearchResult]:
     """Convenience wrapper: one concurrent SparseMap search per workload
     (e.g. the paper's Table III list) on a shared platform."""
     ms = MultiSearch(
         [SearchTask(wl, platform, budget=budget, seed=seed,
-                    es_kw=dict(es_kw)) for wl in workloads],
-        align_signatures=align_signatures)
+                    method_kw=dict(es_kw)) for wl in workloads],
+        align_signatures=align_signatures, stack_batches=stack_batches)
     return ms.run()
+
+
+def run_method_sweep(methods: Sequence[str],
+                     workloads: Sequence[Workload],
+                     platform: Union[str, accel.Platform] = "cloud",
+                     budget: int = 20_000, seed: int = 0,
+                     align_signatures: bool = True,
+                     stack_batches: bool = True,
+                     method_kw: Optional[Dict[str, Dict]] = None,
+                     stats_out: Optional[Dict] = None
+                     ) -> Dict[str, Dict[str, SearchResult]]:
+    """The full fig17-style grid — every method on every workload — as ONE
+    concurrent :class:`MultiSearch` fleet, mega-batched per signature by
+    default.  Returns ``{method: {workload_name: SearchResult}}``;
+    ``method_kw`` maps method name -> factory kwargs; ``stats_out``, if
+    given, receives the fleet's ``MultiSearch.stats``."""
+    method_kw = method_kw or {}
+    dup_m = [m for m, c in Counter(methods).items() if c > 1]
+    dup_w = [n for n, c in Counter(w.name for w in workloads).items()
+             if c > 1]
+    if dup_m or dup_w:
+        # the returned {method: {workload_name: ...}} grid would silently
+        # drop one of the colliding searches — refuse instead
+        raise ValueError(
+            f"run_method_sweep needs unique methods and workload names; "
+            f"duplicated methods={dup_m}, workload names={dup_w}")
+    tasks = [SearchTask(wl, platform, budget=budget, seed=seed, method=m,
+                        method_kw=dict(method_kw.get(m, {})))
+             for m in methods for wl in workloads]
+    ms = MultiSearch(tasks, align_signatures=align_signatures,
+                     stack_batches=stack_batches)
+    flat = ms.run()
+    grid: Dict[str, Dict[str, SearchResult]] = {m: {} for m in methods}
+    i = 0
+    for m in methods:
+        for wl in workloads:
+            grid[m][wl.name] = flat[ms.final_names[i]]
+            i += 1
+    if stats_out is not None:
+        stats_out.update(ms.stats)
+    return grid

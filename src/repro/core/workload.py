@@ -76,6 +76,17 @@ class Workload:
     orig_dim_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     # ---- derived -----------------------------------------------------
+    def cache_key(self) -> Tuple:
+        """Hashable content key.  Evaluator caches must key on this, NOT
+        on ``id(workload)``: two content-equal workloads then share one
+        cached evaluator/compilation, and — critically — a recycled object
+        id can never alias a *different* workload after the original is
+        garbage-collected."""
+        return (self.name, self.dim_order,
+                tuple(sorted(self.dim_sizes.items())),
+                self.tensors,
+                tuple(sorted(self.orig_dim_sizes.items())))
+
     @property
     def ndims(self) -> int:
         return len(self.dim_order)

@@ -97,7 +97,7 @@ class RefBudget:
             self.hist.append(self.best)
         self.evals += n
         self.valid += int(valid.sum())
-        full = np.full(len(genomes), np.inf)
+        full = np.full(len(genomes), np.nan)   # NaN = truncated, not counted
         full[:n] = edp
         return full
 

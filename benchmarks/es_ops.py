@@ -1,6 +1,6 @@
 """ES operator micro-benchmark + MultiSearch compilation-sharing checks.
 
-Three benchmarks backing the vectorized/concurrent-engine claims:
+Benchmarks backing the vectorized/concurrent-engine claims:
 
 * ``bench_operators`` — throughput (individuals/s) of the vectorized
   ``mutate`` + ``crossover`` (and HSHI round sampling / best-so-far
@@ -14,6 +14,9 @@ Three benchmarks backing the vectorized/concurrent-engine claims:
   XLA compilations AND fewer device dispatches per round (one padded
   mega-batch per signature) than the sequential equivalent, while
   matching sequential per-method best-EDP exactly at fixed seeds.
+* ``bench_stacked_prep`` — dispatch-prep time of the mega-batch path:
+  the per-(fleet, signature)-epoch constants cache vs rebuilding the
+  tiled per-row constants (broadcast_to + concat) every round.
 
     PYTHONPATH=src python -m benchmarks.es_ops
     PYTHONPATH=src python -m benchmarks.run --only es_ops,multisearch,method_sweep
@@ -127,6 +130,51 @@ def bench_operators(pop_size: int = 100, workload_name: str = "mm3"
     return out
 
 
+def bench_stacked_prep(n_tasks: int = 6, rows_per_task: int = 64,
+                       rounds: int = 50) -> Dict[str, float]:
+    """Dispatch-prep micro-benchmark for the mega-batch path: time per
+    ``eval_stacked`` prep with the per-(fleet, signature)-epoch constants
+    cache vs rebuilding the tiled constants every round (the pre-cache
+    behavior: np.broadcast_to + concat per model per round)."""
+    from repro.configs.paper_workloads import by_name
+    from repro.core import jax_cost, search
+    from repro.core.jax_cost import _pad_batch, _stacked_consts
+
+    wls = [by_name(n) for n in ("mm1", "mm3")]
+    models, batches = [], []
+    rng = np.random.default_rng(0)
+    for i in range(n_tasks):
+        spec, ev = search.get_evaluator(wls[i % len(wls)], "cloud")
+        models.append(ev)
+        batches.append(spec.random_genomes(rng, rows_per_task))
+    sizes = [len(b) for b in batches]
+    padded = _pad_batch(sum(sizes))
+
+    def cached():
+        return _stacked_consts(models, sizes, padded)
+
+    def uncached():
+        jax_cost._STACK_CONSTS.clear()
+        return _stacked_consts(models, sizes, padded)
+
+    cached()                                    # warm the epoch entry
+    cached_cps = _time(cached)
+    uncached_cps = _time(uncached)
+
+    # end-to-end: full eval_stacked rounds on a steady fleet
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        jax_cost.eval_stacked(models, batches)
+    per_round_s = (time.perf_counter() - t0) / rounds
+    hits, misses = jax_cost.stack_prep_counts()
+    return dict(
+        n_tasks=n_tasks, rows_per_task=rows_per_task,
+        cached_preps_per_s=cached_cps, uncached_preps_per_s=uncached_cps,
+        prep_speedup=cached_cps / uncached_cps,
+        eval_round_seconds=per_round_s,
+        prep_hits=hits, prep_misses=misses)
+
+
 def bench_multisearch(budget: int = 1000, seed: int = 0
                       ) -> Dict[str, float]:
     from repro.configs.paper_workloads import by_name
@@ -213,6 +261,13 @@ def main() -> None:
           f"mutate+crossover {ops['speedup']:.1f}x "
           f"({ops['vectorized_pairs_per_s']:.3g} vs "
           f"{ops['reference_pairs_per_s']:.3g} individuals/s)")
+    sp = bench_stacked_prep()
+    print(f"stacked_prep: {sp['n_tasks']} tasks x {sp['rows_per_task']} "
+          f"rows — cached prep {sp['prep_speedup']:.1f}x faster "
+          f"({sp['cached_preps_per_s']:.3g} vs "
+          f"{sp['uncached_preps_per_s']:.3g} preps/s), steady round "
+          f"{sp['eval_round_seconds'] * 1e3:.2f}ms, "
+          f"hits/misses {sp['prep_hits']}/{sp['prep_misses']}")
     ms = bench_multisearch()
     print(f"multisearch: compiles {ms['multi_compiles']} vs sequential "
           f"{ms['seq_compiles']}, signatures {ms['signatures']} vs "

@@ -126,16 +126,30 @@ def table_iv(budget: int = 1500, seed: int = 0,
 
 def fig18_ablation(budget: int = 3000, seed: int = 0,
                    workload_names: Sequence[str] = ("mm3", "conv4"),
-                   platform: str = "cloud") -> List[Dict]:
+                   platform: str = "cloud",
+                   concurrent: bool = True) -> List[Dict]:
     """Fig. 18: standard ES (direct encoding) vs +PFCE vs full SparseMap
-    (+CEOI); convergence curves to CSV."""
+    (+CEOI); convergence curves to CSV.
+
+    All three curves — including the direct-encoding ``standard_es``,
+    whose generator yields canonical rows — now run as ONE mega-batched
+    ``run_method_sweep`` fleet by default; results are identical to the
+    sequential path at fixed seeds."""
     methods = ["standard_es", "pfce_es", "sparsemap"]
+    wls = [by_name(n) for n in workload_names]
+    if concurrent:
+        grid = search.run_method_sweep(methods, wls, platform,
+                                       budget=budget, seed=seed)
+        results = {(m, w.name): grid[m][w.name]
+                   for m in methods for w in wls}
+    else:
+        results = {(m, w.name): search.run(m, w, platform, budget=budget,
+                                           seed=seed)
+                   for m in methods for w in wls}
     rows, out = [], []
     for wname in workload_names:
-        wl = by_name(wname)
         for method in methods:
-            res = search.run(method, wl, platform, budget=budget,
-                             seed=seed)
+            res = results[(method, wname)]
             # subsample history to 100 points
             h = res.history
             idx = np.linspace(0, len(h) - 1, 100).astype(int)

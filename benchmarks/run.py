@@ -3,14 +3,64 @@ table from the dry-run.  Prints ``name,seconds,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--budget N] [--quick] [--full]
     PYTHONPATH=src python -m benchmarks.run --only fig18
+
+``--only sweep_json`` (also run by default) additionally writes the
+machine-readable ``BENCH_sweep.json`` perf-trajectory record — XLA
+compilations, dispatches/round, and best-EDP per method x workload x
+arch — which CI uploads as an artifact so the numbers are comparable
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 import numpy as np
+
+SWEEP_JSON = os.environ.get("REPRO_BENCH_SWEEP_JSON", "BENCH_sweep.json")
+
+
+def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
+    """One stacked ``run_method_sweep`` fleet per registered arch; the
+    per-cell best-EDPs plus fleet-level compile/dispatch counts land in
+    ``out_path`` as JSON."""
+    from repro.configs.paper_workloads import by_name
+    from repro.core import jax_cost, search
+
+    methods = ["sparsemap", "random_mapper", "pso"]
+    wls = [by_name(n) for n in ("mm1", "mm3")]
+    archs = ["cloud", "maple_edge", "cluster_cloud"]
+    record = dict(budget=budget, methods=methods,
+                  workloads=[w.name for w in wls], archs=[], cells=[])
+    for arch in archs:
+        search.clear_cache()
+        stats: dict = {}
+        t0 = time.time()
+        grid = search.run_method_sweep(methods, wls, arch, budget=budget,
+                                       seed=0, stack_batches=True,
+                                       stats_out=stats)
+        arec = dict(
+            arch=arch, seconds=round(time.time() - t0, 2),
+            compiles=jax_cost.compilation_count(),
+            rounds=stats["rounds"], dispatches=stats["dispatches"],
+            dispatches_per_round=round(
+                stats["dispatches"] / max(stats["rounds"], 1), 3),
+            signatures=[list(s) for s in stats["signatures"]])
+        record["archs"].append(arec)
+        for m in methods:
+            for w in wls:
+                r = grid[m][w.name]
+                record["cells"].append(dict(
+                    arch=arch, method=m, workload=w.name,
+                    best_edp=(float(r.best_edp)
+                              if np.isfinite(r.best_edp) else None),
+                    evals=int(r.evals), valid_evals=int(r.valid_evals)))
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
 
 
 def main(argv=None) -> None:
@@ -22,8 +72,8 @@ def main(argv=None) -> None:
                     help="paper-scale budgets (20k evals/workload)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig7,fig17,fig18,"
-                         "table_iv,roofline,arch_dse,es_ops,multisearch,"
-                         "method_sweep")
+                         "table_iv,roofline,arch_dse,es_ops,stacked_prep,"
+                         "multisearch,method_sweep,sweep_json")
     args = ap.parse_args(argv)
 
     budget = args.budget or (300 if args.quick else
@@ -45,6 +95,22 @@ def main(argv=None) -> None:
               f"mutate_speedup={ops['mutate_speedup']:.1f}x;"
               f"crossover_speedup={ops['crossover_speedup']:.1f}x;"
               f"combined_speedup={ops['speedup']:.1f}x")
+
+    if want("stacked_prep"):
+        from benchmarks import es_ops
+        t0 = time.time()
+        sp = es_ops.bench_stacked_prep()
+        print(f"stacked_prep,{time.time()-t0:.1f},"
+              f"prep_speedup={sp['prep_speedup']:.1f}x;"
+              f"round_ms={sp['eval_round_seconds']*1e3:.2f}")
+
+    if want("sweep_json"):
+        t0 = time.time()
+        rec = bench_sweep_json(budget=min(budget, 1000))
+        dpr = ";".join(f"{a['arch']}={a['dispatches_per_round']}"
+                       for a in rec["archs"])
+        print(f"sweep_json,{time.time()-t0:.1f},"
+              f"path={SWEEP_JSON};dispatches_per_round={dpr}")
 
     if want("multisearch"):
         from benchmarks import es_ops

@@ -4,6 +4,11 @@ hardware platforms, and compare against the prior-work baselines.
 
     PYTHONPATH=src python examples/search_accelerator.py \
         [--arch kimi-k2-1t-a32b] [--budget 4000]
+
+``--platforms`` accepts any mix of the paper platforms (edge/mobile/
+cloud) and registered accelerator topologies (repro.configs.archs),
+e.g. ``--platforms cloud,maple_edge,cluster_cloud`` — the whole stack is
+ArchSpec-driven, so non-default memory hierarchies search end-to-end.
 """
 import argparse
 import time

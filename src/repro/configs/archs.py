@@ -1,5 +1,7 @@
 """Assigned architecture configs (exact hyperparameters from the
-assignment table) + reduced smoke variants.
+assignment table) + reduced smoke variants, plus the registered
+ACCELERATOR topologies (repro.core.arch.ArchSpec) that extend the paper's
+fixed DRAM/GLB/PE/MAC hierarchy.
 
 Vocab sizes that do not divide the TP degree (16) are padded up to the
 next multiple of 16 (noted per config) — embedding sharding needs even
@@ -10,7 +12,69 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+from repro.core.arch import ArchSpec, StorageLevel, register_arch
 from repro.models.config import BlockSpec, ModelConfig
+
+# ----------------------------------------------------- accelerator archs
+#
+# Non-default searchable topologies.  Anything registered here resolves by
+# name through the whole search stack, e.g.
+#     search.run_method_sweep(methods, workloads, "maple_edge", ...)
+# The numbers are 12nm-class pJ/byte figures in the spirit of Table II;
+# the *structure* is what differs from the paper topology.
+
+#: 2-store Maple-style edge chip: no per-PE buffer — a single shared GLB
+#: feeds a 16x16 PE grid directly (each PE = 1 MAC + registers).  One
+#: spatial mapping level, one store S/G site.  3 mapping levels total.
+MAPLE_EDGE = register_arch(ArchSpec(
+    name="maple_edge",
+    levels=(
+        StorageLevel("dram"),
+        StorageLevel(
+            "glb", capacity_bytes=256 * 1024,
+            fill_energy=(("dram", (100.0,)),),
+            sg_site="L2",
+            # deliberately starved DRAM, matching Table II's edge
+            # platform (16 MB/s): on-chip reuse dominates this design
+            # point, which is the topology's story
+            fill_bandwidth_bytes_per_cycle=16e6 / 1.0e9),
+        StorageLevel(
+            "reg",
+            fill_energy=(("glb", (3.5, 0.3)), ("reg", (0.05,))),
+            fanout=16 * 16),
+    ),
+    e_mac=0.8))
+
+#: 4-store clustered cloud chip: a cluster buffer sits between the GLB
+#: and the PE buffers (16 clusters x 64 PEs x 16 MACs).  Three spatial
+#: mapping levels, three store S/G sites ("L2"/"L3"/"L4") — 7 mapping
+#: levels and a 4-gene S/G segment.
+CLUSTER_CLOUD = register_arch(ArchSpec(
+    name="cluster_cloud",
+    levels=(
+        StorageLevel("dram"),
+        StorageLevel(
+            "glb", capacity_bytes=64 * 1024 * 1024,
+            fill_energy=(("dram", (100.0,)),),
+            sg_site="L2",
+            fill_bandwidth_bytes_per_cycle=128e9 / 1.0e9),
+        StorageLevel(
+            "cbuf", capacity_bytes=1024 * 1024,
+            fill_energy=(("glb", (15.0, 0.3)),),
+            fanout=16, sg_site="L3"),
+        StorageLevel(
+            "pebuf", capacity_bytes=64 * 1024,
+            fill_energy=(("cbuf", (1.8, 0.2)),),
+            fanout=64, sg_site="L4"),
+        StorageLevel(
+            "reg",
+            fill_energy=(("pebuf", (0.5,)), ("reg", (0.05,))),
+            fanout=16),
+    ),
+    e_mac=0.8))
+
+ACCEL_ARCHS: Dict[str, ArchSpec] = {
+    a.name: a for a in (MAPLE_EDGE, CLUSTER_CLOUD)}
 
 # --------------------------------------------------------------- LM family
 

@@ -4,6 +4,10 @@ accelerators via an enhanced evolution strategy (Zhao et al., 2025).
 Public entry points:
     repro.core.workload   — SpMM/SpConv workload definitions (Table III)
     repro.core.accel      — platform models (Table II) + TPU constants
+    repro.core.arch       — ArchSpec: declared memory hierarchies; the
+                            whole mapping/cost/genome/search stack derives
+                            its structure from one (register_arch/as_arch;
+                            non-default topologies in repro.configs.archs)
     repro.core.search     — run("sparsemap"| baselines, workload, platform)
                             + MultiSearch / run_sweep for concurrent
                             multi-workload searches on shared compilations
@@ -12,6 +16,7 @@ Public entry points:
                             sharding space of this framework
 """
 from . import accel, workload
+from .arch import ARCH_SPARSEMAP, ArchSpec, StorageLevel, as_arch
 from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
 from .evolution import ESConfig, SearchResult, evolve

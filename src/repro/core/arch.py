@@ -1,0 +1,377 @@
+"""First-class accelerator architecture specs (the ArchSpec subsystem).
+
+SparseMap (§II.B, Fig. 3/4) fixes one topology — DRAM -> GLB -> PE array
+-> MACs — and the seed stack hardwired it as module constants spread over
+``mapping`` / ``jax_cost`` / ``sparse`` / ``accel``.  This module lifts the
+memory hierarchy into data: an :class:`ArchSpec` is an ordered list of
+:class:`StorageLevel`\\ s, each carrying capacity / fill-energy / bandwidth
+numbers plus the mapping levels it owns (one temporal level per store, and
+an optional spatial level directly above it when the store is replicated
+``fanout`` times under its parent).  Everything the stack used to hardcode
+is *derived* here:
+
+* loop-slot count (``n_levels``) and level names,
+* temporal / spatial level index sets,
+* outer / inner mapping-level sets per store (the loop-nest reuse rule),
+* S/G sites (one per store that declares one, plus compute ``"C"``),
+* genome segment widths (``n_levels`` perm genes, tiling genes in
+  ``[0, n_levels)``, ``len(sg_sites)`` S/G genes),
+* the JAX kernel's constant tables and traced parameter vector.
+
+Two ArchSpecs with the same :class:`Topology` (structure) but different
+numbers — e.g. the paper's edge/mobile/cloud platforms — share one XLA
+compilation: the structure is baked into the kernel, the numbers are
+traced arguments.
+
+The paper topology ships as :data:`ARCH_SPARSEMAP` (the default
+everywhere; numerically bit-identical to the pre-ArchSpec code).  New
+accelerator classes are config, not code: build an ArchSpec, register it
+with :func:`register_arch`, and the whole mapping/cost/genome/search stack
+runs on it (see ``repro.configs.archs`` for a 2-store Maple-style edge
+chip and a 4-store clustered cloud chip, and COMPAT.md for the contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from functools import cached_property, lru_cache
+from typing import Dict, Optional, Tuple, Union
+
+from .accel import Platform
+
+# Energy groups: ((name, (component, ...)), ...).  A group becomes one
+# named entry of the numpy cost model's energy breakdown (its components
+# summed first); the JAX kernel flattens all components of an edge and
+# sums them left-to-right in float32 — both reproduce the seed
+# implementation's exact arithmetic order for the paper topology.
+EnergyGroups = Tuple[Tuple[str, Tuple[float, ...]], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageLevel:
+    """One storage level of the hierarchy, outermost (DRAM-like) first.
+
+    The *edge* that fills this level from its parent owns one temporal
+    mapping level; if ``fanout > 1`` the edge additionally owns a spatial
+    mapping level directly below the temporal one (``fanout`` parallel
+    instances of this level and everything beneath it).  The outermost
+    level has no fill edge; its energy/bandwidth fields are ignored.
+    """
+
+    name: str
+    capacity_bytes: Optional[float] = None       # None = unbounded
+    fill_energy: EnergyGroups = ()               # pJ/byte into this level
+    fanout: int = 1                              # spatial instances
+    sg_site: Optional[str] = None                # S/G site filtering the
+    #                                              edge OUT of this level
+    fill_bandwidth_bytes_per_cycle: Optional[float] = None  # None = inf
+    # whether this store owns a spatial mapping level.  None derives it
+    # from ``fanout > 1``; pass True to keep the level in the genome even
+    # when the cap is 1 (e.g. the paper's edge platform has 1 MAC/PE but
+    # the SAME 5-level mapping structure as mobile/cloud — an L3_S factor
+    # > 1 is simply invalid there).
+    spatial: Optional[bool] = None
+
+    @property
+    def is_spatial(self) -> bool:
+        return self.fanout > 1 if self.spatial is None else self.spatial
+
+    def flat_energy(self) -> Tuple[float, ...]:
+        return tuple(c for _, comps in self.fill_energy for c in comps)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """The structural fingerprint of an ArchSpec: everything that shapes
+    the compiled kernel (loop slots, site wiring, which parameters exist)
+    but none of the numbers.  ArchSpecs sharing a Topology share genome
+    layouts and XLA compilations."""
+
+    store_names: Tuple[str, ...]
+    has_capacity: Tuple[bool, ...]               # per store
+    has_spatial: Tuple[bool, ...]                # per EDGE (stores[1:])
+    n_energy_comps: Tuple[int, ...]              # per edge
+    edge_site: Tuple[Optional[int], ...]         # per edge: site idx | None
+    has_bandwidth: Tuple[bool, ...]              # per edge
+    sg_sites: Tuple[str, ...]                    # store sites + "C"
+
+    @cached_property
+    def fingerprint(self) -> str:
+        """Short stable tag used in compilation signatures."""
+        h = hashlib.sha1(repr(dataclasses.astuple(self)).encode())
+        return h.hexdigest()[:8]
+
+
+class ArchSpec:
+    """An ordered memory hierarchy plus compute, with all derived
+    mapping/genome/kernel structure cached.  Hashable by identity-free
+    content, so it can key jit caches directly."""
+
+    def __init__(self, name: str, levels: Tuple[StorageLevel, ...],
+                 e_mac: float = 0.8, clock_hz: float = 1.0e9):
+        if len(levels) < 2:
+            raise ValueError("ArchSpec needs >= 2 storage levels "
+                             "(a backing store and at least one buffer)")
+        if levels[0].is_spatial:
+            raise ValueError("the outermost (backing) store cannot be "
+                             "spatially replicated")
+        if levels[0].capacity_bytes is not None:
+            raise ValueError(
+                "the outermost (backing) store is never capacity-checked;"
+                " leave capacity_bytes=None (a value would only split "
+                "compilation signatures for identical kernels)")
+        names = [lv.name for lv in levels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate storage level names: {names}")
+        sites = [lv.sg_site for lv in levels if lv.sg_site is not None]
+        if len(set(sites)) != len(sites):
+            raise ValueError(f"duplicate S/G site names: {sites}")
+        if "C" in sites:
+            raise ValueError('"C" is reserved for the compute S/G site')
+        if levels[-1].sg_site is not None:
+            raise ValueError("the innermost store's outgoing edge IS "
+                             "compute; give it sg_site=None (site 'C' "
+                             "is implicit)")
+        self.name = name
+        self.levels = tuple(levels)
+        self.e_mac = float(e_mac)
+        self.clock_hz = float(clock_hz)
+        self._build()
+
+    # ------------------------------------------------------------ build
+    def _build(self) -> None:
+        lv = self.levels
+        self.n_stores = len(lv)
+        self.store_names = tuple(l.name for l in lv)
+        self.store_index: Dict[str, int] = {
+            l.name: k for k, l in enumerate(lv)}
+
+        # mapping levels: per edge k (into store k, k >= 1) a temporal
+        # level L{k}_T, then a spatial level L{k}_S when fanout > 1
+        names = []
+        level_edge = []          # mapping level -> edge index (store k - 1)
+        spatial = []
+        spatial_store = []       # spatial level -> store index it replicates
+        for k in range(1, self.n_stores):
+            names.append(f"L{k}_T")
+            level_edge.append(k - 1)
+            spatial.append(False)
+            if lv[k].is_spatial:
+                names.append(f"L{k}_S")
+                level_edge.append(k - 1)
+                spatial.append(True)
+                spatial_store.append(k)
+        self.level_names = tuple(names)
+        self.n_levels = len(names)
+        self.is_spatial = tuple(spatial)
+        self.spatial_levels = tuple(
+            i for i, s in enumerate(spatial) if s)
+        self.temporal_levels = tuple(
+            i for i, s in enumerate(spatial) if not s)
+        self.level_edge = tuple(level_edge)
+        self.spatial_store = tuple(spatial_store)
+
+        self.n_edges = self.n_stores - 1
+        # fills INTO store k see the loops of edges 1..k as the outer
+        # nest; the tile held inside spans the levels below
+        self.outer_levels_for: Dict[str, Tuple[int, ...]] = {}
+        self.inner_levels_for: Dict[str, Tuple[int, ...]] = {}
+        for k in range(1, self.n_stores):
+            self.outer_levels_for[lv[k].name] = tuple(
+                i for i, e in enumerate(level_edge) if e <= k - 1)
+            self.inner_levels_for[lv[k].name] = tuple(
+                i for i, e in enumerate(level_edge) if e > k - 1)
+
+        # S/G sites: per-store declared sites in store order, then "C"
+        store_sites = [l.sg_site for l in lv if l.sg_site is not None]
+        self.sg_sites: Tuple[str, ...] = tuple(store_sites) + ("C",)
+        site_idx = {s: i for i, s in enumerate(store_sites)}
+        # edge k (into store k) is filtered by the site of store k-1
+        self.edge_site: Tuple[Optional[int], ...] = tuple(
+            site_idx.get(lv[k - 1].sg_site)
+            for k in range(1, self.n_stores))
+
+        # capacity-checked stores (store index, name, capacity)
+        self.capacity_stores: Tuple[Tuple[int, str, float], ...] = tuple(
+            (k, lv[k].name, float(lv[k].capacity_bytes))
+            for k in range(1, self.n_stores)
+            if lv[k].capacity_bytes is not None)
+        # bandwidth-limited edges (edge index, bytes/cycle)
+        self.bw_edges: Tuple[Tuple[int, float], ...] = tuple(
+            (k - 1, float(lv[k].fill_bandwidth_bytes_per_cycle))
+            for k in range(1, self.n_stores)
+            if lv[k].fill_bandwidth_bytes_per_cycle is not None)
+        self.edge_energy: Tuple[EnergyGroups, ...] = tuple(
+            lv[k].fill_energy for k in range(1, self.n_stores))
+
+        self.topology = Topology(
+            store_names=self.store_names,
+            has_capacity=tuple(l.capacity_bytes is not None for l in lv),
+            has_spatial=tuple(l.is_spatial for l in lv[1:]),
+            n_energy_comps=tuple(len(lv[k].flat_energy())
+                                 for k in range(1, self.n_stores)),
+            edge_site=self.edge_site,
+            has_bandwidth=tuple(
+                l.fill_bandwidth_bytes_per_cycle is not None
+                for l in lv[1:]),
+            sg_sites=self.sg_sites,
+        )
+
+    # ------------------------------------------------------ conveniences
+    def spatial_caps(self) -> Tuple[int, ...]:
+        """Fanout cap per spatial mapping level, in level order."""
+        return tuple(self.levels[k].fanout for k in self.spatial_store)
+
+    def store(self, name: str) -> StorageLevel:
+        return self.levels[self.store_index[name]]
+
+    def param_vector(self):
+        """The traced parameter vector the JAX kernel consumes:
+        [spatial caps | capacities | flat edge-energy components |
+        edge bandwidths | e_mac], float32.  Two same-topology specs
+        differ only here, so they share compilations."""
+        import numpy as np
+        vals = (list(self.spatial_caps()) +
+                [c for _, _, c in self.capacity_stores] +
+                [c for groups in self.edge_energy
+                 for _, comps in groups for c in comps] +
+                [bw for _, bw in self.bw_edges] +
+                [self.e_mac])
+        return np.asarray(vals, dtype=np.float32)
+
+    def describe(self) -> str:
+        rows = []
+        for k, l in enumerate(self.levels):
+            bits = [f"store {l.name}"]
+            if l.capacity_bytes is not None:
+                bits.append(f"{l.capacity_bytes / 1024:.0f}KB")
+            if k > 0 and l.fanout > 1:
+                bits.append(f"x{l.fanout}")
+            if l.sg_site:
+                bits.append(f"S/G {l.sg_site}")
+            rows.append(" ".join(bits))
+        rows.append(f"levels: {' '.join(self.level_names)}; "
+                    f"sites: {'/'.join(self.sg_sites)}")
+        return "\n".join(rows)
+
+    # hashability: by content, so lru_cache can key on the spec
+    def _key(self) -> Tuple:
+        return (self.name, self.levels, self.e_mac, self.clock_hz)
+
+    def __hash__(self) -> int:
+        return hash(self._key())
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ArchSpec) and self._key() == other._key()
+
+    def __repr__(self) -> str:
+        return (f"ArchSpec({self.name!r}, {self.n_stores} stores, "
+                f"{self.n_levels} mapping levels, "
+                f"sites={self.sg_sites})")
+
+
+# ---------------------------------------------------------------- paper
+
+
+@lru_cache(maxsize=None)
+def arch_from_platform(p: Platform) -> ArchSpec:
+    """The paper topology (Fig. 3a: DRAM -> GLB -> PE array -> MACs)
+    populated with a :class:`repro.core.accel.Platform`'s Table II
+    numbers.  All platforms share one Topology, hence one compilation."""
+    return ArchSpec(
+        name=p.name,
+        levels=(
+            StorageLevel("dram"),
+            StorageLevel(
+                "glb", capacity_bytes=p.glb_bytes,
+                fill_energy=(("dram", (p.e_dram_per_byte,)),),
+                sg_site="L2",
+                fill_bandwidth_bytes_per_cycle=p.dram_bytes_per_cycle),
+            StorageLevel(
+                "pebuf", capacity_bytes=p.pe_buffer_bytes,
+                fill_energy=(("glb", (p.scaled_glb_energy(),
+                                      p.e_noc_per_byte)),),
+                fanout=p.n_pe, sg_site="L3", spatial=True),
+            StorageLevel(
+                "reg",
+                fill_energy=(("pebuf", (p.scaled_pebuf_energy(),)),
+                             ("reg", (p.e_reg_per_byte,))),
+                fanout=p.macs_per_pe, spatial=True),
+        ),
+        e_mac=p.e_mac, clock_hz=p.clock_hz)
+
+
+def _sparsemap_default() -> ArchSpec:
+    from .accel import CLOUD
+    spec = arch_from_platform(CLOUD)
+    return ArchSpec(name="sparsemap", levels=spec.levels,
+                    e_mac=spec.e_mac, clock_hz=spec.clock_hz)
+
+
+#: The paper topology (cloud-class numbers) — the default arch everywhere.
+ARCH_SPARSEMAP = _sparsemap_default()
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register_arch(spec: ArchSpec, replace: bool = False) -> ArchSpec:
+    from .accel import PLATFORMS
+    if spec.name in PLATFORMS:
+        # as_arch resolves platform names FIRST; a same-named arch would
+        # register fine but silently never be found
+        raise ValueError(
+            f"arch name {spec.name!r} shadows a paper platform; pick a "
+            f"name outside {sorted(PLATFORMS)}")
+    if spec.name in _REGISTRY and not replace \
+            and _REGISTRY[spec.name] != spec:
+        raise ValueError(f"arch {spec.name!r} already registered with "
+                         f"different content")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def registered_archs() -> Dict[str, ArchSpec]:
+    _load_config_archs()
+    return dict(_REGISTRY)
+
+
+def _load_config_archs() -> None:
+    """Import the config-level arch definitions so string lookups see
+    them (they register themselves on import).  Only a genuinely absent
+    configs package is tolerated; any OTHER import failure (e.g. a broken
+    transitive dependency) surfaces instead of silently emptying the
+    registry."""
+    try:
+        import repro.configs.archs  # noqa: F401  (side effect: register)
+    except ModuleNotFoundError as e:
+        if e.name not in ("repro.configs", "repro.configs.archs"):
+            raise
+
+
+def as_arch(platform: Union[str, Platform, ArchSpec]) -> ArchSpec:
+    """Resolve any accepted hardware description to an ArchSpec:
+    a Platform name ("edge"/"mobile"/"cloud"), a registered arch name,
+    a Platform object, or an ArchSpec (passed through)."""
+    if isinstance(platform, ArchSpec):
+        return platform
+    if isinstance(platform, Platform):
+        return arch_from_platform(platform)
+    if isinstance(platform, str):
+        from .accel import PLATFORMS
+        if platform in PLATFORMS:
+            return arch_from_platform(PLATFORMS[platform])
+        if platform not in _REGISTRY:
+            _load_config_archs()
+        if platform in _REGISTRY:
+            return _REGISTRY[platform]
+        raise KeyError(
+            f"unknown platform/arch {platform!r}; have platforms "
+            f"{sorted(PLATFORMS)} and archs {sorted(_REGISTRY)}")
+    raise TypeError(f"cannot resolve {type(platform).__name__} to an "
+                    f"ArchSpec")
+
+
+register_arch(ARCH_SPARSEMAP)

@@ -23,9 +23,10 @@ Prior-work proxies (§V):
 
 Classical baselines (Fig. 17): PSO, MCTS, TBPSA, PPO, DQN — compact but
 faithful implementations; they are *expected* to drown in invalid points,
-which is the paper's point.  (``standard_es`` runs on the DIRECT value
-encoding with its own genome adapter, so it is the one method without a
-request generator over canonical genomes.)
+which is the paper's point.  ``standard_es`` runs on the DIRECT value
+encoding; its generator (``direct_encoding.direct_requests``) translates
+valid direct genomes to canonical rows before yielding them, so even the
+direct-encoding ablation joins a mega-batched fleet.
 """
 from __future__ import annotations
 
@@ -34,10 +35,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .arch import ArchSpec, as_arch
 from .encoding import GenomeSpec
 from .evolution import (ESConfig, Requests, SearchResult, _Budget, _drive,
                         evolve_requests)
-from .mapping import balanced_mapping
+from .mapping import balanced_mapping_for_arch
 from .sparse import MAX_FMT_GENES
 
 
@@ -66,7 +68,8 @@ def _run_closed(method: str, spec: GenomeSpec, batch_eval, budget: int,
 def manual_sparse_genes(spec: GenomeSpec) -> Dict[int, int]:
     """A sensible hand-picked sparse strategy (the 'manually specified
     sparse strategy' a Sparseloop-Mapper user would fix): bitmask on the two
-    innermost sub-dims of P and Q, uncompressed Z, skip P<->Q at compute."""
+    innermost sub-dims of P and Q, uncompressed Z, no store-site S/G,
+    skip P<->Q at compute (the last S/G site of any arch)."""
     fixed: Dict[int, int] = {}
     for tn in spec.tensor_names:
         seg = spec.segments[f"fmt_{tn}"]
@@ -74,23 +77,37 @@ def manual_sparse_genes(spec: GenomeSpec) -> Dict[int, int]:
         for i, v in enumerate(genes):
             fixed[seg.start + i] = v
     sg = spec.segments["sg"]
-    fixed[sg.start + 0] = 0      # L2: none
-    fixed[sg.start + 1] = 0      # L3: none
-    fixed[sg.start + 2] = 6      # C: skip P<->Q
+    for i in range(sg.start, sg.stop - 1):
+        fixed[i] = 0             # store sites: none
+    fixed[sg.stop - 1] = 6       # C: skip P<->Q
     return fixed
 
 
-def fixed_mapping_genes(spec: GenomeSpec, n_pe: int, macs_per_pe: int
-                        ) -> Dict[int, int]:
-    """Freeze the mapping segment to the balanced OS mapping (SAGE-like)."""
-    mp = balanced_mapping(spec.workload, n_pe, macs_per_pe)
-    g = spec.encode_mapping(mp)
+def _freeze_mapping_genes(spec: GenomeSpec, mapping) -> Dict[int, int]:
+    g = spec.encode_mapping(mapping)
     fixed: Dict[int, int] = {}
     for seg_name in ("perm", "tiling"):
         seg = spec.segments[seg_name]
         for i in range(seg.start, seg.stop):
             fixed[i] = int(g[i])
     return fixed
+
+
+def fixed_mapping_genes_for_arch(spec: GenomeSpec, arch: ArchSpec
+                                 ) -> Dict[int, int]:
+    """Freeze the mapping segment to the balanced OS mapping on ``arch``
+    (SAGE-like).  ``arch`` must share the spec's topology (it supplies
+    the fanout numbers; e.g. the resolved edge/mobile/cloud platform)."""
+    return _freeze_mapping_genes(
+        spec, balanced_mapping_for_arch(spec.workload, arch))
+
+
+def fixed_mapping_genes(spec: GenomeSpec, n_pe: int, macs_per_pe: int
+                        ) -> Dict[int, int]:
+    """Paper-topology convenience variant taking explicit fanout caps."""
+    from .mapping import balanced_mapping
+    return _freeze_mapping_genes(
+        spec, balanced_mapping(spec.workload, n_pe, macs_per_pe))
 
 
 # ---------------------------------------------------------------- proxies
@@ -126,7 +143,7 @@ def _sage_like_setup(spec: GenomeSpec, platform, budget: int, seed: int,
     spatially-unrolled sub-dimensions pinned uncompressed, started from the
     engineer's uncompressed default."""
     from .cost_model import spatial_subdim_indices, tiled_subdims
-    fixed = fixed_mapping_genes(spec, platform.n_pe, platform.macs_per_pe)
+    fixed = fixed_mapping_genes_for_arch(spec, as_arch(platform))
     # pin format genes of spatially-unrolled sub-dimensions to U
     genome0 = np.zeros(spec.length, dtype=np.int64)
     for k, v in fixed.items():
@@ -445,8 +462,8 @@ def sparsemap_setup(spec: GenomeSpec, platform, budget: int, seed: int,
     seeds = None
     if platform is not None:
         g0 = np.zeros(spec.length, dtype=np.int64)
-        for k, v in fixed_mapping_genes(spec, platform.n_pe,
-                                        platform.macs_per_pe).items():
+        for k, v in fixed_mapping_genes_for_arch(
+                spec, as_arch(platform)).items():
             g0[k] = v
         g1 = g0.copy()
         for k, v in manual_sparse_genes(spec).items():
@@ -462,11 +479,14 @@ def sparsemap(spec: GenomeSpec, batch_eval, budget: int, seed: int,
 
 
 def standard_es(spec: GenomeSpec, batch_eval, budget: int, seed: int,
-                platform=None) -> SearchResult:
+                platform=None, **kw) -> SearchResult:
     """Fig. 18 curve 'ES': standard ES with LHS init on the DIRECT value
-    encoding (no prime-factor/cantor encoding), uniform operators."""
+    encoding (no prime-factor/cantor encoding), uniform operators.  Its
+    engine is the ``direct_requests`` generator over canonical genome
+    rows, so it also runs inside a concurrent ``MultiSearch`` fleet."""
     from .direct_encoding import direct_standard_es
-    return direct_standard_es(spec, batch_eval, budget, seed, platform)
+    return direct_standard_es(spec, batch_eval, budget, seed, platform,
+                              **kw)
 
 
 def pfce_es(spec: GenomeSpec, batch_eval, budget: int, seed: int,
@@ -511,9 +531,18 @@ def _gen_factory(gen_fn: Callable) -> Callable:
     return factory
 
 
+def _factory_standard_es(spec: GenomeSpec, platform, budget: int,
+                         seed: int, **kw) -> Tuple[Requests, _Budget]:
+    from .direct_encoding import direct_requests
+    tracker = _Budget(budget)
+    return direct_requests(spec, tracker, seed, platform=platform,
+                           **kw), tracker
+
+
 #: method name -> (spec, platform, budget, seed, **kw) -> (Requests, _Budget)
 REQUEST_METHODS: Dict[str, Callable] = {
     "sparsemap": _factory_sparsemap,
+    "standard_es": _factory_standard_es,   # direct encoding (Fig. 18 "ES")
     "pfce_es": _factory_pfce_es,
     "sage_like": _factory_sage_like,
     "random_mapper": _gen_factory(random_mapper_requests),

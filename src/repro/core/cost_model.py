@@ -1,14 +1,17 @@
 """Sparseloop-class analytical cost model (SparseMap §IV.I "Evaluation
-Environment"; Sparseloop/TimeloopV2 methodology).
+Environment"; Sparseloop/TimeloopV2 methodology), generalized over a
+declared :class:`repro.core.arch.ArchSpec`.
 
-Given (Workload, Mapping, SparseStrategy, Platform) it returns energy (pJ),
-latency (cycles), EDP (cycles * pJ) and a validity verdict.  The paper uses
-the TimeloopV2 binary; this is a faithful re-implementation of its published
-accounting (per-level access counts from loop-nest reuse analysis, density-
-scaled by the sparse strategy, per-access energy tables) — see DESIGN.md §5
-for the assumptions.
+Given (Workload, Mapping, SparseStrategy, arch-or-platform) it returns
+energy (pJ), latency (cycles), EDP (cycles * pJ) and a validity verdict.
+The paper uses the TimeloopV2 binary; this is a faithful
+re-implementation of its published accounting (per-level access counts
+from loop-nest reuse analysis, density-scaled by the sparse strategy,
+per-access energy tables) — see DESIGN.md §5 for the assumptions.
 
-Traffic edges and the S/G site that filters each edge:
+Traffic edges are derived from the arch: one per storage level below the
+backing store, each filtered by the S/G site of its SOURCE store (the
+backing store has none).  For the default paper topology:
 
     DRAM -> GLB       : compression only (no S/G)
     GLB  -> PE buffer : "L2" S/G site
@@ -23,11 +26,11 @@ GLB skips the whole corresponding compute iterations).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple, Union
 
 from .accel import Platform
-from .mapping import Mapping, N_LEVELS, SPATIAL_LEVELS
+from .arch import ArchSpec, as_arch
+from .mapping import Mapping
 from .sparse import (FMT_U, SparseStrategy, TensorFormat, effective_bytes,
                      followers, is_gate, is_skip, leaders)
 from .workload import WORD_BYTES, Workload
@@ -51,12 +54,21 @@ class CostReport:
     traffic_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
     compute_cycles: float = 0.0
     dram_cycles: float = 0.0
-    glb_occupancy_bytes: float = 0.0
-    pebuf_occupancy_bytes: float = 0.0
+    # per-store occupancies for every capacity-checked store of the arch
+    occupancy_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def fitness(self) -> float:
         return 0.0 if not self.valid else 1.0 / max(self.edp, 1e-30)
+
+    # legacy accessors (paper-topology store names)
+    @property
+    def glb_occupancy_bytes(self) -> float:
+        return self.occupancy_bytes.get("glb", 0.0)
+
+    @property
+    def pebuf_occupancy_bytes(self) -> float:
+        return self.occupancy_bytes.get("pebuf", 0.0)
 
 
 def tiled_subdims(mapping: Mapping, tensor_name: str
@@ -66,7 +78,7 @@ def tiled_subdims(mapping: Mapping, tensor_name: str
     sub-dimensions that actually exist)."""
     t = mapping.workload.tensor(tensor_name)
     out = []
-    for lvl in range(N_LEVELS):
+    for lvl in range(mapping.arch.n_levels):
         for d in mapping.perms[lvl]:
             if d in t.dims:
                 f = mapping.factors[lvl].get(d, 1)
@@ -78,8 +90,9 @@ def tiled_subdims(mapping: Mapping, tensor_name: str
 def spatial_subdim_indices(mapping: Mapping, tensor_name: str
                            ) -> Tuple[int, ...]:
     subs = tiled_subdims(mapping, tensor_name)
+    spatial = set(mapping.arch.spatial_levels)
     return tuple(i for i, (lvl, _, _) in enumerate(subs)
-                 if lvl in SPATIAL_LEVELS)
+                 if lvl in spatial)
 
 
 def make_tensor_format(mapping: Mapping, tensor_name: str,
@@ -101,18 +114,27 @@ def make_tensor_format(mapping: Mapping, tensor_name: str,
 # --------------------------------------------------------------------------
 
 
-def evaluate(design: Design, platform: Platform) -> CostReport:
+def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
+             ) -> CostReport:
     mp = design.mapping
     st = design.strategy
     wl = mp.workload
+    arch = as_arch(platform)
+    if arch.topology != mp.arch.topology:
+        raise ValueError(
+            f"mapping was built for arch {mp.arch.name!r} "
+            f"(topology {mp.arch.topology.fingerprint}) but is evaluated "
+            f"on {arch.name!r} ({arch.topology.fingerprint})")
 
     # ---------- validity: spatial fanout ----------
-    if mp.spatial_fanout(2) > platform.n_pe:
-        return CostReport(False, f"L2_S fanout {mp.spatial_fanout(2)} "
-                                 f"> {platform.n_pe} PEs")
-    if mp.spatial_fanout(4) > platform.macs_per_pe:
-        return CostReport(False, f"L3_S fanout {mp.spatial_fanout(4)} "
-                                 f"> {platform.macs_per_pe} MACs/PE")
+    caps = arch.spatial_caps()
+    for lvl, cap, store_k in zip(arch.spatial_levels, caps,
+                                 arch.spatial_store):
+        fan = mp.spatial_fanout(lvl)
+        if fan > cap:
+            return CostReport(
+                False, f"{arch.level_names[lvl]} fanout {fan} > {cap} "
+                       f"{arch.store_names[store_k]} instances")
 
     # ---------- validity: sparse strategy ----------
     spatial_subs = {t.name: spatial_subdim_indices(mp, t.name)
@@ -128,14 +150,14 @@ def evaluate(design: Design, platform: Platform) -> CostReport:
         return effective_bytes(st.formats[tname], dens[tname], n, WORD_BYTES)
 
     # ---------- validity: buffer capacities ----------
-    glb_occ = sum(tile_bytes("glb", t.name) for t in wl.tensors)
-    if glb_occ > platform.glb_bytes:
-        return CostReport(False, f"GLB overflow {glb_occ:.0f}B "
-                                 f"> {platform.glb_bytes}B")
-    pe_occ = sum(tile_bytes("pebuf", t.name) for t in wl.tensors)
-    if pe_occ > platform.pe_buffer_bytes:
-        return CostReport(False, f"PE buffer overflow {pe_occ:.0f}B "
-                                 f"> {platform.pe_buffer_bytes}B")
+    occ: Dict[str, float] = {}
+    for _, sname, cap in arch.capacity_stores:
+        o = sum(tile_bytes(sname, t.name) for t in wl.tensors)
+        occ[sname] = o
+        if o > cap:
+            return CostReport(
+                False, f"{sname.upper()} overflow {o:.0f}B > {cap:.0f}B",
+                occupancy_bytes=occ)
 
     # ---------- per-tensor average bytes per dense position ----------
     def comp_ratio(tname: str) -> float:
@@ -146,8 +168,6 @@ def evaluate(design: Design, platform: Platform) -> CostReport:
     ratio = {t.name: comp_ratio(t.name) for t in wl.tensors}
 
     # ---------- S/G filter fractions per edge ----------
-    # edge "glb" (DRAM->GLB): no S/G.  edge "pebuf": site L2.
-    # edge "reg": site L3.  compute: site C.
     def edge_fraction(site: str, tname: str, energy: bool) -> float:
         sg = st.sg[site]
         if tname not in followers(sg):
@@ -163,8 +183,15 @@ def evaluate(design: Design, platform: Platform) -> CostReport:
     # ---------- traffic ----------
     z_name = wl.output.name
     traffic_e: Dict[str, float] = {}     # energy-relevant bytes
-    traffic_t: Dict[str, float] = {}     # time-relevant bytes (DRAM only)
-    edges = (("glb", None), ("pebuf", "L2"), ("reg", "L3"))
+    traffic_t: Dict[str, float] = {}     # time-relevant bytes
+    # one edge per store below the backing store, filtered by the S/G
+    # site of its source store (None for the backing store's edge)
+    store_sites = tuple(s for s in arch.sg_sites[:-1])
+    edges = tuple(
+        (arch.store_names[k + 1],
+         None if arch.edge_site[k] is None
+         else store_sites[arch.edge_site[k]])
+        for k in range(arch.n_edges))
     for store, site in edges:
         for t in wl.tensors:
             fills = mp.fills(store, t.name)
@@ -184,7 +211,7 @@ def evaluate(design: Design, platform: Platform) -> CostReport:
     macs_dense = float(wl.macs)
     cycle_leaders = set()
     energy_leaders = set()
-    for site in ("L2", "L3", "C"):
+    for site in arch.sg_sites:
         sg = st.sg[site]
         if is_skip(sg):
             cycle_leaders.update(leaders(sg))
@@ -201,29 +228,33 @@ def evaluate(design: Design, platform: Platform) -> CostReport:
     compute_cycles = float(mp.temporal_iterations()) * cyc_frac
 
     # ---------- energy ----------
-    e_glb = platform.scaled_glb_energy()
-    e_pe = platform.scaled_pebuf_energy()
     br: Dict[str, float] = {}
-    br["dram"] = sum(v for k, v in traffic_e.items()
-                     if k.startswith("glb:")) * platform.e_dram_per_byte
-    br["glb"] = sum(v for k, v in traffic_e.items()
-                    if k.startswith("pebuf:")) * (e_glb + platform.e_noc_per_byte)
-    br["pebuf"] = sum(v for k, v in traffic_e.items()
-                      if k.startswith("reg:")) * e_pe
-    br["reg"] = sum(v for k, v in traffic_e.items()
-                    if k.startswith("reg:")) * platform.e_reg_per_byte
-    br["mac"] = macs_dense * e_frac * platform.e_mac
+    for k in range(arch.n_edges):
+        store = arch.store_names[k + 1]
+        edge_bytes = sum(v for key, v in traffic_e.items()
+                         if key.startswith(f"{store}:"))
+        for gname, comps in arch.edge_energy[k]:
+            # accumulate: two edges may share a group name (e.g. "noc")
+            br[gname] = br.get(gname, 0.0) + edge_bytes * sum(comps)
+    br["mac"] = macs_dense * e_frac * arch.e_mac
     energy = sum(br.values())
 
     # ---------- latency ----------
-    dram_bytes_t = sum(v for k, v in traffic_t.items() if k.startswith("glb:"))
-    dram_cycles = dram_bytes_t / platform.dram_bytes_per_cycle
-    cycles = max(compute_cycles, dram_cycles)
+    cycles = compute_cycles
+    dram_cycles = 0.0
+    for k, bpc in arch.bw_edges:
+        store = arch.store_names[k + 1]
+        edge_bytes_t = sum(v for key, v in traffic_t.items()
+                           if key.startswith(f"{store}:"))
+        edge_cycles = edge_bytes_t / bpc
+        if k == 0:
+            dram_cycles = edge_cycles
+        cycles = max(cycles, edge_cycles)
     edp = cycles * energy
 
     return CostReport(
         valid=True, energy_pj=energy, cycles=cycles, edp=edp,
         energy_breakdown=br, traffic_bytes=traffic_e,
         compute_cycles=compute_cycles, dram_cycles=dram_cycles,
-        glb_occupancy_bytes=glb_occ, pebuf_occupancy_bytes=pe_occ,
+        occupancy_bytes=occ,
     )

@@ -1,7 +1,8 @@
 """Direct value encoding — the ablation counterpoint to prime-factor +
 cantor encoding (SparseMap §IV.B, Fig. 10, Fig. 18 curve "ES").
 
-Genome layout:
+Genome layout (n_levels/sg-site counts derived from the canonical spec's
+arch; paper arch shown):
 
     [ perm x5 (RANDOM code->permutation table, Fig. 10a)
       | factor values, d dims x 5 levels, each in [1 .. size(dim)]
@@ -16,19 +17,23 @@ never produce a single valid point at CI budgets).
 
 Valid direct genomes are translated to the canonical `GenomeSpec` genome
 and costed with the same JAX batch evaluator, so the comparison isolates
-*encoding*, not the cost model.
+*encoding*, not the cost model.  The engine is exposed both as the
+closed-form :func:`direct_standard_es` and as the request generator
+:func:`direct_requests` (the ``standard_es`` entry in
+``baselines.REQUEST_METHODS``): the generator yields CANONICAL genome
+batches for the translatable rows, so a ``search.MultiSearch`` fleet can
+evaluate them on the shared jitted evaluator alongside every other
+method; untranslatable rows are charged to the budget as invalid without
+costing, exactly like the closed-form path.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .encoding import GenomeSpec, all_permutations, cantor_encode
-from .mapping import N_LEVELS
-from .sparse import MAX_FMT_GENES, N_SG
-from .workload import Workload
+from .encoding import GenomeSpec, all_permutations
 
 
 def divisors(n: int) -> List[int]:
@@ -43,6 +48,7 @@ class DirectValueSpec:
         wl = canonical.workload
         self.workload = wl
         self.d = wl.ndims
+        self.n_levels = canonical.arch.n_levels
         rng = np.random.default_rng(seed)
         nperm = math.factorial(self.d)
         # random encoding: code -> arbitrary permutation (Fig. 10a)
@@ -51,23 +57,24 @@ class DirectValueSpec:
         self.div: Dict[str, List[int]] = {
             dim: divisors(wl.dim_sizes[dim]) for dim in wl.dim_order}
 
-        self.n_factor_genes = self.d * N_LEVELS
-        self.length = (N_LEVELS + self.n_factor_genes +
-                       MAX_FMT_GENES * 3 + 3)
-        self.perm_sl = slice(0, N_LEVELS)
-        self.fact_sl = slice(N_LEVELS, N_LEVELS + self.n_factor_genes)
-        self.tail_sl = slice(N_LEVELS + self.n_factor_genes, self.length)
+        nl = self.n_levels
+        self.n_factor_genes = self.d * nl
+        tail = canonical.length - canonical.segments["fmt_P"].start
+        self.length = nl + self.n_factor_genes + tail
+        self.perm_sl = slice(0, nl)
+        self.fact_sl = slice(nl, nl + self.n_factor_genes)
+        self.tail_sl = slice(nl + self.n_factor_genes, self.length)
         self.n_perm_codes = nperm
 
     # -------------------------------------------------------- sampling
     def random_genomes(self, rng: np.random.Generator, n: int) -> np.ndarray:
         g = np.zeros((n, self.length), dtype=np.int64)
         g[:, self.perm_sl] = rng.integers(0, self.n_perm_codes,
-                                          (n, N_LEVELS))
+                                          (n, self.n_levels))
         col = self.fact_sl.start
         for dim in self.workload.dim_order:
             dv = np.asarray(self.div[dim])
-            for lvl in range(N_LEVELS):
+            for lvl in range(self.n_levels):
                 g[:, col] = dv[rng.integers(0, len(dv), n)]
                 col += 1
         tail = self.canonical.length - self.canonical.segments["fmt_P"].start
@@ -82,7 +89,7 @@ class DirectValueSpec:
             g[i, j] = rng.integers(0, self.n_perm_codes)
         elif j < self.fact_sl.stop:
             rel = j - self.fact_sl.start
-            dim = self.workload.dim_order[rel // N_LEVELS]
+            dim = self.workload.dim_order[rel // self.n_levels]
             dv = self.div[dim]
             g[i, j] = dv[rng.integers(0, len(dv))]
         else:
@@ -96,22 +103,22 @@ class DirectValueSpec:
         """Translate to the canonical genome; None if the tiling constraint
         is violated (invalid individual)."""
         wl = self.workload
-        factors = g[self.fact_sl].reshape(self.d, N_LEVELS)
+        nl = self.n_levels
+        factors = g[self.fact_sl].reshape(self.d, nl)
         for i, dim in enumerate(wl.dim_order):
             if int(np.prod(factors[i])) != wl.dim_sizes[dim]:
                 return None
         out = np.zeros(self.canonical.length, dtype=np.int64)
         # perms: scrambled code -> permutation -> cantor code
-        for lvl in range(N_LEVELS):
+        for lvl in range(nl):
             code = int(self.scramble[g[self.perm_sl][lvl]])
             out[self.canonical.segments["perm"].start + lvl] = code
         # tiling: distribute primes of each dim over levels per the factors
-        from .workload import prime_factorize
         tpos = self.canonical.segments["tiling"].start
         remaining = {dim: list(factors[i])
                      for i, dim in enumerate(wl.dim_order)}
         for k, (dim, p) in enumerate(self.canonical.primes):
-            for lvl in range(N_LEVELS):
+            for lvl in range(nl):
                 if remaining[dim][lvl] % p == 0 and remaining[dim][lvl] > 1:
                     remaining[dim][lvl] //= p
                     out[tpos + k] = lvl
@@ -121,47 +128,75 @@ class DirectValueSpec:
         out[self.canonical.segments["fmt_P"].start:] = g[self.tail_sl]
         return out
 
+    def translate_batch(self, genomes: np.ndarray
+                        ) -> Tuple[Optional[np.ndarray], List[int]]:
+        """(stacked canonical rows or None, indices of translatable rows)."""
+        canon, index = [], []
+        for i in range(len(genomes)):
+            c = self.to_canonical(genomes[i])
+            if c is not None:
+                canon.append(c)
+                index.append(i)
+        return (np.stack(canon) if canon else None), index
+
+    def expand_out(self, n: int, index: List[int],
+                   out: Optional[Dict]) -> Dict:
+        """Scatter a canonical evaluation of the translatable subset back
+        to a full-batch output dict (untranslatable rows: invalid, inf
+        EDP)."""
+        valid = np.zeros(n, dtype=bool)
+        edp = np.full(n, np.inf)
+        if out is not None and index:
+            v = np.asarray(out["valid"])
+            e = np.asarray(out["edp"], dtype=np.float64)
+            for k, i in enumerate(index):
+                valid[i] = bool(v[k])
+                edp[i] = e[k] if v[k] else np.inf
+        return dict(valid=valid, edp=edp,
+                    log10_edp=np.log10(np.maximum(edp, 1e-30)))
+
     def make_batch_eval(self, canonical_eval):
         """Wrap the canonical batch evaluator: direct genomes that violate
         the tiling constraint are invalid without costing."""
         def _eval(genomes: np.ndarray) -> Dict[str, np.ndarray]:
-            n = len(genomes)
-            valid = np.zeros(n, dtype=bool)
-            edp = np.full(n, np.inf)
-            canon = []
-            index = []
-            for i in range(n):
-                c = self.to_canonical(genomes[i])
-                if c is not None:
-                    canon.append(c)
-                    index.append(i)
-            if canon:
-                out = canonical_eval(np.stack(canon))
-                v = np.asarray(out["valid"])
-                e = np.asarray(out["edp"], dtype=np.float64)
-                for k, i in enumerate(index):
-                    valid[i] = bool(v[k])
-                    edp[i] = e[k] if v[k] else np.inf
-            return dict(valid=valid, edp=edp,
-                        log10_edp=np.log10(np.maximum(edp, 1e-30)))
+            canon, index = self.translate_batch(genomes)
+            out = canonical_eval(canon) if canon is not None else None
+            return self.expand_out(len(genomes), index, out)
         return _eval
 
 
-def direct_standard_es(canonical_spec: GenomeSpec, canonical_eval,
-                       budget: int, seed: int, platform=None,
-                       pop_size: int = 100, parent_frac: float = 0.4,
-                       elite_frac: float = 0.1,
-                       p_mut: float = 0.9) -> "SearchResult":
-    """Standard ES on the direct encoding (Fig. 18 curve 'ES'): LHS-style
-    init, uniform single-point crossover, uniform mutation."""
-    from .evolution import SearchResult, _Budget
+def direct_requests(spec: GenomeSpec, tracker: "_Budget", seed: int,
+                    platform=None, pop_size: int = 100,
+                    parent_frac: float = 0.4, elite_frac: float = 0.1,
+                    p_mut: float = 0.9) -> "Requests":
+    """Standard ES on the direct encoding (Fig. 18 curve 'ES') as a
+    request generator over CANONICAL genome rows: each round the direct
+    population is translated, the translatable subset is yielded for
+    evaluation on the canonical batch evaluator, and the full population
+    (translatable or not) is charged to the budget.  Canonical rows are
+    registered with the tracker, so ``best_genome`` decodes with the
+    ordinary :class:`GenomeSpec` like every other method's result.
+    """
     rng = np.random.default_rng(seed)
-    spec = DirectValueSpec(canonical_spec)
-    ev = spec.make_batch_eval(canonical_eval)
-    tracker = _Budget(budget)
+    dspec = DirectValueSpec(spec)
 
-    pop = spec.random_genomes(rng, pop_size)
-    edp = tracker.register(pop, ev(pop))
+    def charge(pop: np.ndarray):
+        """Translate, yield the canonical subset, register the FULL
+        population against the budget; returns the full-batch EDP."""
+        canon, index = dspec.translate_batch(pop)
+        out = None
+        if canon is not None:
+            out = yield canon
+        full = dspec.expand_out(len(pop), index, out)
+        # register canonical rows so best_genome is canonical; rows
+        # without a translation can never be best (inf EDP)
+        reg_rows = np.zeros((len(pop), spec.length), dtype=np.int64)
+        if canon is not None:
+            reg_rows[index] = canon
+        return tracker.register(reg_rows, full)
+
+    pop = dspec.random_genomes(rng, pop_size)
+    edp = yield from charge(pop)
     n_parents = max(2, int(pop_size * parent_frac))
     n_elite = max(1, int(pop_size * elite_frac))
     while not tracker.exhausted:
@@ -169,20 +204,36 @@ def direct_standard_es(canonical_spec: GenomeSpec, canonical_eval,
         parents = pop[order[:n_parents]]
         elites = pop[order[:n_elite]].copy()
         elite_edp = edp[order[:n_elite]].copy()
-        kids = np.empty((pop_size - n_elite, spec.length), dtype=np.int64)
+        kids = np.empty((pop_size - n_elite, dspec.length), dtype=np.int64)
         for i in range(len(kids)):
             a, b = rng.integers(0, len(parents), 2)
-            cut = rng.integers(1, spec.length)
+            cut = rng.integers(1, dspec.length)
             kids[i, :cut] = parents[a, :cut]
             kids[i, cut:] = parents[b, cut:]
             if rng.random() < p_mut:
                 for _ in range(2):
-                    spec.mutate_gene(kids, i, rng.integers(0, spec.length),
-                                     rng)
-        kedp = tracker.register(kids, ev(kids))
+                    dspec.mutate_gene(kids, i,
+                                      rng.integers(0, dspec.length), rng)
+        kedp = yield from charge(kids)
         pop = np.concatenate([elites, kids])
         edp = np.concatenate([elite_edp, kedp])
-    return SearchResult(best_edp=tracker.best, best_genome=tracker.best_genome,
+    return dict(method="standard_es", encoding="direct")
+
+
+def direct_standard_es(canonical_spec: GenomeSpec, canonical_eval,
+                       budget: int, seed: int, platform=None,
+                       **kw) -> "SearchResult":
+    """Drive :func:`direct_requests` against one evaluator (the
+    closed-form Fig. 18 'ES' path; identical code to the concurrent
+    fleet)."""
+    from .evolution import SearchResult, _Budget, _drive
+    tracker = _Budget(budget)
+    extras = _drive(direct_requests(canonical_spec, tracker, seed,
+                                    platform=platform, **kw),
+                    canonical_eval) or {}
+    extras["method"] = "direct_standard_es"
+    return SearchResult(best_edp=tracker.best,
+                        best_genome=tracker.best_genome,
                         history=np.asarray(tracker.hist),
                         evals=tracker.evals, valid_evals=tracker.valid,
-                        extras=dict(method="direct_standard_es"))
+                        extras=extras)

@@ -1,22 +1,24 @@
 """Genome encoding/decoding (SparseMap §IV.B, §IV.C, §IV.F, Fig. 13).
 
-Genome layout (1-D int array), for a workload with ``d`` iteration dims and
-``n_primes`` prime-factor slots:
+Genome layout (1-D int array), for a workload with ``d`` iteration dims,
+``n_primes`` prime-factor slots, and an arch with ``n_levels`` mapping
+levels and ``n_sites`` S/G sites (default paper arch: 5 levels, 3 sites):
 
-    [ perm_1..perm_5 | tiling_1..tiling_n | P fmt x5 | Q fmt x5 | Z fmt x5
-      | SG_L2 SG_L3 SG_C ]
+    [ perm x n_levels | tiling_1..tiling_n | P fmt x5 | Q fmt x5
+      | Z fmt x5 | SG x n_sites ]
 
 * **Permutations** — Cantor (Lehmer) encoding, one gene per mapping level,
   value in [0, d!-1]; adjacent codes are adjacent permutations with the
   outer-loop rank dominating (paper Eq. 1, Fig. 10).
 * **Dim. tiling** — prime-factor encoding: gene i holds the mapping level
-  (0..4) that prime factor i of the concatenated dimension factorization is
-  assigned to.  Every genome therefore satisfies the dimension-tiling
-  constraint *by construction* (paper: direct value encoding leaves only
-  0.000023 % of the space valid).
+  (in [0, n_levels)) that prime factor i of the concatenated dimension
+  factorization is assigned to.  Every genome therefore satisfies the
+  dimension-tiling constraint *by construction* (paper: direct value
+  encoding leaves only 0.000023 % of the space valid).
 * **Formats** — 5 genes per tensor in [0,4] (U/B/RLE/CP/UOP); the last k
   genes map to the k tiled sub-dimensions (cost_model.make_tensor_format).
-* **S/G** — 3 genes in [0,6] for the GLB / PE buffer / compute sites.
+* **S/G** — one gene in [0,6] per arch S/G site (store sites then
+  compute; paper arch: GLB / PE buffer / compute).
 """
 from __future__ import annotations
 
@@ -26,9 +28,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .arch import ARCH_SPARSEMAP, ArchSpec
 from .cost_model import Design, make_tensor_format
-from .mapping import Mapping, N_LEVELS
-from .sparse import MAX_FMT_GENES, N_SG, SG_SITES, SparseStrategy
+from .mapping import Mapping
+from .sparse import MAX_FMT_GENES, N_SG, SparseStrategy
 from .workload import Workload
 
 # ---------------------------------------------------------------- cantor
@@ -80,11 +83,13 @@ class Segment:
 
 
 class GenomeSpec:
-    """Genome layout + decode for one workload.  All searches (ES and every
-    baseline) operate on this representation."""
+    """Genome layout + decode for one (workload, arch).  All searches (ES
+    and every baseline) operate on this representation; the layout is
+    derived from the arch's mapping-level and S/G-site structure."""
 
-    def __init__(self, workload: Workload):
+    def __init__(self, workload: Workload, arch: ArchSpec = ARCH_SPARSEMAP):
         self.workload = workload
+        self.arch = arch
         self.d = workload.ndims
         self.n_perm_codes = math.factorial(self.d)
         self.primes = workload.prime_factors          # [(dim, p), ...]
@@ -99,18 +104,18 @@ class GenomeSpec:
             segs.append(Segment(name, pos, pos + n))
             pos += n
 
-        add("perm", N_LEVELS)
+        add("perm", arch.n_levels)
         add("tiling", self.n_primes)
         for tn in self.tensor_names:
             add(f"fmt_{tn}", MAX_FMT_GENES)
-        add("sg", len(SG_SITES))
+        add("sg", len(arch.sg_sites))
         self.segments = {s.name: s for s in segs}
         self.length = pos
 
         # per-gene upper bounds (exclusive)
         ub = np.empty(self.length, dtype=np.int64)
         ub[self.segments["perm"].slice] = self.n_perm_codes
-        ub[self.segments["tiling"].slice] = N_LEVELS
+        ub[self.segments["tiling"].slice] = arch.n_levels
         for tn in self.tensor_names:
             ub[self.segments[f"fmt_{tn}"].slice] = 5
         ub[self.segments["sg"].slice] = N_SG
@@ -124,14 +129,16 @@ class GenomeSpec:
         wl = self.workload
         perm_genes = genome[self.segments["perm"].slice]
         tiling_genes = genome[self.segments["tiling"].slice]
-        factors: List[Dict[str, int]] = [dict() for _ in range(N_LEVELS)]
+        factors: List[Dict[str, int]] = [dict()
+                                         for _ in range(self.arch.n_levels)]
         for (dim, p), lvl in zip(self.primes, tiling_genes):
             lvl = int(lvl)
             factors[lvl][dim] = factors[lvl].get(dim, 1) * p
         perms = tuple(
             tuple(wl.dim_order[i] for i in self._perm_table[int(c)])
             for c in perm_genes)
-        return Mapping(workload=wl, factors=tuple(factors), perms=perms)
+        return Mapping(workload=wl, factors=tuple(factors), perms=perms,
+                       arch=self.arch)
 
     def decode(self, genome: np.ndarray) -> Design:
         genome = np.asarray(genome)
@@ -146,7 +153,7 @@ class GenomeSpec:
                           genome[self.segments[f"fmt_{tn}"].slice])
             fmts[tn] = make_tensor_format(mp, tn, genes)
         sg = {site: int(g) for site, g in
-              zip(SG_SITES, genome[self.segments["sg"].slice])}
+              zip(self.arch.sg_sites, genome[self.segments["sg"].slice])}
         return Design(mapping=mp, strategy=SparseStrategy(formats=fmts, sg=sg))
 
     # ------------------------------------------------------------ encode
@@ -155,17 +162,18 @@ class GenomeSpec:
         reconstructed greedily: primes of each dim are assigned outer-level
         first to reproduce the factor products)."""
         wl = self.workload
+        nl = self.arch.n_levels
         genome = np.zeros(self.length, dtype=np.int64)
         inv_dim = {d: i for i, d in enumerate(wl.dim_order)}
-        for lvl in range(N_LEVELS):
+        for lvl in range(nl):
             perm_idx = tuple(inv_dim[d] for d in mapping.perms[lvl])
             genome[self.segments["perm"].start + lvl] = cantor_encode(perm_idx)
         # greedy prime reassembly: walk primes in order, consume levels
         tpos = self.segments["tiling"].start
-        remaining = {d: [mapping.factors[l].get(d, 1) for l in range(N_LEVELS)]
+        remaining = {d: [mapping.factors[l].get(d, 1) for l in range(nl)]
                      for d in wl.dim_order}
         for i, (dim, p) in enumerate(self.primes):
-            for lvl in range(N_LEVELS):
+            for lvl in range(nl):
                 if remaining[dim][lvl] % p == 0 and remaining[dim][lvl] > 1:
                     remaining[dim][lvl] //= p
                     genome[tpos + i] = lvl

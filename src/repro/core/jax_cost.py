@@ -1,4 +1,5 @@
-"""JAX batch evaluator for the SparseMap cost model.
+"""JAX batch evaluator for the SparseMap cost model, generalized over a
+declared :class:`repro.core.arch.ArchSpec`.
 
 A jit-compiled, vmap-vectorized re-implementation of
 :mod:`repro.core.cost_model` that evaluates a whole *population* of genomes
@@ -6,43 +7,52 @@ in one XLA call.  The numpy implementation is the exact oracle; this one is
 float32 and property-tested against it (tests/test_cost_agreement.py).
 
 Compilation strategy: all workload- and platform-specific quantities
-(primes, densities, tensor sizes, energy/capacity constants) are *traced
-arguments*, and the prime list is padded to a bucket size — so a single
-compilation is shared by every workload with the same (ndims, bucket)
-signature and every platform.  Batches are padded to powers of two.
+(primes, densities, tensor sizes, energy/capacity/fanout constants) are
+*traced arguments*, and the prime list is padded to a bucket size — so a
+single compilation is shared by every workload with the same
+(ndims, bucket, topology) signature and every same-topology platform.
+The arch's *structure* (loop-slot count, store tables, S/G site wiring,
+which parameters exist) is baked into the kernel as closure constants;
+its *numbers* ride in the traced parameter vector
+(``ArchSpec.param_vector``).  The compilation signature therefore gains a
+topology key: ``JaxCostModel.signature`` is
+``(ndims, prime_bucket, topology_fingerprint)``, and
+``eval_stacked``/``MultiSearch`` mega-batching keeps sharing compilations
+*within* a topology.
 
 The decode is fully tensorized: tiling factors via masked products over the
 prime list, permutations via a (d!, d) lookup table, loop-nest reuse via
-reverse cumulative products over the fixed 5*d loop-slot axis, and the
-fiber-tree byte accounting via a lax.scan over the loop slots.
+reverse cumulative products over the fixed n_levels*d loop-slot axis, and
+the fiber-tree byte accounting via a lax.scan over the loop slots.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import lru_cache, partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .accel import Platform
+from .arch import ARCH_SPARSEMAP, ArchSpec, Topology, as_arch
 from .encoding import GenomeSpec, all_permutations
-from .mapping import N_LEVELS
 from .sparse import MAX_FMT_GENES
 from .workload import WORD_BYTES
 
-# store indices
+# Legacy constants: the default (paper) topology's store tables, kept for
+# reference/backcompat.  The kernel derives its own per-topology tables.
 GLB, PEBUF, REG = 0, 1, 2
-STORE_OUTER = np.zeros((3, N_LEVELS), dtype=bool)
-STORE_OUTER[GLB, [0]] = True
-STORE_OUTER[PEBUF, [0, 1, 2]] = True
-STORE_OUTER[REG, [0, 1, 2, 3, 4]] = True
-STORE_INNER = np.zeros((3, N_LEVELS), dtype=bool)
-STORE_INNER[GLB, [1, 2, 3, 4]] = True
-STORE_INNER[PEBUF, [3, 4]] = True
-IS_SPATIAL_LEVEL = np.array([False, False, True, False, True])
+STORE_OUTER = np.stack([
+    np.isin(np.arange(ARCH_SPARSEMAP.n_levels),
+            ARCH_SPARSEMAP.outer_levels_for[s])
+    for s in ("glb", "pebuf", "reg")])
+STORE_INNER = np.stack([
+    np.isin(np.arange(ARCH_SPARSEMAP.n_levels),
+            ARCH_SPARSEMAP.inner_levels_for[s])
+    for s in ("glb", "pebuf", "reg")])
+IS_SPATIAL_LEVEL = np.asarray(ARCH_SPARSEMAP.is_spatial)
 
 # S/G lookup tables over gene value 0..6
 _V = np.arange(7)
@@ -55,30 +65,17 @@ SG_IS_GATE = (_V >= 1) & (_V <= 3)
 
 FMT_U, FMT_B, FMT_RLE, FMT_CP, FMT_UOP = range(5)
 
-# platform vector layout
-PLAT_FIELDS = ("n_pe", "macs_per_pe", "glb_bytes", "pe_buffer_bytes",
-               "dram_bytes_per_cycle", "e_dram", "e_glb", "e_noc",
-               "e_pebuf", "e_reg", "e_mac")
-
-
-def platform_vector(p: Platform) -> np.ndarray:
-    return np.asarray([
-        p.n_pe, p.macs_per_pe, p.glb_bytes, p.pe_buffer_bytes,
-        p.dram_bytes_per_cycle, p.e_dram_per_byte, p.scaled_glb_energy(),
-        p.e_noc_per_byte, p.scaled_pebuf_energy(), p.e_reg_per_byte,
-        p.e_mac], dtype=np.float32)
-
 
 def _bucket(n: int, size: int = 16) -> int:
     return ((n + size - 1) // size) * size
 
 
 # Registry of live jitted evaluators, keyed by compilation signature
-# (ndims, padded prime count, kind) where kind is "bcast" (workload
-# constants broadcast over the batch) or "stacked" (per-row constants,
-# the mega-batch kernel) — used to count actual XLA compilations (one
-# per distinct traced argument-shape set per signature).
-_JIT_FNS: Dict[Tuple[int, int, str], object] = {}
+# (ndims, padded prime count, topology fingerprint, kind) where kind is
+# "bcast" (workload constants broadcast over the batch) or "stacked"
+# (per-row constants, the mega-batch kernel) — used to count actual XLA
+# compilations (one per distinct traced argument-shape set per signature).
+_JIT_FNS: Dict[Tuple[int, int, str, str], object] = {}
 
 # Device dispatches issued through JaxCostModel / eval_stacked since the
 # last reset — the per-round dispatch-count benchmark hook.
@@ -98,9 +95,9 @@ def compilation_count() -> int:
     return total
 
 
-def compile_signatures() -> Tuple[Tuple[int, int], ...]:
-    """The (ndims, prime-bucket) signatures built so far."""
-    return tuple(sorted({(k[0], k[1]) for k in _JIT_FNS}))
+def compile_signatures() -> Tuple[Tuple[int, int, str], ...]:
+    """The (ndims, prime-bucket, topology) signatures built so far."""
+    return tuple(sorted({(k[0], k[1], k[2]) for k in _JIT_FNS}))
 
 
 def dispatch_count() -> int:
@@ -118,52 +115,130 @@ def clear_compile_cache() -> None:
     """Drop all shared jitted evaluators (benchmarking hook)."""
     _jitted_eval.cache_clear()
     _JIT_FNS.clear()
+    _STACK_CONSTS.clear()
+    reset_stack_prep_counts()
     reset_dispatch_count()
+
+
+# ------------------------------------------------------- topology tables
+
+
+@dataclasses.dataclass(frozen=True)
+class _TopoTables:
+    """Structural constants the kernel builder derives from a Topology."""
+
+    n_levels: int
+    n_edges: int
+    is_spatial: Tuple[bool, ...]            # per mapping level
+    spatial_levels: Tuple[int, ...]
+    store_outer: Tuple[Tuple[bool, ...], ...]   # (n_edges, n_levels)
+    store_inner: Tuple[Tuple[bool, ...], ...]
+    edge_site: Tuple[Optional[int], ...]    # per edge
+    n_sites: int
+    # param-vector layout (indices into the traced vector)
+    fanout_idx: Tuple[int, ...]             # per spatial level
+    cap_checks: Tuple[Tuple[int, int], ...]  # (edge idx, param idx)
+    energy_idx: Tuple[Tuple[int, ...], ...]  # per edge: component indices
+    bw_checks: Tuple[Tuple[int, int], ...]  # (edge idx, param idx)
+    mac_idx: int
+
+
+@lru_cache(maxsize=32)
+def _topo_tables(topo: Topology) -> _TopoTables:
+    n_edges = len(topo.has_spatial)
+    level_edge: List[int] = []
+    is_spatial: List[bool] = []
+    for e in range(n_edges):
+        level_edge.append(e)
+        is_spatial.append(False)
+        if topo.has_spatial[e]:
+            level_edge.append(e)
+            is_spatial.append(True)
+    nl = len(level_edge)
+    spatial_levels = tuple(i for i, s in enumerate(is_spatial) if s)
+    store_outer = tuple(
+        tuple(level_edge[i] <= e for i in range(nl))
+        for e in range(n_edges))
+    store_inner = tuple(
+        tuple(level_edge[i] > e for i in range(nl))
+        for e in range(n_edges))
+
+    # param vector layout mirrors ArchSpec.param_vector
+    pos = 0
+    fanout_idx = tuple(range(pos, pos + len(spatial_levels)))
+    pos += len(spatial_levels)
+    cap_checks = []
+    for k in range(1, n_edges + 1):
+        if topo.has_capacity[k]:
+            cap_checks.append((k - 1, pos))
+            pos += 1
+    energy_idx = []
+    for e in range(n_edges):
+        energy_idx.append(tuple(range(pos, pos + topo.n_energy_comps[e])))
+        pos += topo.n_energy_comps[e]
+    bw_checks = []
+    for e in range(n_edges):
+        if topo.has_bandwidth[e]:
+            bw_checks.append((e, pos))
+            pos += 1
+    mac_idx = pos
+
+    return _TopoTables(
+        n_levels=nl, n_edges=n_edges, is_spatial=tuple(is_spatial),
+        spatial_levels=spatial_levels, store_outer=store_outer,
+        store_inner=store_inner, edge_site=topo.edge_site,
+        n_sites=len(topo.sg_sites), fanout_idx=fanout_idx,
+        cap_checks=tuple(cap_checks), energy_idx=tuple(energy_idx),
+        bw_checks=tuple(bw_checks), mac_idx=mac_idx)
 
 
 # ---------------------------------------------------------------- kernel
 
 
 @lru_cache(maxsize=32)
-def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
-    """Build the jitted batch evaluator for (ndims=d, padded prime count).
+def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
+                 stacked: bool = False):
+    """Build the jitted batch evaluator for (ndims=d, padded prime count,
+    topology).
 
     With ``stacked=False`` the workload/platform quantities are broadcast
     over the batch (one workload per call); with ``stacked=True`` they are
     batched per row, so rows belonging to *different* workloads and
     platforms can be concatenated into one mega-batch and evaluated in a
     single device dispatch (``eval_stacked``)."""
-    nl = N_LEVELS * d
+    tt = _topo_tables(topo)
+    NL = tt.n_levels
+    nl = NL * d
+    NE = tt.n_edges
     perm_table = jnp.asarray(all_permutations(d), jnp.int32)
-    store_outer_lv = jnp.asarray(STORE_OUTER)       # (3 stores, 5 levels)
-    store_inner_lv = jnp.asarray(STORE_INNER)
-    spatial_lv = jnp.asarray(IS_SPATIAL_LEVEL)
-    lvl_of = jnp.repeat(jnp.arange(N_LEVELS), d)    # (nl,)
+    store_outer_lv = jnp.asarray(np.asarray(tt.store_outer))  # (NE, NL)
+    store_inner_lv = jnp.asarray(np.asarray(tt.store_inner))
+    spatial_lv = jnp.asarray(np.asarray(tt.is_spatial))
+    lvl_of = jnp.repeat(jnp.arange(NL), d)          # (nl,)
     wb = float(WORD_BYTES)
 
     def eval_one(perm_genes, assign, fmt_genes, sg,
                  primes, prime_dim, relevance, densities, full_elems,
                  total_macs, z_onehot, plat):
-        # ---- tiling factors (5, d) ----
-        lvl_eq = assign[None, :] == jnp.arange(N_LEVELS,
+        # ---- tiling factors (NL, d) ----
+        lvl_eq = assign[None, :] == jnp.arange(NL,
                                                dtype=jnp.int32)[:, None]
         dim_eq = prime_dim[None, :] == jnp.arange(d, dtype=jnp.int32)[:, None]
-        mask = lvl_eq[:, None, :] & dim_eq[None, :, :]     # (5, d, np)
+        mask = lvl_eq[:, None, :] & dim_eq[None, :, :]     # (NL, d, np)
         factors = jnp.prod(jnp.where(mask, primes[None, None, :], 1.0),
-                           axis=-1)                        # (5, d) float32
+                           axis=-1)                        # (NL, d) float32
 
         # ---- flattened loops ----
-        loop_dims = perm_table[perm_genes]                 # (5, d)
+        loop_dims = perm_table[perm_genes]                 # (NL, d)
         dims_flat = loop_dims.reshape(-1)                  # (nl,)
         bounds = factors[lvl_of, dims_flat]
         spatial_flat = spatial_lv[lvl_of]
 
-        fanout2 = jnp.prod(factors[2])
-        fanout4 = jnp.prod(factors[4])
+        fanouts = [jnp.prod(factors[lvl]) for lvl in tt.spatial_levels]
         rel_flat = relevance[:, dims_flat]                 # (3, nl)
         transparent = bounds <= 1.0
 
-        store_outer = store_outer_lv[:, lvl_of]            # (3, nl)
+        store_outer = store_outer_lv[:, lvl_of]            # (NE, nl)
 
         def fills_for(s, t):
             active = store_outer[s]
@@ -180,7 +255,7 @@ def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
             return tile * mult
 
         fills = jnp.stack([jnp.stack([fills_for(s, t) for t in range(3)])
-                           for s in range(3)])             # (3, 3)
+                           for s in range(NE)])            # (NE, 3)
 
         # ---- fiber-tree format accounting per tensor ----
         def clog2(x):
@@ -237,7 +312,7 @@ def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
         fmt_invalid = bads[0] | bads[1] | bads[2]
         p_comp, q_comp = comps[0], comps[1]
 
-        # ---- S/G ----
+        # ---- S/G (sg has one gene per site; compute site "C" last) ----
         lead_p = jnp.asarray(SG_LEADER_P)[sg]
         lead_q = jnp.asarray(SG_LEADER_Q)[sg]
         fol_p = jnp.asarray(SG_FOLLOW_P)[sg]
@@ -259,15 +334,21 @@ def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
         # ---- traffic ----
         total_z = jnp.sum(full_elems * z_onehot)
         is_z = z_onehot                                     # (3,)
-        fe = jnp.stack([jnp.stack([1.0, 1.0, 1.0]),
-                        jnp.stack([frac_e_p[0], frac_e_q[0], 1.0]),
-                        jnp.stack([frac_e_p[1], frac_e_q[1], 1.0])])
-        ft = jnp.stack([jnp.stack([1.0, 1.0, 1.0]),
-                        jnp.stack([frac_t_p[0], frac_t_q[0], 1.0]),
-                        jnp.stack([frac_t_p[1], frac_t_q[1], 1.0])])
+        one = jnp.float32(1.0)
+        fe_rows, ft_rows = [], []
+        for e in range(NE):
+            si = tt.edge_site[e]
+            if si is None:
+                fe_rows.append(jnp.stack([one, one, one]))
+                ft_rows.append(jnp.stack([one, one, one]))
+            else:
+                fe_rows.append(jnp.stack([frac_e_p[si], frac_e_q[si], one]))
+                ft_rows.append(jnp.stack([frac_t_p[si], frac_t_q[si], one]))
+        fe = jnp.stack(fe_rows)                             # (NE, 3)
+        ft = jnp.stack(ft_rows)
         f_rmw = jnp.maximum(2.0 * fills - total_z, total_z)
         fills_adj = jnp.where(is_z[None, :] > 0.5, f_rmw, fills)
-        byt = fills_adj * wb * ratios[None, :]              # (3 store, 3 t)
+        byt = fills_adj * wb * ratios[None, :]              # (NE edges, 3 t)
         tr_e = byt * fe
         tr_t = byt * ft
 
@@ -279,24 +360,34 @@ def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
                     factors, 1.0)) for t in range(3)])
             return jnp.sum(tiles * wb * ratios)
 
-        glb_occ = tile_bytes(GLB)
-        pe_occ = tile_bytes(PEBUF)
+        # ---- validity, energy, latency (param-vector driven) ----
+        invalid = jnp.bool_(False)
+        for fan, pi in zip(fanouts, tt.fanout_idx):
+            invalid = invalid | (fan > plat[pi])
+        invalid = invalid | fmt_invalid | sg_invalid
+        for e, pi in tt.cap_checks:
+            invalid = invalid | (tile_bytes(e) > plat[pi])
 
-        (n_pe, macs_per_pe, glb_cap, pe_cap, dram_bpc,
-         e_dram, e_glb, e_noc, e_pebuf, e_reg, e_mac) = \
-            [plat[i] for i in range(len(PLAT_FIELDS))]
-
-        invalid = (fanout2 > n_pe) | (fanout4 > macs_per_pe) | \
-            fmt_invalid | sg_invalid | (glb_occ > glb_cap) | \
-            (pe_occ > pe_cap)
-
-        energy = (jnp.sum(tr_e[GLB]) * e_dram +
-                  jnp.sum(tr_e[PEBUF]) * (e_glb + e_noc) +
-                  jnp.sum(tr_e[REG]) * (e_pebuf + e_reg) +
-                  total_macs * e_frac * e_mac)
-        compute_cycles = (total_macs / (fanout2 * fanout4)) * cyc_frac
-        dram_cycles = jnp.sum(tr_t[GLB]) / dram_bpc
-        cycles = jnp.maximum(compute_cycles, dram_cycles)
+        # left-associated sums/products, matching the legacy kernel's
+        # float32 evaluation order exactly
+        edge_energies = []
+        for e in range(NE):
+            comps_e = [plat[i] for i in tt.energy_idx[e]]
+            e_edge = comps_e[0]
+            for c in comps_e[1:]:
+                e_edge = e_edge + c
+            edge_energies.append(jnp.sum(tr_e[e]) * e_edge)
+        energy = edge_energies[0]
+        for term in edge_energies[1:]:
+            energy = energy + term
+        energy = energy + total_macs * e_frac * plat[tt.mac_idx]
+        fan_prod = fanouts[0] if fanouts else one
+        for fan in fanouts[1:]:
+            fan_prod = fan_prod * fan
+        compute_cycles = (total_macs / fan_prod) * cyc_frac
+        cycles = compute_cycles
+        for e, pi in tt.bw_checks:
+            cycles = jnp.maximum(cycles, jnp.sum(tr_t[e]) / plat[pi])
         edp = cycles * energy
         log10_edp = jnp.log10(jnp.maximum(cycles, 1e-30)) + \
             jnp.log10(jnp.maximum(energy, 1e-30))
@@ -310,7 +401,8 @@ def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
 
     in_axes = (0,) * 12 if stacked else (0, 0, 0, 0) + (None,) * 8
     fn = jax.jit(jax.vmap(eval_one, in_axes=in_axes))
-    _JIT_FNS[(d, n_primes_pad, "stacked" if stacked else "bcast")] = fn
+    _JIT_FNS[(d, n_primes_pad, topo.fingerprint,
+              "stacked" if stacked else "bcast")] = fn
     return fn
 
 
@@ -318,18 +410,27 @@ def _jitted_eval(d: int, n_primes_pad: int, stacked: bool = False):
 
 
 class JaxCostModel:
-    """Batch evaluator bound to one (workload, platform) pair.  Instances
-    with the same (ndims, prime bucket) share a single XLA compilation.
+    """Batch evaluator bound to one (workload, arch/platform) pair.
+    Instances with the same (ndims, prime bucket, topology) share a
+    single XLA compilation — same-topology platforms (e.g. the paper's
+    edge/mobile/cloud) differ only in the traced parameter vector.
 
     ``n_pad`` widens the prime axis beyond the workload's natural bucket so
     a group of concurrent searches over different workloads can be forced
     onto ONE compilation signature (``search.MultiSearch``); the padding
     primes are 1.0 and are numerically inert."""
 
-    def __init__(self, spec: GenomeSpec, platform: Platform,
+    def __init__(self, spec: GenomeSpec,
+                 platform: Union[str, Platform, ArchSpec],
                  n_pad: Optional[int] = None):
         self.spec = spec
-        self.platform = platform
+        self.arch = as_arch(platform)
+        self.platform = self.arch          # legacy alias
+        if self.arch.topology != spec.arch.topology:
+            raise ValueError(
+                f"GenomeSpec was built for arch {spec.arch.name!r} but "
+                f"the evaluator targets {self.arch.name!r} with a "
+                f"different topology")
         wl = spec.workload
         d = wl.ndims
         self.d = d
@@ -356,12 +457,12 @@ class JaxCostModel:
             np.float32(wl.macs),
             np.asarray([1.0 if t.is_output else 0.0 for t in wl.tensors],
                        np.float32),
-            platform_vector(platform))
+            self.arch.param_vector())
         (self._primes, self._prime_dim, self._relevance, self._densities,
          self._full_elems, self._total_macs, self._z_onehot, self._plat) = \
             [jnp.asarray(c) for c in self._np_consts]
 
-        self._fn = _jitted_eval(d, self.n_pad)
+        self._fn = _jitted_eval(d, self.n_pad, self.arch.topology)
         s = spec.segments
         self._sl_perm = (s["perm"].start, s["perm"].stop)
         self._sl_til = (s["tiling"].start, s["tiling"].stop)
@@ -370,9 +471,9 @@ class JaxCostModel:
         self._sl_sg = (s["sg"].start, s["sg"].stop)
 
     @property
-    def signature(self) -> Tuple[int, int]:
-        """The (ndims, prime-bucket) compilation signature."""
-        return (self.d, self.n_pad)
+    def signature(self) -> Tuple[int, int, str]:
+        """The (ndims, prime-bucket, topology) compilation signature."""
+        return (self.d, self.n_pad, self.arch.topology.fingerprint)
 
     def _prepare(self, genomes: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -436,6 +537,57 @@ def _canonical(out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
     return out
 
 
+# ----------------------------------------------- stacked-constants cache
+
+# eval_stacked used to re-tile every model's workload constants across its
+# rows (np.broadcast_to + concat) on EVERY round; for a steady fleet the
+# (models, row-counts, padded shape) triple is identical round after
+# round, so the concatenated constants are cached per signature (one
+# epoch slot each) and rebuilt only when the fleet composition or
+# mega-batch shape changes.  Epoch keys are CONTENT (workload cache_key +
+# arch per model), never id(), so a recycled object can't alias a stale
+# entry and no strong model refs need pinning.
+_STACK_CONSTS: Dict[Tuple[int, int, str], Tuple[Tuple, List]] = {}
+_STACK_PREP_HITS = 0
+_STACK_PREP_MISSES = 0
+
+
+def stack_prep_counts() -> Tuple[int, int]:
+    """(cache hits, cache misses) of the stacked-constants prep cache."""
+    return _STACK_PREP_HITS, _STACK_PREP_MISSES
+
+
+def reset_stack_prep_counts() -> None:
+    global _STACK_PREP_HITS, _STACK_PREP_MISSES
+    _STACK_PREP_HITS = _STACK_PREP_MISSES = 0
+
+
+def _stacked_consts(models: Sequence["JaxCostModel"],
+                    sizes: Sequence[int], padded: int) -> List[np.ndarray]:
+    global _STACK_PREP_HITS, _STACK_PREP_MISSES
+    sig = models[0].signature
+    key = (tuple((m.spec.workload.cache_key(), m.arch) for m in models),
+           tuple(sizes), padded)
+    hit = _STACK_CONSTS.get(sig)
+    if hit is not None and hit[0] == key:
+        _STACK_PREP_HITS += 1
+        return hit[1]
+    _STACK_PREP_MISSES += 1
+    consts: List[np.ndarray] = []
+    for j in range(len(models[0]._np_consts)):
+        rows = [np.broadcast_to(m._np_consts[j],
+                                (n,) + np.shape(m._np_consts[j]))
+                for m, n in zip(models, sizes)]
+        total = sum(sizes)
+        if padded != total:
+            rows.append(np.broadcast_to(
+                models[0]._np_consts[j],
+                (padded - total,) + np.shape(models[0]._np_consts[j])))
+        consts.append(np.ascontiguousarray(np.concatenate(rows, axis=0)))
+    _STACK_CONSTS[sig] = (key, consts)
+    return consts
+
+
 def eval_stacked(models: Sequence["JaxCostModel"],
                  batches: Sequence[np.ndarray],
                  pad_floor: int = 0) -> List[Dict[str, np.ndarray]]:
@@ -447,7 +599,10 @@ def eval_stacked(models: Sequence["JaxCostModel"],
     stacked-constants kernel variant runs once on the padded mega-batch;
     the output dict is then sliced back per input pair.  Rows are
     evaluated by exactly the same per-row computation as the broadcast
-    kernel, so results are bit-identical to per-model calls.
+    kernel, so results are bit-identical to per-model calls.  The tiled
+    constants are cached per (fleet, signature) epoch — see
+    :func:`stack_prep_counts` — so a steady fleet pays the
+    broadcast+concat prep only when its composition changes.
 
     ``pad_floor`` raises the batch padding beyond the power-of-two rule —
     drivers pass the watermark of earlier rounds so a shrinking fleet
@@ -473,17 +628,9 @@ def eval_stacked(models: Sequence["JaxCostModel"],
                 [arr, np.zeros((padded - total,) + arr.shape[1:],
                                np.int32)], axis=0)
         ins.append(arr)
-    consts = []
-    for j in range(len(models[0]._np_consts)):
-        rows = [np.broadcast_to(m._np_consts[j],
-                                (n,) + np.shape(m._np_consts[j]))
-                for m, n in zip(models, sizes)]
-        if padded != total:
-            rows.append(np.broadcast_to(
-                models[0]._np_consts[j],
-                (padded - total,) + np.shape(models[0]._np_consts[j])))
-        consts.append(np.concatenate(rows, axis=0))
-    fn = _jitted_eval(sig[0], sig[1], stacked=True)
+    consts = _stacked_consts(models, sizes, padded)
+    fn = _jitted_eval(sig[0], sig[1], models[0].arch.topology,
+                      stacked=True)
     _DISPATCHES += 1
     out = fn(*[jnp.asarray(a) for a in ins],
              *[jnp.asarray(c) for c in consts])

@@ -1,7 +1,8 @@
-"""Mapping scheme (SparseMap §II.B, §III.A.1, Fig. 4).
+"""Mapping scheme (SparseMap §II.B, §III.A.1, Fig. 4), parameterized by an
+:class:`repro.core.arch.ArchSpec`.
 
-A mapping on the 3-level storage architecture has five mapping levels,
-outer to inner:
+For the default paper topology (``ARCH_SPARSEMAP``: DRAM -> GLB -> PE
+array -> MACs) a mapping has five mapping levels, outer to inner:
 
     idx  name   kind      hardware meaning
     0    L1_T   temporal  DRAM -> GLB tile schedule
@@ -10,13 +11,16 @@ outer to inner:
     3    L3_T   temporal  PE-buffer -> MAC schedule
     4    L3_S   spatial   parallelism across MACs inside a PE
 
-Each level carries one loop per iteration dimension; its bound is the tiling
-factor of that dimension at that level (``prod_l factor[l][d] == size(d)``),
-and a permutation orders the loops within the level (outermost first).
+but the level structure is *derived from the arch*: each store below the
+backing store owns a temporal level, plus a spatial level when it is
+replicated (``StorageLevel.fanout > 1``).  Each level carries one loop per
+iteration dimension; its bound is the tiling factor of that dimension at
+that level (``prod_l factor[l][d] == size(d)``), and a permutation orders
+the loops within the level (outermost first).
 
-``LoopNest`` flattens a mapping to a single outer->inner loop list and
-implements the classical Timeloop-style reuse analysis used by the cost
-model: the number of fills of a tensor tile into a storage level is
+``Mapping.fills`` implements the classical Timeloop-style reuse analysis
+used by the cost model: the number of fills of a tensor tile into a
+storage level is
 
     fills = footprint * prod(bounds of loops in the outer nest)
                       / prod(bounds of the innermost contiguous run of
@@ -27,49 +31,41 @@ model: the number of fills of a tensor tile into a storage level is
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from .arch import ARCH_SPARSEMAP, ArchSpec
 from .workload import Workload
 
-LEVEL_NAMES = ("L1_T", "L2_T", "L2_S", "L3_T", "L3_S")
-N_LEVELS = 5
-SPATIAL_LEVELS = (2, 4)          # indices of L2_S, L3_S
-TEMPORAL_LEVELS = (0, 1, 3)
-
-# Storage points between mapping levels.  Fills *into* a storage level see
-# the loops strictly above it as the outer nest:
-#   GLB       <- loops of L1_T                       (levels [0])
-#   PE buffer <- loops of L1_T, L2_T, L2_S           (levels [0..2])
-#   MAC regs  <- loops of L1_T .. L3_S               (levels [0..4])
-OUTER_LEVELS_FOR = {
-    "glb": (0,),
-    "pebuf": (0, 1, 2),
-    "reg": (0, 1, 2, 3, 4),
-}
-# Tile held *inside* a storage level spans the mapping levels below it:
-INNER_LEVELS_FOR = {
-    "glb": (1, 2, 3, 4),
-    "pebuf": (3, 4),
-    "reg": (),
-}
+# Legacy module constants: the default (paper) topology's structure.
+# Prefer reading these off an ArchSpec; they are kept for callers that
+# only ever deal with the default arch.
+LEVEL_NAMES = ARCH_SPARSEMAP.level_names
+N_LEVELS = ARCH_SPARSEMAP.n_levels
+SPATIAL_LEVELS = ARCH_SPARSEMAP.spatial_levels
+TEMPORAL_LEVELS = ARCH_SPARSEMAP.temporal_levels
+OUTER_LEVELS_FOR = dict(ARCH_SPARSEMAP.outer_levels_for)
+INNER_LEVELS_FOR = dict(ARCH_SPARSEMAP.inner_levels_for)
 
 
 @dataclasses.dataclass(frozen=True)
 class Mapping:
-    """Fully decoded mapping for a given workload."""
+    """Fully decoded mapping for a given workload on a given arch."""
 
     workload: Workload
     # factors[level][dim_name] -> tiling factor (int >= 1)
     factors: Tuple[Dict[str, int], ...]
     # perms[level] -> tuple of dim names, outermost first
     perms: Tuple[Tuple[str, ...], ...]
+    arch: ArchSpec = ARCH_SPARSEMAP
 
     def __post_init__(self):
+        if len(self.factors) != self.arch.n_levels:
+            raise ValueError(
+                f"{len(self.factors)} factor levels != arch "
+                f"{self.arch.name}'s {self.arch.n_levels}")
         for d in self.workload.dim_order:
             prod = 1
-            for lvl in range(N_LEVELS):
+            for lvl in range(self.arch.n_levels):
                 prod *= self.factors[lvl].get(d, 1)
             if prod != self.workload.dim_sizes[d]:
                 raise ValueError(
@@ -80,7 +76,7 @@ class Mapping:
     def tile_sizes(self, store: str) -> Dict[str, int]:
         """Per-dimension extent of the tile resident in ``store``."""
         dims = {d: 1 for d in self.workload.dim_order}
-        for lvl in INNER_LEVELS_FOR[store]:
+        for lvl in self.arch.inner_levels_for[store]:
             for d in dims:
                 dims[d] *= self.factors[lvl].get(d, 1)
         return dims
@@ -94,7 +90,7 @@ class Mapping:
         return n
 
     def spatial_fanout(self, level: int) -> int:
-        assert level in SPATIAL_LEVELS
+        assert level in self.arch.spatial_levels
         n = 1
         for d in self.workload.dim_order:
             n *= self.factors[level].get(d, 1)
@@ -105,10 +101,10 @@ class Mapping:
         """Flattened loop list, outer->inner:
         (level_idx, dim_name, bound, is_spatial)."""
         out = []
-        for lvl in range(N_LEVELS):
+        for lvl in range(self.arch.n_levels):
             for d in self.perms[lvl]:
                 out.append((lvl, d, self.factors[lvl].get(d, 1),
-                            lvl in SPATIAL_LEVELS))
+                            self.arch.is_spatial[lvl]))
         return out
 
     def fills(self, store: str, tensor_name: str) -> float:
@@ -117,7 +113,8 @@ class Mapping:
         the cost model).  See module docstring for the reuse rule."""
         t = self.workload.tensor(tensor_name)
         relevant_dims = set(t.dims)
-        outer = [l for l in self.loops() if l[0] in OUTER_LEVELS_FOR[store]]
+        outer_set = self.arch.outer_levels_for[store]
+        outer = [l for l in self.loops() if l[0] in outer_set]
         # drop transparent loops
         outer = [l for l in outer if l[2] > 1]
         # innermost contiguous run of irrelevant loops -> temporal reuse
@@ -140,7 +137,7 @@ class Mapping:
         """Total compute cycles for the dense workload = product of all
         temporal loop bounds (each cycle issues the full spatial fanout)."""
         n = 1
-        for lvl in TEMPORAL_LEVELS:
+        for lvl in self.arch.temporal_levels:
             for d in self.workload.dim_order:
                 n *= self.factors[lvl].get(d, 1)
         return n
@@ -148,25 +145,34 @@ class Mapping:
     # ---- pretty print --------------------------------------------------
     def describe(self) -> str:
         rows = []
-        for lvl in range(N_LEVELS):
+        for lvl in range(self.arch.n_levels):
             parts = []
             for d in self.perms[lvl]:
                 b = self.factors[lvl].get(d, 1)
-                kw = "par-for" if lvl in SPATIAL_LEVELS else "for"
+                kw = "par-for" if self.arch.is_spatial[lvl] else "for"
                 parts.append(f"{kw} {d.lower()}{lvl+1} in [0,{b})")
-            rows.append(f"{LEVEL_NAMES[lvl]:5s}: " + " ".join(parts))
+            rows.append(f"{self.arch.level_names[lvl]:5s}: "
+                        + " ".join(parts))
         return "\n".join(rows)
 
 
-def balanced_mapping(workload: Workload, n_pe: int, macs_per_pe: int
-                     ) -> Mapping:
-    """A sane hand-built output-stationary mapping, used as the SAGE-like
-    fixed mapping and as a fallback individual.
+def balanced_mapping_for_arch(workload: Workload, arch: ArchSpec,
+                              spatial_caps: Optional[Sequence[int]] = None
+                              ) -> Mapping:
+    """A sane hand-built output-stationary mapping on ``arch``, used as
+    the SAGE-like fixed mapping and as a fallback individual.
 
-    Greedily fills L3_S up to ``macs_per_pe`` with K-factors, L2_S up to
-    ``n_pe`` with M/N-factors, splits the rest between L2_T and L1_T.
+    Greedy placement, generalizing the paper-topology heuristic exactly:
+    the innermost spatial level takes contraction-dim parallelism (capped
+    at 16; dot-product style, only when the arch has >= 2 spatial levels),
+    every other spatial level takes output-dim parallelism (<= 16 per
+    dim), then temporal levels inner-to-outer keep small local tiles
+    (8 per dim), medium staging tiles (64 per dim), and the outermost
+    temporal level absorbs the rest.  ``spatial_caps`` overrides the
+    arch's declared per-spatial-level fanouts (level order).
     """
-    factors: List[Dict[str, int]] = [dict() for _ in range(N_LEVELS)]
+    nl = arch.n_levels
+    factors: List[Dict[str, int]] = [dict() for _ in range(nl)]
     remaining = dict(workload.dim_sizes)
 
     def take(level: int, dim: str, f: int):
@@ -177,49 +183,67 @@ def balanced_mapping(workload: Workload, n_pe: int, macs_per_pe: int
                    if d not in workload.output.dims]
     outs = [d for d in workload.dim_order if d in workload.output.dims]
 
-    # L3_S: contraction-dim parallelism across MACs (cap: leave some K
-    # temporal so per-PE tiles exist)
-    budget = min(macs_per_pe, 16)
-    for d in contraction:
-        for p in _prime_iter(remaining[d]):
-            if p <= budget:
-                take(4, d, p)
-                budget //= p
-            if budget <= 1:
-                break
-    # L2_S: output-dim parallelism across PEs, capped at 16 per dim so the
-    # mapping keeps temporal sub-dimensions (realistic Eyeriss-class PE use)
-    budget = n_pe
-    for d in outs:
-        per_dim = 1
-        for p in _prime_iter(remaining[d]):
-            if p <= budget and per_dim * p <= 16:
-                take(2, d, p)
-                budget //= p
-                per_dim *= p
-            if budget <= 1:
-                break
-    # L3_T: keep a modest PE-local tile
-    for d in workload.dim_order:
-        for p in _prime_iter(remaining[d]):
-            if factors[3].get(d, 1) * p <= 8:
-                take(3, d, p)
-    # L2_T: grow GLB tile up to 64 per dim
-    for d in workload.dim_order:
-        for p in _prime_iter(remaining[d]):
-            if factors[1].get(d, 1) * p <= 64:
-                take(1, d, p)
-    # L1_T: everything left
+    caps = list(spatial_caps if spatial_caps is not None
+                else arch.spatial_caps())
+    spatial = list(arch.spatial_levels)
+    assert len(caps) == len(spatial)
+
+    # innermost spatial level: contraction-dim parallelism (cap: leave
+    # some contraction temporal so per-instance tiles exist)
+    inner_spatial: List[int] = []
+    if len(spatial) >= 2:
+        lvl = spatial[-1]
+        inner_spatial = [lvl]
+        budget = min(caps[-1], 16)
+        for d in contraction:
+            for p in _prime_iter(remaining[d]):
+                if p <= budget:
+                    take(lvl, d, p)
+                    budget //= p
+                if budget <= 1:
+                    break
+    # remaining spatial levels, innermost first: output-dim parallelism,
+    # capped at 16 per dim so the mapping keeps temporal sub-dimensions
+    for lvl, cap in reversed(list(zip(spatial, caps))):
+        if lvl in inner_spatial:
+            continue
+        budget = cap
+        for d in outs:
+            per_dim = 1
+            for p in _prime_iter(remaining[d]):
+                if p <= budget and per_dim * p <= 16:
+                    take(lvl, d, p)
+                    budget //= p
+                    per_dim *= p
+                if budget <= 1:
+                    break
+    # temporal levels, inner to outer: modest local tile (8/dim), then
+    # staging tiles (64/dim); the outermost absorbs whatever is left
+    temporal = list(arch.temporal_levels)
+    for pos, lvl in enumerate(reversed(temporal[1:])):
+        cap = 8 if pos == 0 else 64
+        for d in workload.dim_order:
+            for p in _prime_iter(remaining[d]):
+                if factors[lvl].get(d, 1) * p <= cap:
+                    take(lvl, d, p)
+    top = temporal[0]
     for d in workload.dim_order:
         if remaining[d] > 1:
-            take(0, d, remaining[d])
+            take(top, d, remaining[d])
 
-    # output-stationary order: contraction dims innermost at L1/L2
-    def os_perm():
-        return tuple(outs + contraction)
+    # output-stationary order: contraction dims innermost at every level
+    perms = tuple(tuple(outs + contraction) for _ in range(nl))
+    return Mapping(workload=workload, factors=tuple(factors), perms=perms,
+                   arch=arch)
 
-    perms = tuple(os_perm() for _ in range(N_LEVELS))
-    return Mapping(workload=workload, factors=tuple(factors), perms=perms)
+
+def balanced_mapping(workload: Workload, n_pe: int, macs_per_pe: int
+                     ) -> Mapping:
+    """Paper-topology convenience wrapper around
+    :func:`balanced_mapping_for_arch` (DRAM/GLB/PEs/MACs; ``n_pe`` PEs,
+    ``macs_per_pe`` MACs per PE)."""
+    return balanced_mapping_for_arch(workload, ARCH_SPARSEMAP,
+                                     spatial_caps=(n_pe, macs_per_pe))
 
 
 def _prime_iter(n: int):

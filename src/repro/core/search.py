@@ -16,7 +16,8 @@ search runtime: every task — any (method, workload, platform) triple whose
 method has a request generator in ``baselines.REQUEST_METHODS`` — is a
 generator that yields genome batches, and each round every pending task's
 batch is evaluated and its generator advanced.  Tasks are ordered by
-(ndims, prime-bucket) compilation signature; with ``align_signatures=True``
+(ndims, prime-bucket, topology) compilation signature; with
+``align_signatures=True``
 each workload's prime axis is padded up to the largest bucket among its
 same-ndims peers so the whole group shares ONE XLA compilation, and with
 ``stack_batches=True`` all same-signature pending batches are concatenated
@@ -36,6 +37,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import accel, jax_cost
+from .arch import ArchSpec, as_arch
 from .baselines import METHODS, REQUEST_METHODS, make_requests
 from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
@@ -43,22 +45,29 @@ from .evolution import SearchResult, _Budget
 from .jax_cost import JaxCostModel, _bucket
 from .workload import Workload
 
-_CACHE: Dict[Tuple[Tuple, str, Optional[int]],
+#: anything that names hardware: a Platform/arch name, a Platform, or an
+#: ArchSpec (see repro.core.arch.as_arch)
+PlatformLike = Union[str, accel.Platform, ArchSpec]
+
+_CACHE: Dict[Tuple[Tuple, ArchSpec, Optional[int]],
              Tuple[GenomeSpec, JaxCostModel]] = {}
 
 
-def _platform(platform: Union[str, accel.Platform]) -> accel.Platform:
-    return accel.PLATFORMS[platform] if isinstance(platform, str) \
-        else platform
+def _platform(platform: PlatformLike) -> ArchSpec:
+    """Resolve any hardware description to its ArchSpec."""
+    return as_arch(platform)
 
 
-def get_evaluator(workload: Workload, platform: Union[str, accel.Platform],
+def get_evaluator(workload: Workload, platform: PlatformLike,
                   n_pad: Optional[int] = None
                   ) -> Tuple[GenomeSpec, JaxCostModel]:
     plat = _platform(platform)
-    key = (workload.cache_key(), plat.name, n_pad)
+    # the ArchSpec itself (content-hashable) keys the cache: two specs
+    # that merely share a NAME must not alias one evaluator (same
+    # aliasing class as the id(workload) bug fixed in PR 2)
+    key = (workload.cache_key(), plat, n_pad)
     if key not in _CACHE:
-        spec = GenomeSpec(workload)
+        spec = GenomeSpec(workload, arch=plat)
         _CACHE[key] = (spec, JaxCostModel(spec, plat, n_pad=n_pad))
     return _CACHE[key]
 
@@ -71,27 +80,38 @@ def clear_cache() -> None:
 
 
 def run(method: str, workload: Workload,
-        platform: Union[str, accel.Platform], budget: int = 20_000,
+        platform: PlatformLike, budget: int = 20_000,
         seed: int = 0, **kw) -> SearchResult:
     if method not in METHODS:
         raise KeyError(f"unknown method {method!r}; have {list(METHODS)}")
     plat = _platform(platform)
     spec, ev = get_evaluator(workload, plat)
-    return METHODS[method](spec, ev, budget, seed, plat, **kw)
+    res = METHODS[method](spec, ev, budget, seed, plat, **kw)
+    res.extras.setdefault("arch", plat)
+    return res
 
 
-def decode_best(workload: Workload, result: SearchResult) -> Optional[Design]:
+def decode_best(workload: Workload, result: SearchResult,
+                platform: Optional[PlatformLike] = None) -> Optional[Design]:
+    """Decode a result's best genome.  ``platform`` selects the arch the
+    search ran on; when omitted, the arch recorded in the result's extras
+    is used (falling back to the paper topology for results that predate
+    the recording).  Any same-topology description works."""
     if result.best_genome is None:
         return None
-    return GenomeSpec(workload).decode(result.best_genome)
+    if platform is None:
+        platform = result.extras.get("arch")
+    spec = GenomeSpec(workload) if platform is None else \
+        GenomeSpec(workload, arch=_platform(platform))
+    return spec.decode(result.best_genome)
 
 
-def report_best(workload: Workload, platform: Union[str, accel.Platform],
+def report_best(workload: Workload, platform: PlatformLike,
                 result: SearchResult) -> Optional[CostReport]:
-    d = decode_best(workload, result)
+    plat = _platform(platform)
+    d = decode_best(workload, result, platform=plat)
     if d is None:
         return None
-    plat = _platform(platform)
     return evaluate(d, plat)
 
 
@@ -106,7 +126,7 @@ class SearchTask:
     factory (``es_kw`` is the pre-method-agnostic alias and is merged in).
     """
     workload: Workload
-    platform: Union[str, accel.Platform] = "cloud"
+    platform: PlatformLike = "cloud"
     budget: int = 20_000
     seed: int = 0
     name: Optional[str] = None
@@ -136,13 +156,13 @@ class _TaskState:
     gen: object                      # the method's request generator
     tracker: _Budget
     ev: JaxCostModel
-    natural: Tuple[int, int]
+    natural: Tuple[int, int]         # (ndims, natural prime bucket)
     method: str
     req: Optional[np.ndarray] = None
     extras: Optional[Dict] = None
 
     @property
-    def signature(self) -> Tuple[int, int]:
+    def signature(self) -> Tuple[int, int, str]:
         return self.ev.signature
 
 
@@ -270,14 +290,15 @@ class MultiSearch:
         # compute every round after a one-off spike (e.g. round-1
         # calibration probes + random_mapper's 512-row chunks).
         K = 3
-        pad_hwm: Dict[Tuple[int, int], int] = {}
-        pad_recent: Dict[Tuple[int, int], List[int]] = {}
+        pad_hwm: Dict[Tuple[int, int, str], int] = {}
+        pad_recent: Dict[Tuple[int, int, str], List[int]] = {}
         rounds = 0
         dispatch0 = jax_cost.dispatch_count()
         while alive:
             pending: List[_TaskState] = []
             if self.stack_batches:
-                groups: Dict[Tuple[int, int], List[_TaskState]] = {}
+                groups: Dict[Tuple[int, int, str],
+                             List[_TaskState]] = {}
                 for st in alive:
                     groups.setdefault(st.signature, []).append(st)
                 for sig in sorted(groups):
@@ -314,6 +335,7 @@ class MultiSearch:
             extras["signature"] = st.signature
             extras["natural_signature"] = st.natural
             extras.setdefault("method", st.method)
+            extras.setdefault("arch", st.ev.arch)
             results[st.name] = SearchResult(
                 best_edp=st.tracker.best,
                 best_genome=st.tracker.best_genome,
@@ -330,7 +352,7 @@ class MultiSearch:
 
 
 def run_sweep(workloads: Sequence[Workload],
-              platform: Union[str, accel.Platform] = "cloud",
+              platform: PlatformLike = "cloud",
               budget: int = 20_000, seed: int = 0,
               align_signatures: bool = True, stack_batches: bool = False,
               **es_kw) -> Dict[str, SearchResult]:
@@ -345,7 +367,7 @@ def run_sweep(workloads: Sequence[Workload],
 
 def run_method_sweep(methods: Sequence[str],
                      workloads: Sequence[Workload],
-                     platform: Union[str, accel.Platform] = "cloud",
+                     platform: PlatformLike = "cloud",
                      budget: int = 20_000, seed: int = 0,
                      align_signatures: bool = True,
                      stack_batches: bool = True,

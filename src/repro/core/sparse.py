@@ -50,7 +50,10 @@ SG_NAMES = ("none", "gate P<-Q", "gate Q<-P", "gate P<->Q",
 N_SG = 7
 MAX_FMT_GENES = 5               # fixed sub-segment length (paper §IV.F)
 
-SG_SITES = ("L2", "L3", "C")    # GLB, PE buffer, compute
+# The DEFAULT (paper) arch's S/G sites: GLB, PE buffer, compute.  The
+# authoritative per-arch site list is ``ArchSpec.sg_sites`` — any store
+# may declare a site, and "C" (compute) is always last.
+SG_SITES = ("L2", "L3", "C")
 
 
 def is_gate(sg: int) -> bool:

@@ -1,0 +1,163 @@
+"""ArchSpec subsystem: structure derivation, registry resolution, and the
+acceptance-criterion end-to-end sweeps on the non-default topologies."""
+import numpy as np
+import pytest
+
+from repro.configs.archs import CLUSTER_CLOUD, MAPLE_EDGE
+from repro.core import accel, search
+from repro.core.arch import (ARCH_SPARSEMAP, ArchSpec, StorageLevel,
+                             arch_from_platform, as_arch)
+from repro.core.workload import spmm
+
+
+# ------------------------------------------------------------ structure
+
+
+def test_default_arch_matches_paper_structure():
+    a = ARCH_SPARSEMAP
+    assert a.level_names == ("L1_T", "L2_T", "L2_S", "L3_T", "L3_S")
+    assert a.spatial_levels == (2, 4)
+    assert a.temporal_levels == (0, 1, 3)
+    assert a.outer_levels_for == {"glb": (0,), "pebuf": (0, 1, 2),
+                                  "reg": (0, 1, 2, 3, 4)}
+    assert a.inner_levels_for == {"glb": (1, 2, 3, 4), "pebuf": (3, 4),
+                                  "reg": ()}
+    assert a.sg_sites == ("L2", "L3", "C")
+    assert [s for _, s, _ in a.capacity_stores] == ["glb", "pebuf"]
+
+
+def test_platforms_share_topology_but_not_numbers():
+    e, c = as_arch("edge"), as_arch("cloud")
+    assert e.topology == c.topology == ARCH_SPARSEMAP.topology
+    assert not np.array_equal(e.param_vector(), c.param_vector())
+    # edge has 1 MAC/PE but keeps the 5-level structure (spatial=True)
+    assert e.n_levels == 5 and e.spatial_caps() == (256, 1)
+
+
+def test_new_archs_have_distinct_topologies():
+    fps = {a.topology.fingerprint
+           for a in (ARCH_SPARSEMAP, MAPLE_EDGE, CLUSTER_CLOUD)}
+    assert len(fps) == 3
+    assert MAPLE_EDGE.n_levels == 3 and MAPLE_EDGE.sg_sites == ("L2", "C")
+    assert CLUSTER_CLOUD.n_levels == 7
+    assert CLUSTER_CLOUD.sg_sites == ("L2", "L3", "L4", "C")
+    assert [s for _, s, _ in CLUSTER_CLOUD.capacity_stores] == \
+        ["glb", "cbuf", "pebuf"]
+
+
+def test_as_arch_resolution():
+    assert as_arch("maple_edge") is MAPLE_EDGE
+    assert as_arch(MAPLE_EDGE) is MAPLE_EDGE
+    assert as_arch(accel.CLOUD) is arch_from_platform(accel.CLOUD)
+    with pytest.raises(KeyError):
+        as_arch("no_such_arch")
+
+
+def test_archspec_rejects_malformed_hierarchies():
+    with pytest.raises(ValueError):        # one level only
+        ArchSpec("x", (StorageLevel("dram"),))
+    with pytest.raises(ValueError):        # spatial backing store
+        ArchSpec("x", (StorageLevel("dram", fanout=4),
+                       StorageLevel("glb")))
+    with pytest.raises(ValueError):        # duplicate store name
+        ArchSpec("x", (StorageLevel("dram"), StorageLevel("dram")))
+    with pytest.raises(ValueError):        # site on innermost store
+        ArchSpec("x", (StorageLevel("dram"),
+                       StorageLevel("glb", sg_site="L2")))
+    with pytest.raises(ValueError):        # reserved compute site name
+        ArchSpec("x", (StorageLevel("dram", sg_site="C"),
+                       StorageLevel("glb")))
+
+
+# ---------------------------------------------------------- end-to-end
+
+
+@pytest.mark.parametrize("archname", ["maple_edge", "cluster_cloud"])
+def test_method_sweep_runs_end_to_end_on_new_arch(archname):
+    """Acceptance criterion: non-default topologies run through the full
+    concurrent mega-batched search stack, mixing methods — including the
+    direct-encoding standard_es bridge."""
+    wls = [spmm(f"{archname}_a", 32, 64, 48, 0.2, 0.5),
+           spmm(f"{archname}_b", 48, 32, 64, 0.4, 0.3)]
+    stats: dict = {}
+    grid = search.run_method_sweep(
+        ["sparsemap", "random_mapper", "standard_es"], wls, archname,
+        budget=200, seed=0, stats_out=stats)
+    arch = as_arch(archname)
+    for m in grid:
+        for w, res in grid[m].items():
+            assert res.evals >= 200
+            assert (np.asarray(res.history)[1:] <=
+                    np.asarray(res.history)[:-1]).all()
+    # the whole fleet mega-batches on the arch's single signature
+    assert len(stats["signatures"]) == 1
+    assert stats["signatures"][0][2] == arch.topology.fingerprint
+    assert stats["dispatches"] == stats["rounds"]
+
+
+def test_sparsemap_search_finds_valid_designs_on_new_archs():
+    wl = spmm("arch_probe", 32, 64, 48, 0.2, 0.5)
+    for archname in ("maple_edge", "cluster_cloud"):
+        res = search.run("sparsemap", wl, archname, budget=800, seed=0)
+        assert np.isfinite(res.best_edp), archname
+        rep = search.report_best(wl, archname, res)
+        assert rep is not None and rep.valid
+        assert rep.edp == pytest.approx(res.best_edp, rel=1e-3)
+
+
+def test_shared_energy_group_names_accumulate():
+    """Two edges may reuse an energy-group name (e.g. "noc"); the numpy
+    oracle must ACCUMULATE into the shared breakdown entry, matching the
+    kernel, not overwrite the earlier edge's energy."""
+    from repro.core.cost_model import evaluate
+    from repro.core.encoding import GenomeSpec
+    from repro.core.jax_cost import JaxCostModel
+
+    arch = ArchSpec("dup_groups", (
+        StorageLevel("dram"),
+        StorageLevel("glb", capacity_bytes=256 * 1024,
+                     fill_energy=(("noc", (100.0,)),), sg_site="L2"),
+        StorageLevel("reg", fill_energy=(("noc", (3.5,)),),
+                     fanout=256),
+    ))
+    wl = spmm("dupgrp", 16, 16, 16, 0.5, 0.5)
+    spec = GenomeSpec(wl, arch=arch)
+    from repro.core.baselines import fixed_mapping_genes_for_arch
+    g = np.zeros(spec.length, dtype=np.int64)
+    for k, v in fixed_mapping_genes_for_arch(spec, arch).items():
+        g[k] = v
+    rep = evaluate(spec.decode(g), arch)
+    assert rep.valid, rep.reason
+    assert set(rep.energy_breakdown) == {"noc", "mac"}
+    out = JaxCostModel(spec, arch)(g[None, :])
+    assert bool(out["valid"][0])
+    lg = np.log10(rep.edp)
+    assert abs(lg - out["log10_edp"][0]) <= 2e-3 * max(abs(lg), 1)
+
+
+def test_evaluator_cache_is_arch_content_keyed_not_name_keyed():
+    """Two content-different ArchSpecs sharing a NAME must not alias one
+    cached evaluator (the arch analogue of PR 2's workload id-reuse
+    fix)."""
+    wl = spmm("name_clash", 16, 16, 16, 0.5, 0.5)
+    s1, e1 = search.get_evaluator(wl, "cloud")
+    impostor = ArchSpec("cloud", (
+        StorageLevel("dram"),
+        StorageLevel("glb", capacity_bytes=1024,
+                     fill_energy=(("dram", (100.0,)),)),
+        StorageLevel("reg", fill_energy=(("glb", (3.0,)),), fanout=4),
+    ))
+    s2, e2 = search.get_evaluator(wl, impostor)
+    assert e1 is not e2
+    assert s2.arch.n_levels == impostor.n_levels != s1.arch.n_levels
+
+
+def test_same_workload_different_archs_do_not_alias():
+    """The evaluator cache must key on the arch too: one workload
+    searched on two topologies gets two evaluators with different genome
+    lengths."""
+    wl = spmm("alias_arch", 32, 64, 48, 0.2, 0.5)
+    s1, e1 = search.get_evaluator(wl, "cloud")
+    s2, e2 = search.get_evaluator(wl, "maple_edge")
+    assert s1.length != s2.length
+    assert e1.signature != e2.signature

@@ -75,12 +75,9 @@ print("HLO_ANALYSIS OK")
 
 
 @pytest.mark.slow
-def test_hlo_analysis_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
+def test_hlo_analysis_subprocess(subprocess_env):
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env=env, cwd=os.path.dirname(
+                       env=subprocess_env(), cwd=os.path.dirname(
                            os.path.dirname(os.path.abspath(__file__))))
     assert "HLO_ANALYSIS OK" in r.stdout, r.stdout + "\n" + r.stderr

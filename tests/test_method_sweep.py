@@ -127,7 +127,21 @@ def test_multisearch_default_names_include_method():
 
 def test_searchtask_rejects_method_without_request_generator():
     with pytest.raises(KeyError):
-        search.SearchTask(by_name("mm1"), method="standard_es")
+        search.SearchTask(by_name("mm1"), method="no_such_method")
+
+
+def test_standard_es_joins_the_fleet():
+    """standard_es (direct encoding) now has a request generator over
+    canonical rows: a MultiSearch task with it matches the sequential
+    closed-form run exactly at a fixed seed."""
+    wl = by_name("mm1")
+    seq = search.run("standard_es", wl, "cloud", budget=200, seed=5)
+    ms = search.MultiSearch([search.SearchTask(
+        wl, "cloud", budget=200, seed=5, method="standard_es")])
+    (res,) = ms.run().values()
+    assert res.evals == seq.evals == 200
+    assert res.best_edp == seq.best_edp
+    np.testing.assert_array_equal(res.history, seq.history)
 
 
 def test_run_method_sweep_rejects_grid_collisions():
@@ -163,6 +177,33 @@ def test_eval_stacked_bitexact_vs_per_model_calls():
     for k in ra:
         np.testing.assert_array_equal(np.asarray(ra[k]),
                                       np.asarray(oa2[k]))
+
+
+def test_eval_stacked_caches_tiled_constants_per_fleet_epoch():
+    """The per-row workload constants are rebuilt only when the (models,
+    row-counts, padded shape) fleet epoch changes — repeated rounds of a
+    steady fleet hit the prep cache, and cached rounds stay bit-identical
+    to uncached ones."""
+    a = spmm("prep_a", 32, 64, 48, 0.2, 0.5)
+    b = spmm("prep_b", 48, 32, 64, 0.4, 0.3)
+    sa, eva = search.get_evaluator(a, "cloud")
+    sb, evb = search.get_evaluator(b, "edge")
+    rng = np.random.default_rng(2)
+    ga, gb = sa.random_genomes(rng, 37), sb.random_genomes(rng, 50)
+    jax_cost.reset_stack_prep_counts()
+    first = jax_cost.eval_stacked([eva, evb], [ga, gb])
+    again = jax_cost.eval_stacked([eva, evb], [ga, gb])
+    hits, misses = jax_cost.stack_prep_counts()
+    assert (hits, misses) == (1, 1)
+    for x, y in zip(first, again):
+        for k in x:
+            np.testing.assert_array_equal(np.asarray(x[k]),
+                                          np.asarray(y[k]))
+    # a different fleet shape is a new epoch: rebuild, then warm again
+    jax_cost.eval_stacked([eva], [ga])
+    jax_cost.eval_stacked([eva], [ga])
+    hits, misses = jax_cost.stack_prep_counts()
+    assert (hits, misses) == (2, 2)
 
 
 def test_eval_stacked_rejects_mixed_signatures():
@@ -241,9 +282,12 @@ def test_stacked_sweep_fewer_compiles_and_dispatches(sweep_runs):
     st_compiles, st_dispatches = sweep_runs["stacked_counts"]
     assert st_compiles < seq_compiles
     assert st_dispatches < seq_dispatches
-    # one shared signature (mm1/mm3 align), so one dispatch per round
+    # one shared signature (mm1/mm3 align; default topology), so one
+    # dispatch per round
+    from repro.core.arch import ARCH_SPARSEMAP
     stats = sweep_runs["stacked_stats"]
-    assert stats["signatures"] == [(3, 16)]
+    assert stats["signatures"] == \
+        [(3, 16, ARCH_SPARSEMAP.topology.fingerprint)]
     assert stats["dispatches"] == stats["rounds"]
     # unstacked pays one dispatch per alive task per round
     assert stats["dispatches"] < sweep_runs["unstacked_stats"]["dispatches"]

@@ -159,14 +159,12 @@ def test_topk_sparsity_level():
 
 # --------------------------------------------------------------- multi-dev
 @pytest.mark.slow
-def test_multidevice_selftest_subprocess():
+def test_multidevice_selftest_subprocess(subprocess_env):
     """pipeline PP + compressed psum + sharded-vs-single train step +
-    elastic restore, on 8 forced host devices."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
+    elastic restore, on 8 forced host devices; shares the session
+    compiled-artifact cache (tests/conftest.py)."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.distributed.selftest"],
-        capture_output=True, text=True, timeout=900, env=env,
+        capture_output=True, text=True, timeout=900, env=subprocess_env(),
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     assert "SELFTEST OK" in r.stdout, r.stdout + "\n" + r.stderr

@@ -1,0 +1,93 @@
+"""Compare a freshly generated ``BENCH_sweep.json`` against the committed
+baseline run (``benchmarks/BENCH_sweep.baseline.json``, regenerated with
+``benchmarks.run --quick --only sweep_json`` whenever a PR intentionally
+moves the counts) — the CI perf-regression gate.
+
+    PYTHONPATH=src python -m benchmarks.compare_sweep \
+        --baseline benchmarks/BENCH_sweep.baseline.json \
+        --current BENCH_sweep.new.json
+
+Hard failures (exit 1): a per-arch XLA compile-count increase or a
+dispatches-per-round increase, compared arch-by-arch over the archs
+present in BOTH files (a newly added arch has no baseline and is
+reported, not failed).  Timing is warn-only — CI machines are too noisy
+to gate on seconds.  When the two runs used different budgets the counts
+are not comparable either, so everything downgrades to warnings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+#: warn when an arch's wall-clock grows beyond this factor
+TIME_WARN_RATIO = 1.5
+
+
+def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
+    """(failures, warnings) between two bench_sweep_json records."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    comparable = baseline.get("budget") == current.get("budget")
+    if not comparable:
+        warnings.append(
+            f"budgets differ (baseline {baseline.get('budget')} vs "
+            f"current {current.get('budget')}): compile/dispatch counts "
+            f"are not comparable, downgrading all checks to warnings")
+    base_archs: Dict[str, dict] = {a["arch"]: a
+                                   for a in baseline.get("archs", [])}
+    cur_archs: Dict[str, dict] = {a["arch"]: a
+                                  for a in current.get("archs", [])}
+    for name in cur_archs:
+        if name not in base_archs:
+            warnings.append(f"{name}: new arch, no baseline to compare")
+    for name, base in base_archs.items():
+        sink = failures if comparable else warnings
+        cur = cur_archs.get(name)
+        if cur is None:
+            sink.append(f"{name}: arch disappeared from the sweep")
+            continue
+        if cur["compiles"] > base["compiles"]:
+            sink.append(
+                f"{name}: compiles regressed "
+                f"{base['compiles']} -> {cur['compiles']}")
+        if cur["dispatches_per_round"] > base["dispatches_per_round"]:
+            sink.append(
+                f"{name}: dispatches/round regressed "
+                f"{base['dispatches_per_round']} -> "
+                f"{cur['dispatches_per_round']}")
+        if base.get("seconds") and cur.get("seconds", 0.0) > \
+                TIME_WARN_RATIO * base["seconds"]:
+            warnings.append(
+                f"{name}: {cur['seconds']:.2f}s vs baseline "
+                f"{base['seconds']:.2f}s (> {TIME_WARN_RATIO}x, "
+                f"warn-only)")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_sweep.json")
+    ap.add_argument("--current", required=True,
+                    help="freshly generated sweep record")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures, warnings = compare(baseline, current)
+    for w in warnings:
+        print(f"WARN: {w}")
+    for x in failures:
+        print(f"FAIL: {x}")
+    if failures:
+        return 1
+    print(f"OK: {len(baseline.get('archs', []))} baseline archs compared, "
+          f"no compile/dispatch regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

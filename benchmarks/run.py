@@ -6,9 +6,12 @@ table from the dry-run.  Prints ``name,seconds,derived`` CSV lines.
 
 ``--only sweep_json`` (also run by default) additionally writes the
 machine-readable ``BENCH_sweep.json`` perf-trajectory record — XLA
-compilations, dispatches/round, and best-EDP per method x workload x
-arch — which CI uploads as an artifact so the numbers are comparable
-across PRs.
+compilations, dispatches/round, per-topology pad-watermark
+trajectories, and best-EDP per method x workload x arch — which CI
+uploads as an artifact AND gates against the committed
+``benchmarks/BENCH_sweep.baseline.json`` (compile-count or
+dispatches-per-round regressions fail the build; see
+``benchmarks.compare_sweep``).
 """
 from __future__ import annotations
 
@@ -32,7 +35,8 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
 
     methods = ["sparsemap", "random_mapper", "pso"]
     wls = [by_name(n) for n in ("mm1", "mm3")]
-    archs = ["cloud", "maple_edge", "cluster_cloud"]
+    archs = ["cloud", "maple_edge", "cluster_cloud", "systolic_mesh",
+             "quant_edge"]
     record = dict(budget=budget, methods=methods,
                   workloads=[w.name for w in wls], archs=[], cells=[])
     for arch in archs:
@@ -48,7 +52,13 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
             rounds=stats["rounds"], dispatches=stats["dispatches"],
             dispatches_per_round=round(
                 stats["dispatches"] / max(stats["rounds"], 1), 3),
-            signatures=[list(s) for s in stats["signatures"]])
+            signatures=[list(s) for s in stats["signatures"]],
+            # per-topology mega-batch watermark trajectory + the
+            # grow/decay policy that produced it (PadPolicy, per
+            # Topology.fingerprint) — the cross-PR record for tuning the
+            # retrace-vs-padded-compute trade-off per topology
+            pad_watermarks=stats.get("pad_watermarks", {}),
+            pad_policies=stats.get("pad_policies", {}))
         record["archs"].append(arec)
         for m in methods:
             for w in wls:

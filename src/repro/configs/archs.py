@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.core.arch import ArchSpec, StorageLevel, register_arch
+from repro.core.arch import ArchSpec, NoCSpec, StorageLevel, register_arch
 from repro.models.config import BlockSpec, ModelConfig
 
 # ----------------------------------------------------- accelerator archs
@@ -73,8 +73,64 @@ CLUSTER_CLOUD = register_arch(ArchSpec(
     ),
     e_mac=0.8))
 
+#: Systolic 16x16 mesh with reduction-tree output collection: operands
+#: stream into the PE grid store-and-forward (mesh NoC, no multicast — an
+#: irrelevant spatial loop costs one copy per PE), while partial outputs
+#: collapse through an adder tree (reduction=True, one reduced result per
+#: tile crosses the GLB edge).  Same S/G site count as the paper arch but
+#: a distinct Topology (the NoC shape is structural).
+SYSTOLIC_MESH = register_arch(ArchSpec(
+    name="systolic_mesh",
+    levels=(
+        StorageLevel("dram"),
+        StorageLevel(
+            "glb", capacity_bytes=1024 * 1024,
+            fill_energy=(("dram", (100.0,)),),
+            sg_site="L2",
+            fill_bandwidth_bytes_per_cycle=32e9 / 1.0e9),
+        StorageLevel(
+            "pebuf", capacity_bytes=1024,
+            # per-hop mesh forwarding is pricier than the paper's
+            # broadcast NoC hop — the reduction tree is the design's win
+            fill_energy=(("glb", (6.0,)), ("mesh_hop", (0.6,))),
+            fanout=16 * 16,
+            noc=NoCSpec(multicast=False, reduction=True),
+            sg_site="L3"),
+        StorageLevel(
+            "reg", fill_energy=(("pebuf", (0.6,)), ("reg", (0.05,))),
+            fanout=4),
+    ),
+    e_mac=0.8))
+
+#: Quantized 1-byte-word edge chip: the paper's exact 4-store topology
+#: STRUCTURE, but every on-chip level stores 8-bit words (DRAM traffic,
+#: occupancies and compression ratios all reprice; metadata bits do not
+#: shrink with the datawidth, so compression pays off later than at
+#: 16-bit).  Word widths are traced numbers: a family of quantized
+#: variants shares one XLA compilation.
+QUANT_EDGE = register_arch(ArchSpec(
+    name="quant_edge",
+    levels=(
+        StorageLevel("dram"),
+        StorageLevel(
+            "glb", capacity_bytes=128 * 1024, word_bytes=1.0,
+            fill_energy=(("dram", (100.0,)),),
+            sg_site="L2",
+            fill_bandwidth_bytes_per_cycle=16e6 / 1.0e9),
+        StorageLevel(
+            "pebuf", capacity_bytes=1024, word_bytes=1.0,
+            fill_energy=(("glb", (3.0, 0.3)),),
+            fanout=16 * 16, sg_site="L3"),
+        StorageLevel(
+            "reg", word_bytes=1.0,
+            fill_energy=(("pebuf", (0.6,)), ("reg", (0.05,))),
+            fanout=4),
+    ),
+    e_mac=0.4))    # 8-bit MACs are ~half the 16-bit energy
+
 ACCEL_ARCHS: Dict[str, ArchSpec] = {
-    a.name: a for a in (MAPLE_EDGE, CLUSTER_CLOUD)}
+    a.name: a for a in (MAPLE_EDGE, CLUSTER_CLOUD, SYSTOLIC_MESH,
+                        QUANT_EDGE)}
 
 # --------------------------------------------------------------- LM family
 

@@ -16,6 +16,11 @@ is *derived* here:
 * S/G sites (one per store that declares one, plus compute ``"C"``),
 * genome segment widths (``n_levels`` perm genes, tiling genes in
   ``[0, n_levels)``, ``len(sg_sites)`` S/G genes),
+* per-level word widths (:attr:`StorageLevel.word_bytes`, default the
+  global 16-bit operand width) and per-edge NoC shape
+  (:class:`NoCSpec`: multicast for reads, in-network reduction for the
+  output — the knobs that open systolic-mesh and quantized-edge
+  accelerator classes),
 * the JAX kernel's constant tables and traced parameter vector.
 
 Two ArchSpecs with the same :class:`Topology` (structure) but different
@@ -38,6 +43,7 @@ from functools import cached_property, lru_cache
 from typing import Dict, Optional, Tuple, Union
 
 from .accel import Platform
+from .workload import WORD_BYTES
 
 # Energy groups: ((name, (component, ...)), ...).  A group becomes one
 # named entry of the numpy cost model's energy breakdown (its components
@@ -45,6 +51,33 @@ from .accel import Platform
 # sums them left-to-right in float32 — both reproduce the seed
 # implementation's exact arithmetic order for the paper topology.
 EnergyGroups = Tuple[Tuple[str, Tuple[float, ...]], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class NoCSpec:
+    """Network-on-chip shape of the fill edge into a storage level: how
+    traffic crossing the edge scales with the spatial fanout unrolled
+    beneath it.
+
+    ``multicast=True`` (tree/bus-style distribution, the paper topology's
+    implicit NoC) means an irrelevant spatial loop below the edge sends
+    ONE copy of a read tile to all instances; ``False`` (mesh-style
+    store-and-forward unicast, the systolic-array model) means every
+    instance's copy crosses the edge, multiplying read traffic by the
+    loop bound.  ``reduction`` is the same choice for the OUTPUT tensor:
+    ``True`` reduces spatially-partitioned partial sums in-network (one
+    reduced result crosses the edge per tile), ``False`` sends every
+    instance's partial sums across.  Both flags are *structural*: they
+    shape the compiled kernel and are part of the Topology fingerprint.
+    """
+
+    multicast: bool = True
+    reduction: bool = True
+
+
+#: The default edge NoC: full multicast + in-network reduction (exactly
+#: the pre-NoC accounting, so existing topologies are unchanged).
+NOC_DEFAULT = NoCSpec()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +98,18 @@ class StorageLevel:
     sg_site: Optional[str] = None                # S/G site filtering the
     #                                              edge OUT of this level
     fill_bandwidth_bytes_per_cycle: Optional[float] = None  # None = inf
+    # datawidth of one element held in this level, in bytes.  None = the
+    # global default (workload.WORD_BYTES, the paper's 16-bit operands).
+    # Fills INTO this level and this level's occupancy are accounted at
+    # this width (a quantized edge chip stores 1-byte words on-chip while
+    # keeping the same topology otherwise).  Ignored on the outermost
+    # level, like the energy/NoC fields: every edge is priced at its
+    # DESTINATION store's width and the backing store is never filled or
+    # capacity-checked.
+    word_bytes: Optional[float] = None
+    # NoC shape of the fill edge into this level (multicast/reduction);
+    # ignored on the outermost level, which has no fill edge.
+    noc: NoCSpec = NOC_DEFAULT
     # whether this store owns a spatial mapping level.  None derives it
     # from ``fanout > 1``; pass True to keep the level in the genome even
     # when the cap is 1 (e.g. the paper's edge platform has 1 MAC/PE but
@@ -94,6 +139,15 @@ class Topology:
     edge_site: Tuple[Optional[int], ...]         # per edge: site idx | None
     has_bandwidth: Tuple[bool, ...]              # per edge
     sg_sites: Tuple[str, ...]                    # store sites + "C"
+    # NoC shape per edge (structural: changes the fills accounting)
+    noc_multicast: Tuple[bool, ...] = ()
+    noc_reduction: Tuple[bool, ...] = ()
+    # True when every level stores the global default word width; the
+    # kernel then bakes the width as a constant (the pre-word-width code
+    # path, bit-identical for existing topologies).  Custom-width specs
+    # trace per-edge widths from the param vector instead, so e.g. a
+    # family of 1-byte-word chips still shares one compilation.
+    uniform_word_bytes: bool = True
 
     @cached_property
     def fingerprint(self) -> str:
@@ -132,6 +186,11 @@ class ArchSpec:
             raise ValueError("the innermost store's outgoing edge IS "
                              "compute; give it sg_site=None (site 'C' "
                              "is implicit)")
+        for lv in levels:
+            if lv.word_bytes is not None and not lv.word_bytes > 0:
+                raise ValueError(
+                    f"store {lv.name!r}: word_bytes must be > 0, got "
+                    f"{lv.word_bytes}")
         self.name = name
         self.levels = tuple(levels)
         self.e_mac = float(e_mac)
@@ -204,6 +263,17 @@ class ArchSpec:
         self.edge_energy: Tuple[EnergyGroups, ...] = tuple(
             lv[k].fill_energy for k in range(1, self.n_stores))
 
+        # per-store word widths (None -> the global default) and the
+        # per-edge view: edge k-1 fills store k, so its traffic and the
+        # store's occupancy are both accounted at store k's width
+        self.store_word_bytes: Tuple[float, ...] = tuple(
+            float(l.word_bytes) if l.word_bytes is not None
+            else float(WORD_BYTES) for l in lv)
+        self.edge_word_bytes: Tuple[float, ...] = self.store_word_bytes[1:]
+        # NoC descriptor per edge (the filled store's declared NoC)
+        self.edge_noc: Tuple[NoCSpec, ...] = tuple(
+            lv[k].noc for k in range(1, self.n_stores))
+
         self.topology = Topology(
             store_names=self.store_names,
             has_capacity=tuple(l.capacity_bytes is not None for l in lv),
@@ -215,6 +285,10 @@ class ArchSpec:
                 l.fill_bandwidth_bytes_per_cycle is not None
                 for l in lv[1:]),
             sg_sites=self.sg_sites,
+            noc_multicast=tuple(n.multicast for n in self.edge_noc),
+            noc_reduction=tuple(n.reduction for n in self.edge_noc),
+            uniform_word_bytes=all(
+                w == float(WORD_BYTES) for w in self.edge_word_bytes),
         )
 
     # ------------------------------------------------------ conveniences
@@ -225,18 +299,25 @@ class ArchSpec:
     def store(self, name: str) -> StorageLevel:
         return self.levels[self.store_index[name]]
 
+    def word_bytes_of(self, store_name: str) -> float:
+        """Resolved datawidth of one element held in ``store_name``."""
+        return self.store_word_bytes[self.store_index[store_name]]
+
     def param_vector(self):
         """The traced parameter vector the JAX kernel consumes:
         [spatial caps | capacities | flat edge-energy components |
-        edge bandwidths | e_mac], float32.  Two same-topology specs
-        differ only here, so they share compilations."""
+        edge bandwidths | e_mac | per-edge word widths], float32.  Two
+        same-topology specs differ only here, so they share compilations
+        (uniform-default-width topologies bake the width as a kernel
+        constant and simply never read the width tail)."""
         import numpy as np
         vals = (list(self.spatial_caps()) +
                 [c for _, _, c in self.capacity_stores] +
                 [c for groups in self.edge_energy
                  for _, comps in groups for c in comps] +
                 [bw for _, bw in self.bw_edges] +
-                [self.e_mac])
+                [self.e_mac] +
+                list(self.edge_word_bytes))
         return np.asarray(vals, dtype=np.float32)
 
     def describe(self) -> str:
@@ -249,6 +330,13 @@ class ArchSpec:
                 bits.append(f"x{l.fanout}")
             if l.sg_site:
                 bits.append(f"S/G {l.sg_site}")
+            if l.word_bytes is not None:
+                bits.append(f"{l.word_bytes:g}B-word")
+            if k > 0 and l.noc != NOC_DEFAULT:
+                bits.append(
+                    "noc["
+                    + ("mc" if l.noc.multicast else "ucast") + "/"
+                    + ("red" if l.noc.reduction else "all-partials") + "]")
             rows.append(" ".join(bits))
         rows.append(f"levels: {' '.join(self.level_names)}; "
                     f"sites: {'/'.join(self.sg_sites)}")

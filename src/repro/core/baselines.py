@@ -397,12 +397,40 @@ def ppo(spec: GenomeSpec, batch_eval, budget: int, seed: int,
 # ---------------------------------------------------------------- DQN-lite
 
 
+def dqn_td_update(q: np.ndarray, g: np.ndarray, rew: np.ndarray,
+                  gamma: float, lr: float) -> None:
+    """One batched TD(0) update of the factored Q table, in place.
+
+    All targets come from the round's FROZEN Q snapshot: position j
+    bootstraps ``gamma * max(q_old[j+1])`` (the terminal position takes
+    the episode reward), and the per-(position, value) increments of the
+    whole episode batch are accumulated with one ``np.add.at`` — the
+    batch analogue of PPO's vectorized sampling.  This deliberately
+    replaces the old LIVE-table episode loop (each episode bootstrapped
+    off the previous episode's in-round updates, sequential by
+    construction and unvectorizable); the frozen-snapshot semantics ARE
+    order-free, and ``np.add.at``'s unbuffered in-element-order
+    duplicate accumulation makes this bit-exactly the per-episode
+    sequential loop over the same snapshot (parity pinned by
+    tests/test_baselines.py)."""
+    n, L = g.shape
+    q_old = q.copy()
+    # masked (out-of-range) cells hold -1e9 and are never selected, so
+    # the full-row max IS the masked max
+    boot = gamma * np.max(q_old[1:], axis=1)              # (L-1,)
+    targets = np.concatenate(
+        [np.broadcast_to(boot, (n, L - 1)), rew[:, None]], axis=1)
+    pos = np.broadcast_to(np.arange(L), (n, L))
+    np.add.at(q, (pos, g), lr * (targets - q_old[pos, g]))
+
+
 def dqn_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
                  platform=None, batch: int = 32, lr: float = 0.2,
                  eps_start: float = 0.9, eps_end: float = 0.05,
                  gamma: float = 0.98) -> Requests:
     """Sequential gene-picking MDP with a factored Q table (gene position x
-    value), epsilon-greedy, TD(0) bootstrapping along the episode."""
+    value), epsilon-greedy, batched TD(0) bootstrapping
+    (:func:`dqn_td_update`)."""
     rng = np.random.default_rng(seed)
     L = spec.length
     maxv = int(spec.gene_ub.max())
@@ -426,11 +454,10 @@ def dqn_requests(spec: GenomeSpec, tracker: _Budget, seed: int,
         rew = np.where(np.isfinite(edp), 0.0, -1.0)
         ok = np.isfinite(edp)
         rew[ok] = -np.log10(np.maximum(edp[ok], 1.0)) / 10.0
-        for i in range(n):
-            for j in reversed(range(L)):
-                target = rew[i] if j == L - 1 else \
-                    gamma * np.max(q[j + 1, :spec.gene_ub[j + 1]])
-                q[j, g[i, j]] += lr * (target - q[j, g[i, j]])
+        # NaN tail rows (budget-truncated, never evaluated) must not
+        # train the Q table
+        counted = tracker.last_n
+        dqn_td_update(q, g[:counted], rew[:counted], gamma, lr)
         step += 1
     return dict(method="dqn")
 

@@ -33,7 +33,7 @@ from .arch import ArchSpec, as_arch
 from .mapping import Mapping
 from .sparse import (FMT_U, SparseStrategy, TensorFormat, effective_bytes,
                      followers, is_gate, is_skip, leaders)
-from .workload import WORD_BYTES, Workload
+from .workload import Workload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,8 +146,11 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
     dens = {t.name: wl.density_of(t.name) for t in wl.tensors}
 
     def tile_bytes(store: str, tname: str) -> float:
+        # occupancy is accounted at the STORE's word width (per-level
+        # datawidths: a quantized level holds narrower words)
         n = mp.tensor_tile_elems(store, tname)
-        return effective_bytes(st.formats[tname], dens[tname], n, WORD_BYTES)
+        return effective_bytes(st.formats[tname], dens[tname], n,
+                               arch.word_bytes_of(store))
 
     # ---------- validity: buffer capacities ----------
     occ: Dict[str, float] = {}
@@ -160,12 +163,16 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
                 occupancy_bytes=occ)
 
     # ---------- per-tensor average bytes per dense position ----------
-    def comp_ratio(tname: str) -> float:
+    # the compression ratio depends on the word width (metadata bits do
+    # not scale with it), so it is computed per distinct edge width
+    def comp_ratio(tname: str, wb: float) -> float:
         full = wl.tensor(tname).size(wl.dim_sizes)
         return effective_bytes(st.formats[tname], dens[tname], full,
-                               WORD_BYTES) / max(full * WORD_BYTES, 1)
+                               wb) / max(full * wb, 1)
 
-    ratio = {t.name: comp_ratio(t.name) for t in wl.tensors}
+    ratio = {(t.name, wb): comp_ratio(t.name, wb)
+             for t in wl.tensors
+             for wb in set(arch.edge_word_bytes)}
 
     # ---------- S/G filter fractions per edge ----------
     def edge_fraction(site: str, tname: str, energy: bool) -> float:
@@ -190,16 +197,17 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
     edges = tuple(
         (arch.store_names[k + 1],
          None if arch.edge_site[k] is None
-         else store_sites[arch.edge_site[k]])
+         else store_sites[arch.edge_site[k]],
+         arch.edge_word_bytes[k])
         for k in range(arch.n_edges))
-    for store, site in edges:
+    for store, site, wb in edges:
         for t in wl.tensors:
             fills = mp.fills(store, t.name)
             if t.name == z_name:
                 total = wl.output.size(wl.dim_sizes)
                 # read-modify-write; write-once when fully accumulated
                 fills = max(2.0 * fills - total, float(total))
-            bytes_dense = fills * WORD_BYTES * ratio[t.name]
+            bytes_dense = fills * wb * ratio[(t.name, wb)]
             fe = ft = 1.0
             if site is not None:
                 fe = edge_fraction(site, t.name, energy=True)

@@ -19,6 +19,11 @@ levels and ``n_sites`` S/G sites (default paper arch: 5 levels, 3 sites):
   genes map to the k tiled sub-dimensions (cost_model.make_tensor_format).
 * **S/G** — one gene in [0,6] per arch S/G site (store sites then
   compute; paper arch: GLB / PE buffer / compute).
+
+The layout depends only on the arch's *mapping-level and site structure*:
+per-level word widths and NoC descriptors reprice the cost model but add
+no genes, so same-structure quantized/systolic variants keep identical
+genome layouts (and, via the traced param vector, shared compilations).
 """
 from __future__ import annotations
 

@@ -12,9 +12,10 @@ Compilation strategy: all workload- and platform-specific quantities
 single compilation is shared by every workload with the same
 (ndims, bucket, topology) signature and every same-topology platform.
 The arch's *structure* (loop-slot count, store tables, S/G site wiring,
-which parameters exist) is baked into the kernel as closure constants;
-its *numbers* ride in the traced parameter vector
-(``ArchSpec.param_vector``).  The compilation signature therefore gains a
+NoC multicast/reduction shape, which parameters exist) is baked into the
+kernel as closure constants; its *numbers* — including per-edge word
+widths when any level departs from the global default — ride in the
+traced parameter vector (``ArchSpec.param_vector``).  The compilation signature therefore gains a
 topology key: ``JaxCostModel.signature`` is
 ``(ndims, prime_bucket, topology_fingerprint)``, and
 ``eval_stacked``/``MultiSearch`` mega-batching keeps sharing compilations
@@ -141,6 +142,15 @@ class _TopoTables:
     energy_idx: Tuple[Tuple[int, ...], ...]  # per edge: component indices
     bw_checks: Tuple[Tuple[int, int], ...]  # (edge idx, param idx)
     mac_idx: int
+    # NoC shape per edge + the word-width parameterization: with
+    # uniform_words the kernel bakes WORD_BYTES as a constant (the
+    # pre-width code path); otherwise per-edge widths are read from the
+    # param vector at word_idx, so same-topology custom-width specs
+    # still share one compilation
+    noc_multicast: Tuple[bool, ...] = ()
+    noc_reduction: Tuple[bool, ...] = ()
+    uniform_words: bool = True
+    word_idx: Tuple[int, ...] = ()          # per edge: param idx
 
 
 @lru_cache(maxsize=32)
@@ -182,6 +192,7 @@ def _topo_tables(topo: Topology) -> _TopoTables:
             bw_checks.append((e, pos))
             pos += 1
     mac_idx = pos
+    word_idx = tuple(range(pos + 1, pos + 1 + n_edges))
 
     return _TopoTables(
         n_levels=nl, n_edges=n_edges, is_spatial=tuple(is_spatial),
@@ -189,7 +200,11 @@ def _topo_tables(topo: Topology) -> _TopoTables:
         store_inner=store_inner, edge_site=topo.edge_site,
         n_sites=len(topo.sg_sites), fanout_idx=fanout_idx,
         cap_checks=tuple(cap_checks), energy_idx=tuple(energy_idx),
-        bw_checks=tuple(bw_checks), mac_idx=mac_idx)
+        bw_checks=tuple(bw_checks), mac_idx=mac_idx,
+        noc_multicast=topo.noc_multicast or (True,) * n_edges,
+        noc_reduction=topo.noc_reduction or (True,) * n_edges,
+        uniform_words=topo.uniform_word_bytes,
+        word_idx=word_idx)
 
 
 # ---------------------------------------------------------------- kernel
@@ -249,6 +264,15 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
             contrib = jnp.where(rel_flat[t], bounds,
                                 jnp.where(~spatial_flat, bounds, 1.0))
             mult = jnp.prod(jnp.where(active & ~in_suffix, contrib, 1.0))
+            # NoC shape of edge s: without multicast (reads) / in-network
+            # reduction (the output, tensor 2), every spatial instance's
+            # copy crosses the edge — irrelevant spatial loops multiply
+            # traffic wherever they sit in the nest (suffix included)
+            discount = (tt.noc_reduction[s] if t == 2
+                        else tt.noc_multicast[s])
+            if not discount:
+                mult = mult * jnp.prod(jnp.where(
+                    active & irrel & spatial_flat, bounds, 1.0))
             tile = jnp.prod(jnp.where(
                 store_inner_lv[s][:, None] & relevance[t][None, :],
                 factors, 1.0))
@@ -305,9 +329,9 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
             comp_after = jnp.flip(jnp.cumsum(jnp.flip(comp_here))) - comp_here
             uop_bad = jnp.any(is_sub & (fmt == FMT_UOP) & (comp_after < 0.5))
             spat_bad = jnp.any(is_sub & spatial_flat & (fmt != FMT_U))
-            return ratio, compressed, uop_bad | spat_bad
+            return ratio, compressed, uop_bad | spat_bad, meta_bits
 
-        rs, comps, bads = zip(*[tensor_format(t) for t in range(3)])
+        rs, comps, bads, metas = zip(*[tensor_format(t) for t in range(3)])
         ratios = jnp.stack(rs)
         fmt_invalid = bads[0] | bads[1] | bads[2]
         p_comp, q_comp = comps[0], comps[1]
@@ -348,17 +372,39 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
         ft = jnp.stack(ft_rows)
         f_rmw = jnp.maximum(2.0 * fills - total_z, total_z)
         fills_adj = jnp.where(is_z[None, :] > 0.5, f_rmw, fills)
-        byt = fills_adj * wb * ratios[None, :]              # (NE edges, 3 t)
-        tr_e = byt * fe
-        tr_t = byt * ft
 
-        # ---- capacities ----
-        def tile_bytes(s):
-            tiles = jnp.stack([
+        def _tile_elems(s):
+            return jnp.stack([
                 jnp.prod(jnp.where(
                     store_inner_lv[s][:, None] & relevance[t][None, :],
                     factors, 1.0)) for t in range(3)])
-            return jnp.sum(tiles * wb * ratios)
+
+        if tt.uniform_words:
+            # default-width topology: the pre-word-width code, the global
+            # width baked as a constant (bit-identical to the goldens)
+            byt = fills_adj * wb * ratios[None, :]          # (NE edges, 3 t)
+
+            def tile_bytes(s):
+                return jnp.sum(_tile_elems(s) * wb * ratios)
+        else:
+            # per-edge widths from the param vector: data bytes scale
+            # with the width, metadata bits do not, so the compression
+            # ratio is recomputed per edge (edge s fills store s+1, whose
+            # width also prices that store's occupancy)
+            wbs = jnp.stack([plat[i] for i in tt.word_idx])  # (NE,)
+            full_wb = full_elems[None, :] * wbs[:, None]     # (NE, 3)
+            data_b = jnp.where(
+                jnp.stack(comps)[None, :],
+                full_elems[None, :] * densities[None, :] * wbs[:, None],
+                full_wb)
+            ratios_e = (data_b + jnp.stack(metas)[None, :] / 8.0) / \
+                jnp.maximum(full_wb, 1.0)                    # (NE, 3)
+            byt = fills_adj * wbs[:, None] * ratios_e
+
+            def tile_bytes(s):
+                return jnp.sum(_tile_elems(s) * wbs[s] * ratios_e[s])
+        tr_e = byt * fe
+        tr_t = byt * ft
 
         # ---- validity, energy, latency (param-vector driven) ----
         invalid = jnp.bool_(False)

@@ -26,7 +26,12 @@ storage level is
                       / prod(bounds of the innermost contiguous run of
                              loops irrelevant to the tensor)
     (bound-1 loops are transparent; irrelevant *spatial* loops multicast
-     and never multiply traffic.)
+     and never multiply traffic — unless the edge's NoC descriptor
+     (``StorageLevel.noc``) turns the discount off: with
+     ``multicast=False`` every spatial instance's read copy crosses the
+     edge, and with ``reduction=False`` every instance's partial output
+     sums cross, so irrelevant spatial loops then multiply traffic by
+     their bound wherever they sit in the nest.)
 """
 from __future__ import annotations
 
@@ -117,6 +122,11 @@ class Mapping:
         outer = [l for l in self.loops() if l[0] in outer_set]
         # drop transparent loops
         outer = [l for l in outer if l[2] > 1]
+        # NoC of the edge INTO this store: does an irrelevant spatial
+        # loop's traffic collapse to one copy (reads: multicast; output:
+        # in-network reduction of partials) or cross per instance?
+        noc = self.arch.edge_noc[self.arch.store_index[store] - 1]
+        discount = noc.reduction if t.is_output else noc.multicast
         # innermost contiguous run of irrelevant loops -> temporal reuse
         suffix = 0
         for lvl, d, bound, is_spatial in reversed(outer):
@@ -130,7 +140,15 @@ class Mapping:
                 mult *= bound
             elif not is_spatial:
                 mult *= bound          # temporal thrash: refetch
+            elif not discount:
+                mult *= bound          # unicast NoC: one copy per instance
             # irrelevant spatial loop: multicast, no extra upstream traffic
+        if not discount:
+            # replication is physical, not temporal reuse: irrelevant
+            # spatial loops multiply traffic even inside the reuse suffix
+            for lvl, d, bound, is_spatial in outer[len(outer) - suffix:]:
+                if is_spatial:
+                    mult *= bound
         return self.tensor_tile_elems(store, tensor_name) * mult
 
     def temporal_iterations(self) -> int:
@@ -170,6 +188,14 @@ def balanced_mapping_for_arch(workload: Workload, arch: ArchSpec,
     (8 per dim), medium staging tiles (64 per dim), and the outermost
     temporal level absorbs the rest.  ``spatial_caps`` overrides the
     arch's declared per-spatial-level fanouts (level order).
+
+    Every placement is additionally *capacity-aware*: a prime is only
+    taken at a level if the resulting uncompressed tile still fits every
+    capacity-checked store holding that level in its inner nest (at the
+    store's word width); rejected primes flow outward, ultimately to the
+    outermost temporal level, which no capacity-checked store holds — so
+    the fallback mapping is ``evaluate``-valid on deep or small-buffer
+    hierarchies where the fixed per-dim caps alone would overflow.
     """
     nl = arch.n_levels
     factors: List[Dict[str, int]] = [dict() for _ in range(nl)]
@@ -178,6 +204,31 @@ def balanced_mapping_for_arch(workload: Workload, arch: ArchSpec,
     def take(level: int, dim: str, f: int):
         factors[level][dim] = factors[level].get(dim, 1) * f
         remaining[dim] //= f
+
+    # capacity guard: (inner level set, capacity, word width) per
+    # capacity-checked store of the arch
+    cap_stores = [(set(arch.inner_levels_for[sname]), cap,
+                   arch.store_word_bytes[k])
+                  for k, sname, cap in arch.capacity_stores]
+
+    def fits(level: int, dim: str, f: int) -> bool:
+        """Would factor ``f`` of ``dim`` at ``level`` keep every
+        capacity-checked store's uncompressed occupancy within budget?"""
+        for inner, cap, wb in cap_stores:
+            if level not in inner:
+                continue
+            occ = 0.0
+            for t in workload.tensors:
+                n = 1
+                for d in t.dims:
+                    for l in inner:
+                        n *= factors[l].get(d, 1)
+                if dim in t.dims:
+                    n *= f
+                occ += n * wb
+            if occ > cap:
+                return False
+        return True
 
     contraction = [d for d in workload.dim_order
                    if d not in workload.output.dims]
@@ -197,7 +248,7 @@ def balanced_mapping_for_arch(workload: Workload, arch: ArchSpec,
         budget = min(caps[-1], 16)
         for d in contraction:
             for p in _prime_iter(remaining[d]):
-                if p <= budget:
+                if p <= budget and fits(lvl, d, p):
                     take(lvl, d, p)
                     budget //= p
                 if budget <= 1:
@@ -211,7 +262,7 @@ def balanced_mapping_for_arch(workload: Workload, arch: ArchSpec,
         for d in outs:
             per_dim = 1
             for p in _prime_iter(remaining[d]):
-                if p <= budget and per_dim * p <= 16:
+                if p <= budget and per_dim * p <= 16 and fits(lvl, d, p):
                     take(lvl, d, p)
                     budget //= p
                     per_dim *= p
@@ -224,7 +275,7 @@ def balanced_mapping_for_arch(workload: Workload, arch: ArchSpec,
         cap = 8 if pos == 0 else 64
         for d in workload.dim_order:
             for p in _prime_iter(remaining[d]):
-                if factors[lvl].get(d, 1) * p <= cap:
+                if factors[lvl].get(d, 1) * p <= cap and fits(lvl, d, p):
                     take(lvl, d, p)
     top = temporal[0]
     for d in workload.dim_order:

@@ -118,6 +118,36 @@ def report_best(workload: Workload, platform: PlatformLike,
 # ---------------------------------------------------------------- multi
 
 
+@dataclasses.dataclass(frozen=True)
+class PadPolicy:
+    """Mega-batch pad-watermark grow/decay constants for ONE topology.
+
+    The watermark grows to the largest padded round immediately;
+    it decays after ``decay_rounds`` consecutive rounds each needing at
+    most ``decay_ratio`` of the current shape.  The defaults are
+    CPU-tuned; each registered topology compiles its own kernel family,
+    so the retrace-vs-padded-compute sweet spot is a per-topology number
+    — register a measured policy with :func:`set_pad_policy` (keyed by
+    ``Topology.fingerprint``) or pass ``pad_policies`` to
+    :class:`MultiSearch` for a one-off override."""
+
+    decay_rounds: int = 3
+    decay_ratio: float = 0.5
+
+
+#: topology fingerprint -> tuned PadPolicy (default policy when absent)
+_PAD_POLICIES: Dict[str, PadPolicy] = {}
+
+
+def set_pad_policy(topology_fingerprint: str, policy: PadPolicy) -> None:
+    """Register the tuned pad-watermark policy for a topology."""
+    _PAD_POLICIES[topology_fingerprint] = policy
+
+
+def pad_policy_for(topology_fingerprint: str) -> PadPolicy:
+    return _PAD_POLICIES.get(topology_fingerprint, PadPolicy())
+
+
 @dataclasses.dataclass
 class SearchTask:
     """One (method, workload, platform) search in a :class:`MultiSearch`
@@ -199,7 +229,8 @@ class MultiSearch:
     """
 
     def __init__(self, tasks: Iterable, align_signatures: bool = True,
-                 stack_batches: bool = False):
+                 stack_batches: bool = False,
+                 pad_policies: Optional[Dict[str, PadPolicy]] = None):
         norm: List[SearchTask] = []
         for t in tasks:
             if isinstance(t, SearchTask):
@@ -213,8 +244,14 @@ class MultiSearch:
         self.tasks = norm
         self.align_signatures = align_signatures
         self.stack_batches = stack_batches
+        self.pad_policies = dict(pad_policies or {})
         self.final_names: List[str] = self._resolve_names(norm)
         self.stats: Dict = {}
+
+    def _pad_policy(self, topology_fingerprint: str) -> PadPolicy:
+        if topology_fingerprint in self.pad_policies:
+            return self.pad_policies[topology_fingerprint]
+        return pad_policy_for(topology_fingerprint)
 
     @staticmethod
     def _resolve_names(tasks: Sequence[SearchTask]) -> List[str]:
@@ -285,13 +322,18 @@ class MultiSearch:
         # Adaptive per-signature mega-batch shape: the pad floor grows to
         # the largest padded round immediately (shrinking fleets keep
         # hitting the warm shape), and decays to the recent maximum after
-        # K consecutive rounds needing at most HALF the current shape —
-        # one extra XLA trace instead of paying mostly-padding kernel
-        # compute every round after a one-off spike (e.g. round-1
-        # calibration probes + random_mapper's 512-row chunks).
-        K = 3
+        # ``decay_rounds`` consecutive rounds needing at most
+        # ``decay_ratio`` of the current shape — one extra XLA trace
+        # instead of paying mostly-padding kernel compute every round
+        # after a one-off spike (e.g. round-1 calibration probes +
+        # random_mapper's 512-row chunks).  The grow/decay constants are
+        # a per-TOPOLOGY :class:`PadPolicy` (each topology compiles its
+        # own kernel family, so the retrace trade-off is measured per
+        # topology); the per-round watermark trajectory lands in
+        # ``stats["pad_watermarks"]`` for cross-PR tracking.
         pad_hwm: Dict[Tuple[int, int, str], int] = {}
         pad_recent: Dict[Tuple[int, int, str], List[int]] = {}
+        wm_hist: Dict[Tuple[int, int, str], List[int]] = {}
         rounds = 0
         dispatch0 = jax_cost.dispatch_count()
         while alive:
@@ -303,6 +345,7 @@ class MultiSearch:
                     groups.setdefault(st.signature, []).append(st)
                 for sig in sorted(groups):
                     grp = groups[sig]
+                    pol = self._pad_policy(sig[2])
                     hwm = pad_hwm.get(sig, 0)
                     outs = jax_cost.eval_stacked(
                         [s.ev for s in grp], [s.req for s in grp],
@@ -311,14 +354,15 @@ class MultiSearch:
                         sum(len(s.req) for s in grp))
                     hist = pad_recent.setdefault(sig, [])
                     hist.append(target)
-                    del hist[:-K]
+                    del hist[:-pol.decay_rounds]
                     if target > hwm:
                         pad_hwm[sig] = target
                         hist.clear()
-                    elif len(hist) == K and \
-                            all(t <= hwm // 2 for t in hist):
+                    elif len(hist) == pol.decay_rounds and \
+                            all(t <= hwm * pol.decay_ratio for t in hist):
                         pad_hwm[sig] = max(hist)
                         hist.clear()
+                    wm_hist.setdefault(sig, []).append(pad_hwm[sig])
                     for st, out in zip(grp, outs):
                         if self._advance(st, out):
                             pending.append(st)
@@ -347,7 +391,15 @@ class MultiSearch:
             rounds=rounds,
             dispatches=jax_cost.dispatch_count() - dispatch0,
             signatures=sorted({s.signature for s in states}),
-            natural_signatures=sorted({s.natural for s in states}))
+            natural_signatures=sorted({s.natural for s in states}),
+            # per-signature mega-batch watermark trajectory + the policy
+            # that produced it, keyed "d{ndims}_p{bucket}_{topology}"
+            pad_watermarks={
+                f"d{sig[0]}_p{sig[1]}_{sig[2]}": hist
+                for sig, hist in wm_hist.items()},
+            pad_policies={
+                sig[2]: dataclasses.asdict(self._pad_policy(sig[2]))
+                for sig in wm_hist})
         return results
 
 

@@ -35,6 +35,8 @@ import dataclasses
 import math
 from typing import Dict, List, Sequence, Tuple
 
+from .workload import WORD_BYTES
+
 FMT_U, FMT_B, FMT_RLE, FMT_CP, FMT_UOP = range(5)
 FORMAT_NAMES = ("U", "B", "RLE", "CP", "UOP")
 
@@ -112,9 +114,14 @@ class TensorFormat:
 
 
 def fiber_tree_bytes(fmt: TensorFormat, density: float,
-                     word_bytes: int = 2) -> Tuple[float, float]:
+                     word_bytes: float = WORD_BYTES
+                     ) -> Tuple[float, float]:
     """(data_bytes, metadata_bytes) for one *full tensor* tile whose tiled
     sub-dimension lengths are ``fmt.fiber_lens`` (product = element count).
+
+    ``word_bytes`` is the datawidth of the level holding the tile
+    (``ArchSpec.store_word_bytes``); metadata bits are width-independent,
+    so the effective compression ratio varies with the level's width.
 
     Occupancy model (uniform random): the probability that a position at
     tree level i contains any nonzero below it is
@@ -158,7 +165,8 @@ def _clog2(x: float) -> float:
 
 
 def effective_bytes(fmt: TensorFormat, density: float,
-                    n_elems_tile: int, word_bytes: int = 2) -> float:
+                    n_elems_tile: int,
+                    word_bytes: float = WORD_BYTES) -> float:
     """Bytes occupied by a tile of ``n_elems_tile`` elements under this
     format, scaling the full-tensor fiber-tree accounting proportionally."""
     full_elems = 1

@@ -30,6 +30,46 @@ def test_same_seed_reproducible():
     assert a.best_edp == b.best_edp
 
 
+def test_dqn_td_update_matches_sequential_reference():
+    """The vectorized batched TD(0) update is EXACTLY the per-episode
+    sequential loop over the same frozen Q snapshot: np.add.at applies
+    duplicate-index increments unbuffered in element order, so the float
+    accumulation order is identical (pins the ROADMAP DQN item).
+
+    NOTE the snapshot semantics are themselves the change: the OLD
+    engine bootstrapped each episode off the live, mid-round Q table
+    (inherently sequential), so pre-PR fixed-seed DQN trajectories are
+    not preserved — DQN has no pinned goldens, only this contract."""
+    from repro.core.baselines import dqn_td_update
+    rng = np.random.default_rng(0)
+    L, V, n = 12, 9, 64
+    ub = rng.integers(2, V + 1, L)
+    q0 = rng.normal(size=(L, V))
+    for j in range(L):
+        q0[j, ub[j]:] = -1e9
+    g = (rng.random((n, L)) * ub[None, :]).astype(np.int64)
+    rew = rng.normal(size=n)
+    gamma, lr = 0.98, 0.2
+
+    q_vec = q0.copy()
+    dqn_td_update(q_vec, g, rew, gamma, lr)
+
+    q_seq, q_old = q0.copy(), q0.copy()
+    for i in range(n):         # sequential form of the snapshot update
+        for j in range(L):
+            target = rew[i] if j == L - 1 else \
+                gamma * np.max(q_old[j + 1, :ub[j + 1]])
+            q_seq[j, g[i, j]] += lr * (target - q_old[j, g[i, j]])
+    np.testing.assert_array_equal(q_vec, q_seq)
+
+
+def test_dqn_same_seed_reproducible():
+    a = search.run("dqn", WL, "cloud", budget=300, seed=11)
+    b = search.run("dqn", WL, "cloud", budget=300, seed=11)
+    assert a.best_edp == b.best_edp
+    assert np.array_equal(a.history, b.history)
+
+
 def test_sage_like_cannot_change_mapping():
     res = search.run("sage_like", WL, "cloud", budget=300, seed=0)
     if res.best_genome is None:

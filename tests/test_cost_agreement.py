@@ -12,7 +12,8 @@ try:        # hypothesis is an optional test extra (pyproject.toml)
 except ImportError:
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.configs.archs import CLUSTER_CLOUD, MAPLE_EDGE
+from repro.configs.archs import (CLUSTER_CLOUD, MAPLE_EDGE, QUANT_EDGE,
+                                 SYSTOLIC_MESH)
 from repro.core import accel
 from repro.core.arch import as_arch
 from repro.core.cost_model import evaluate
@@ -123,6 +124,22 @@ def test_agreement_maple_edge(wl, seed):
 def test_agreement_cluster_cloud(wl, seed):
     """4-store clustered arch (7 mapping levels, 4 S/G sites)."""
     _check_agreement(wl, CLUSTER_CLOUD, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_agreement_systolic_mesh(wl, seed):
+    """Mesh NoC (no read multicast, reduction-tree output collection):
+    the NoC-aware fills accounting must agree numpy-vs-kernel."""
+    _check_agreement(wl, SYSTOLIC_MESH, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_agreement_quant_edge(wl, seed):
+    """1-byte on-chip words: the traced per-edge width path of the
+    kernel must agree with the width-parameterized numpy oracle."""
+    _check_agreement(wl, QUANT_EDGE, seed)
 
 
 def test_new_archs_reach_valid_points():

@@ -1,0 +1,140 @@
+"""Per-topology pad-watermark policies (MultiSearch) and the CI
+BENCH_sweep.json regression gate (benchmarks/compare_sweep.py)."""
+import copy
+
+import numpy as np
+
+from benchmarks.compare_sweep import compare
+from repro.core import search
+from repro.core.arch import ARCH_SPARSEMAP
+from repro.core.search import (MultiSearch, PadPolicy, SearchTask,
+                               pad_policy_for, set_pad_policy)
+from repro.core.workload import spmm
+
+WL_A = spmm("pad_a", 32, 64, 48, 0.2, 0.5)
+WL_B = spmm("pad_b", 48, 32, 64, 0.4, 0.3)
+
+
+def _fleet(**kw):
+    tasks = [SearchTask(WL_A, "cloud", budget=300, seed=0,
+                        method="random_mapper"),
+             SearchTask(WL_B, "cloud", budget=300, seed=0,
+                        method="sparsemap")]
+    return MultiSearch(tasks, stack_batches=True, **kw)
+
+
+def test_pad_watermark_history_recorded_per_topology():
+    ms = _fleet()
+    ms.run()
+    fp = ARCH_SPARSEMAP.topology.fingerprint
+    assert list(ms.stats["pad_policies"]) == [fp]
+    assert ms.stats["pad_policies"][fp] == \
+        {"decay_rounds": 3, "decay_ratio": 0.5}
+    wms = ms.stats["pad_watermarks"]
+    assert len(wms) == 1
+    (key, hist), = wms.items()
+    assert key.endswith(fp)
+    assert len(hist) == ms.stats["rounds"]
+    assert all(h >= 64 for h in hist)       # the pad floor
+
+
+def test_pad_policy_override_and_registry():
+    aggressive = PadPolicy(decay_rounds=1, decay_ratio=1.0)
+    fp = ARCH_SPARSEMAP.topology.fingerprint
+    ms = _fleet(pad_policies={fp: aggressive})
+    res_o = ms.run()
+    assert ms.stats["pad_policies"][fp] == \
+        {"decay_rounds": 1, "decay_ratio": 1.0}
+    (_, hist_o), = ms.stats["pad_watermarks"].items()
+    ms_d = _fleet()
+    res_d = ms_d.run()
+    (_, hist_d), = ms_d.stats["pad_watermarks"].items()
+    # an always-decay policy tracks each round's own shape, so its
+    # watermark can only be at or below the sticky default's
+    assert len(hist_o) == len(hist_d)
+    assert all(o <= d for o, d in zip(hist_o, hist_d))
+    # padding rows are inert: results are identical under either policy
+    for name in res_d:
+        assert res_d[name].best_edp == res_o[name].best_edp
+        assert np.array_equal(res_d[name].history, res_o[name].history)
+    # the global registry is consulted when no override is passed
+    try:
+        set_pad_policy("deadbeef", aggressive)
+        assert pad_policy_for("deadbeef") == aggressive
+        assert pad_policy_for("not_registered") == PadPolicy()
+    finally:
+        search._PAD_POLICIES.pop("deadbeef", None)
+
+
+# ------------------------------------------------- compare_sweep gate
+
+
+BASE = dict(
+    budget=300,
+    archs=[
+        dict(arch="cloud", seconds=10.0, compiles=2,
+             dispatches_per_round=1.0),
+        dict(arch="maple_edge", seconds=5.0, compiles=2,
+             dispatches_per_round=1.0),
+    ])
+
+
+def test_compare_sweep_passes_on_identical_runs():
+    failures, warnings = compare(BASE, copy.deepcopy(BASE))
+    assert failures == [] and warnings == []
+
+
+def test_compare_sweep_fails_on_compile_and_dispatch_regressions():
+    cur = copy.deepcopy(BASE)
+    cur["archs"][0]["compiles"] = 3
+    cur["archs"][1]["dispatches_per_round"] = 2.0
+    failures, _ = compare(BASE, cur)
+    assert len(failures) == 2
+    assert "compiles regressed 2 -> 3" in failures[0]
+    assert "dispatches/round regressed" in failures[1]
+
+
+def test_compare_sweep_new_arch_and_timing_are_warn_only():
+    cur = copy.deepcopy(BASE)
+    cur["archs"].append(dict(arch="quant_edge", seconds=1.0, compiles=9,
+                             dispatches_per_round=3.0))
+    cur["archs"][0]["seconds"] = 100.0
+    failures, warnings = compare(BASE, cur)
+    assert failures == []
+    assert any("new arch" in w for w in warnings)
+    assert any("warn-only" in w for w in warnings)
+
+
+def test_compare_sweep_budget_mismatch_downgrades_to_warnings():
+    cur = copy.deepcopy(BASE)
+    cur["budget"] = 1000
+    cur["archs"][0]["compiles"] = 99
+    del cur["archs"][1]                 # disappearance downgrades too
+    failures, warnings = compare(BASE, cur)
+    assert failures == []
+    assert any("budgets differ" in w for w in warnings)
+    assert any("compiles regressed" in w for w in warnings)
+    assert any("disappeared" in w for w in warnings)
+
+
+def test_committed_baseline_is_well_formed():
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_sweep.baseline.json")
+    base = json.load(open(path))
+    failures, warnings = compare(base, base)
+    assert failures == [] and warnings == []
+    assert {a["arch"] for a in base["archs"]} >= \
+        {"cloud", "maple_edge", "cluster_cloud", "systolic_mesh",
+         "quant_edge"}
+    for a in base["archs"]:
+        assert a["dispatches_per_round"] == 1.0
+        assert a["pad_watermarks"] and a["pad_policies"]
+
+
+def test_compare_sweep_fails_when_arch_disappears():
+    cur = copy.deepcopy(BASE)
+    cur["archs"] = cur["archs"][:1]
+    failures, _ = compare(BASE, cur)
+    assert failures == ["maple_edge: arch disappeared from the sweep"]

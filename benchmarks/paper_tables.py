@@ -14,8 +14,7 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.configs.paper_workloads import (all_workloads, by_name,
-                                           conv_workloads, mm_workloads)
+from repro.configs.paper_workloads import all_workloads, by_name
 from repro.core import accel, search
 from repro.core.workload import spmm
 
@@ -170,7 +169,6 @@ def fig2_interaction(platform: str = "mobile") -> List[Dict]:
     """Fig. 2: no single (mapping x format) wins across sparsity — we
     sweep OS/IS mappings x {CSR-like, RLE} formats over densities."""
     from repro.core.cost_model import Design, evaluate, make_tensor_format
-    from repro.core.encoding import GenomeSpec
     from repro.core.mapping import Mapping, balanced_mapping
     from repro.core.sparse import SparseStrategy
 
@@ -178,7 +176,6 @@ def fig2_interaction(platform: str = "mobile") -> List[Dict]:
     rows, out = [], []
     for dens in (0.05, 0.1, 0.2, 0.4, 0.8):
         wl = spmm(f"fig2_d{dens}", 256, 512, 256, dens, dens)
-        spec = GenomeSpec(wl)
         for mapping_name in ("OS", "IS"):
             mp = balanced_mapping(wl, plat.n_pe, plat.macs_per_pe)
             if mapping_name == "IS":

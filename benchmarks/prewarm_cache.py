@@ -1,0 +1,71 @@
+"""Pre-warm the JAX persistent compilation cache shared by the test
+suite (tests/conftest.py points both the in-process tests and the slow
+tier's subprocess fixture at ``.pytest_cache/jax_persistent_cache``).
+
+CI restores that directory via ``actions/cache`` (keyed on JAX version +
+kernel-source hash) and runs this script on a cache miss, so the first
+test run of a fresh key already loads compiled executables from disk
+instead of paying cold XLA compiles:
+
+    PYTHONPATH=src python -m benchmarks.prewarm_cache [cache_dir]
+
+Compiles the batch-evaluator kernels the suite leans on hardest: the
+default paper topology plus every registered arch, on the common
+(ndims=3, bucket=16) signature, both uniform and structured density
+modes, broadcast and stacked variants, at the canonical padded batch
+shapes.  Best-effort everywhere: backends without persistent-cache
+support simply compile and discard.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_DEFAULT_DIR = os.path.join(".pytest_cache", "jax_persistent_cache")
+
+
+def main(cache_dir: str = _DEFAULT_DIR) -> None:
+    os.makedirs(cache_dir, exist_ok=True)
+    # must land in the environment before jax initializes
+    os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", cache_dir)
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS",
+                          "0")
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES",
+                          "0")
+
+    import numpy as np
+
+    from repro.configs.paper_workloads import (banded_attention_workloads,
+                                               by_name)
+    from repro.core import jax_cost, search
+    from repro.core.arch import registered_archs
+
+    rng = np.random.default_rng(0)
+    wls = [by_name("mm1"), by_name("mm3")]
+    archs = ["cloud"] + sorted(registered_archs())
+    for arch in archs:
+        for wl in wls:
+            spec, ev = search.get_evaluator(wl, arch, n_pad=16)
+            ev(spec.random_genomes(rng, 64))
+        specs_evs = [search.get_evaluator(wl, arch, n_pad=16)
+                     for wl in wls]
+        jax_cost.eval_stacked(
+            [ev for _, ev in specs_evs],
+            [spec.random_genomes(rng, 64) for spec, _ in specs_evs])
+    # structured-density kernels (the mixed fleet of the sweep guard)
+    swls = [by_name("mm1"), banded_attention_workloads()[0]]
+    models, batches = [], []
+    for wl in swls:
+        spec, ev = search.get_evaluator(wl, "cloud", n_pad=32,
+                                        structured=True)
+        g = spec.random_genomes(rng, 64)
+        ev(g)
+        models.append(ev)
+        batches.append(g)
+    jax_cost.eval_stacked(models, batches)
+    print(f"prewarmed {jax_cost.compilation_count()} compilations into "
+          f"{cache_dir}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:2])

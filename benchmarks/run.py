@@ -18,7 +18,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
 
 import numpy as np
@@ -27,10 +26,14 @@ SWEEP_JSON = os.environ.get("REPRO_BENCH_SWEEP_JSON", "BENCH_sweep.json")
 
 
 def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
-    """One stacked ``run_method_sweep`` fleet per registered arch; the
-    per-cell best-EDPs plus fleet-level compile/dispatch counts land in
-    ``out_path`` as JSON."""
-    from repro.configs.paper_workloads import by_name
+    """One stacked ``run_method_sweep`` fleet per registered arch, plus
+    one structured-density fleet (the 2:4 sparseGPT BlockNM family + a
+    banded-attention workload + a uniform control as ONE mega-batched
+    signature — density families/params are traced, so the compile count
+    must stay flat across the family); the per-cell best-EDPs plus
+    fleet-level compile/dispatch counts land in ``out_path`` as JSON."""
+    from repro.configs.paper_workloads import (banded_attention_workloads,
+                                               by_name)
     from repro.core import jax_cost, search
 
     methods = ["sparsemap", "random_mapper", "pso"]
@@ -39,15 +42,17 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
              "quant_edge"]
     record = dict(budget=budget, methods=methods,
                   workloads=[w.name for w in wls], archs=[], cells=[])
-    for arch in archs:
+
+    def run_fleet(entry_name, fleet_methods, fleet_wls, arch):
         search.clear_cache()
         stats: dict = {}
         t0 = time.time()
-        grid = search.run_method_sweep(methods, wls, arch, budget=budget,
-                                       seed=0, stack_batches=True,
+        grid = search.run_method_sweep(fleet_methods, fleet_wls, arch,
+                                       budget=budget, seed=0,
+                                       stack_batches=True,
                                        stats_out=stats)
         arec = dict(
-            arch=arch, seconds=round(time.time() - t0, 2),
+            arch=entry_name, seconds=round(time.time() - t0, 2),
             compiles=jax_cost.compilation_count(),
             rounds=stats["rounds"], dispatches=stats["dispatches"],
             dispatches_per_round=round(
@@ -60,14 +65,27 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
             pad_watermarks=stats.get("pad_watermarks", {}),
             pad_policies=stats.get("pad_policies", {}))
         record["archs"].append(arec)
-        for m in methods:
-            for w in wls:
+        for m in fleet_methods:
+            for w in fleet_wls:
                 r = grid[m][w.name]
                 record["cells"].append(dict(
-                    arch=arch, method=m, workload=w.name,
+                    arch=entry_name, method=m, workload=w.name,
                     best_edp=(float(r.best_edp)
                               if np.isfinite(r.best_edp) else None),
                     evals=int(r.evals), valid_evals=int(r.valid_evals)))
+
+    for arch in archs:
+        run_fleet(arch, methods, wls, arch)
+
+    # structured-density mixed fleet on the paper arch: BlockNM(2,4)
+    # family (mm8-mm10) + banded attention + uniform mm1 — density-mode
+    # alignment promotes the whole group onto the structured kernel, so
+    # the gate holds it at ONE signature (1.0 dispatches/round)
+    struct_wls = ([by_name(n) for n in ("mm1", "mm8", "mm9", "mm10")] +
+                  banded_attention_workloads()[:1])
+    run_fleet("structured_cloud", ["sparsemap", "random_mapper"],
+              struct_wls, "cloud")
+
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     return record

@@ -5,11 +5,10 @@ meshes — the paper's joint-space insight applied to multi-pod training.
 
     PYTHONPATH=src python examples/autoshard_search.py
 """
-import numpy as np
 
 
 def main():
-    from repro.configs import ARCHS, get_config
+    from repro.configs import get_config
     from repro.core import autoshard
 
     meshes = {

@@ -6,19 +6,16 @@ reduced LM for a few steps with the surrounding framework.
 """
 import time
 
-import numpy as np
-
 
 def main():
     # ---------------- 1. the paper's DSE ----------------
     from repro.core import search
-    from repro.core.workload import spmm
     from repro.configs.paper_workloads import by_name
 
     wl = by_name("conv4")       # pruned VGG16 layer (Table III)
     print(f"workload {wl.name}: dims={wl.orig_dim_sizes} "
-          f"densities=({wl.tensors[0].density:.2f}, "
-          f"{wl.tensors[1].density:.2f})")
+          f"densities=({wl.density_of('P'):.2f}, "
+          f"{wl.density_of('Q'):.2f})")
 
     t0 = time.time()
     res = search.run("sparsemap", wl, "cloud", budget=2000, seed=0)

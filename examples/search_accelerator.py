@@ -13,7 +13,6 @@ ArchSpec-driven, so non-default memory hierarchies search end-to-end.
 import argparse
 import time
 
-import numpy as np
 
 
 def main(argv=None):

@@ -19,7 +19,7 @@ import os
 import shutil
 import tempfile
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

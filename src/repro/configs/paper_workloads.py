@@ -1,11 +1,16 @@
 """SparseMap Table III workloads: mm1-mm15 (DeepBench + sparseGPT SpMM)
-and conv1-conv13 (VGG16, 50% global pruning), plus per-arch GEMM
+and conv1-conv13 (VGG16, 50% global pruning), plus structured-density
+sets — the sparseGPT SpMMs (mm8-mm10) carry their real 2:4
+block-pruning structure (``BlockNM(2, 4)``) rather than a uniform 50%
+scalar, and ``banded_attention_workloads`` adds windowed-attention
+score x value GEMMs with ``Banded`` operands — plus per-arch GEMM
 extraction so the DSE can be run on this framework's own architectures.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.core.density import Banded, BlockNM, DensityModel
 from repro.core.workload import Workload, spconv, spmm
 
 
@@ -50,9 +55,25 @@ _CONV = [
 ]
 
 
+# Structured-density overrides: the sparseGPT SpMMs (mm8-mm10) are 2:4
+# block-pruned weight matrices (operand2 = Q), not uniform-random 50%.
+# BlockNM(2, 4).density == 0.5, so the mean matches the Table III entry
+# while the byte/intersection statistics carry the N:M structure.
+_MM_STRUCTURED: Dict[str, Dict[str, DensityModel]] = {
+    "mm8": {"Q": BlockNM(2, 4)},
+    "mm9": {"Q": BlockNM(2, 4)},
+    "mm10": {"Q": BlockNM(2, 4)},
+}
+
+
 def mm_workloads() -> List[Workload]:
-    return [spmm(n, m, k, nn, dp / 100.0, dq / 100.0)
-            for n, m, k, nn, dp, dq in _MM]
+    out = []
+    for n, m, k, nn, dp, dq in _MM:
+        over = _MM_STRUCTURED.get(n, {})
+        out.append(spmm(n, m, k, nn,
+                        over.get("P", dp / 100.0),
+                        over.get("Q", dq / 100.0)))
+    return out
 
 
 def conv_workloads() -> List[Workload]:
@@ -60,12 +81,35 @@ def conv_workloads() -> List[Workload]:
             for n, c, h, w, ko, r, s, di, dw in _CONV]
 
 
+# (name, tokens, d_head, band fraction, score density) — windowed/local
+# attention score x value GEMMs: P = post-softmax scores S[M=tokens,
+# K=tokens], banded with the attention window (nonzeros only inside the
+# band, where dropout/thresholding leaves ~70% of entries), Q = the
+# dense value matrix V[K=tokens, N=d_head].
+_BANDED_ATTN = [
+    ("battn1", 512, 64, 0.125, 0.0875),
+    ("battn2", 1024, 64, 0.0625, 0.04375),
+]
+
+
+def banded_attention_workloads() -> List[Workload]:
+    return [spmm(n, t, t, dh, Banded(d, band), 1.0)
+            for n, t, dh, band, d in _BANDED_ATTN]
+
+
+def structured_workloads() -> List[Workload]:
+    """Every workload carrying a non-uniform density model: the 2:4
+    sparseGPT family + the banded-attention set."""
+    return [w for w in mm_workloads() if w.structured_density] + \
+        banded_attention_workloads()
+
+
 def all_workloads() -> List[Workload]:
     return mm_workloads() + conv_workloads()
 
 
 def by_name(name: str) -> Workload:
-    for wl in all_workloads():
+    for wl in all_workloads() + banded_attention_workloads():
         if wl.name == name:
             return wl
     raise KeyError(name)

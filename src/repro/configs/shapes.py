@@ -37,7 +37,7 @@ LONG_CONTEXT_ARCHS = {"xlstm-350m", "gemma3-12b", "zamba2-2.7b"}
 
 
 def applicable(arch: str, shape: str) -> Tuple[bool, str]:
-    cfg = get_config(arch)
+    get_config(arch)            # validates the arch name
     sh = SHAPES[shape]
     if sh.kind == "long_decode" and arch not in LONG_CONTEXT_ARCHS:
         return False, ("long_500k skipped: pure full-attention arch "

@@ -31,7 +31,7 @@ Decision genome (one gene per decision):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 
@@ -243,7 +243,6 @@ def search(cfg, seq_len: int, global_batch: int,
 def exhaustive_best(cfg, seq_len, global_batch, mesh_shape, kind="train"):
     """Tiny genome -> exhaustive reference (the space is ~6k points);
     lets tests verify the ES finds the true optimum."""
-    spec = DecisionSpec()
     best, best_t = None, np.inf
     ranges = [range(u) for u in GENE_UB]
     import itertools

@@ -33,7 +33,6 @@ from .arch import ArchSpec, as_arch
 from .mapping import Mapping
 from .sparse import (FMT_U, SparseStrategy, TensorFormat, effective_bytes,
                      followers, is_gate, is_skip, leaders)
-from .workload import Workload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,13 +142,17 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
     if not ok:
         return CostReport(False, why)
 
-    dens = {t.name: wl.density_of(t.name) for t in wl.tensors}
+    # per-tensor density models: byte accounting consumes the full model
+    # (fiber-fill statistics), S/G intersections its element-granularity
+    # hit rate (== mean density for every built-in model)
+    dmodel = {t.name: wl.density_model_of(t.name) for t in wl.tensors}
+    hit = {n: m.hit_rate() for n, m in dmodel.items()}
 
     def tile_bytes(store: str, tname: str) -> float:
         # occupancy is accounted at the STORE's word width (per-level
         # datawidths: a quantized level holds narrower words)
         n = mp.tensor_tile_elems(store, tname)
-        return effective_bytes(st.formats[tname], dens[tname], n,
+        return effective_bytes(st.formats[tname], dmodel[tname], n,
                                arch.word_bytes_of(store))
 
     # ---------- validity: buffer capacities ----------
@@ -167,7 +170,7 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
     # not scale with it), so it is computed per distinct edge width
     def comp_ratio(tname: str, wb: float) -> float:
         full = wl.tensor(tname).size(wl.dim_sizes)
-        return effective_bytes(st.formats[tname], dens[tname], full,
+        return effective_bytes(st.formats[tname], dmodel[tname], full,
                                wb) / max(full * wb, 1)
 
     ratio = {(t.name, wb): comp_ratio(t.name, wb)
@@ -175,6 +178,9 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
              for wb in set(arch.edge_word_bytes)}
 
     # ---------- S/G filter fractions per edge ----------
+    # a follower's surviving fraction is the product of its leaders'
+    # intersection hit rates (DensityModel.hit_rate — the mean density
+    # for uniform/banded/N:M leaders; N:M is deterministic at n/m)
     def edge_fraction(site: str, tname: str, energy: bool) -> float:
         sg = st.sg[site]
         if tname not in followers(sg):
@@ -183,7 +189,7 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
             f = 1.0
             for ld in leaders(sg):
                 if ld != tname:
-                    f *= dens[ld]
+                    f *= hit[ld]
             return f
         return 1.0
 
@@ -228,10 +234,10 @@ def evaluate(design: Design, platform: Union[str, Platform, ArchSpec]
             energy_leaders.update(leaders(sg))
     cyc_frac = 1.0
     for ld in cycle_leaders:
-        cyc_frac *= dens[ld]
+        cyc_frac *= hit[ld]
     e_frac = 1.0
     for ld in energy_leaders:
-        e_frac *= dens[ld]
+        e_frac *= hit[ld]
 
     compute_cycles = float(mp.temporal_iterations()) * cyc_frac
 

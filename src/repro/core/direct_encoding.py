@@ -2,8 +2,8 @@
 cantor encoding (SparseMap §IV.B, Fig. 10, Fig. 18 curve "ES").
 
 Genome layout (n_levels/sg-site counts derived from the canonical spec's
-arch — word widths and NoC descriptors add no genes, exactly as in the
-canonical encoding; paper arch shown):
+arch — word widths, NoC descriptors and per-tensor density models add no
+genes, exactly as in the canonical encoding; paper arch shown):
 
     [ perm x5 (RANDOM code->permutation table, Fig. 10a)
       | factor values, d dims x 5 levels, each in [1 .. size(dim)]

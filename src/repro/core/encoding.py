@@ -20,16 +20,19 @@ levels and ``n_sites`` S/G sites (default paper arch: 5 levels, 3 sites):
 * **S/G** — one gene in [0,6] per arch S/G site (store sites then
   compute; paper arch: GLB / PE buffer / compute).
 
-The layout depends only on the arch's *mapping-level and site structure*:
-per-level word widths and NoC descriptors reprice the cost model but add
-no genes, so same-structure quantized/systolic variants keep identical
-genome layouts (and, via the traced param vector, shared compilations).
+The layout depends only on the arch's *mapping-level and site structure*
+and the workload's *dimension structure*: per-level word widths and NoC
+descriptors reprice the cost model but add no genes, and the same holds
+for per-tensor density models (``repro.core.density``) — a uniform, a
+banded and a 2:4-pruned workload of the same shape share identical
+genome layouts (density models reprice occupancy/intersections via the
+kernel's traced parameter rows, they never widen the genome).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 

@@ -15,11 +15,18 @@ The arch's *structure* (loop-slot count, store tables, S/G site wiring,
 NoC multicast/reduction shape, which parameters exist) is baked into the
 kernel as closure constants; its *numbers* — including per-edge word
 widths when any level departs from the global default — ride in the
-traced parameter vector (``ArchSpec.param_vector``).  The compilation signature therefore gains a
-topology key: ``JaxCostModel.signature`` is
-``(ndims, prime_bucket, topology_fingerprint)``, and
+traced parameter vector (``ArchSpec.param_vector``).  Per-tensor density
+models follow the same split: the *mode* is structural — all-uniform
+workloads bake the literal pre-density-model occupancy code
+(bit-identical to the goldens) while any structured operand selects the
+structured kernel variant — and within the structured variant the family
+codes and numeric parameters (N:M's n/m, a band's coverage) are traced
+rows, so a family of N:M workloads, or a whole mixed
+uniform/banded/N:M fleet, shares ONE compilation.
+``JaxCostModel.signature`` is therefore
+``(ndims, prime_bucket, topology_fingerprint, density_key)``, and
 ``eval_stacked``/``MultiSearch`` mega-batching keeps sharing compilations
-*within* a topology.
+*within* a (topology, density-mode) pair.
 
 The decode is fully tensorized: tiling factors via masked products over the
 prime list, permutations via a (d!, d) lookup table, loop-nest reuse via
@@ -36,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import density as density_lib
 from .accel import Platform
 from .arch import ARCH_SPARSEMAP, ArchSpec, Topology, as_arch
 from .encoding import GenomeSpec, all_permutations
@@ -72,11 +80,17 @@ def _bucket(n: int, size: int = 16) -> int:
 
 
 # Registry of live jitted evaluators, keyed by compilation signature
-# (ndims, padded prime count, topology fingerprint, kind) where kind is
-# "bcast" (workload constants broadcast over the batch) or "stacked"
-# (per-row constants, the mega-batch kernel) — used to count actual XLA
-# compilations (one per distinct traced argument-shape set per signature).
-_JIT_FNS: Dict[Tuple[int, int, str, str], object] = {}
+# (ndims, padded prime count, topology fingerprint, density key, kind)
+# where kind is "bcast" (workload constants broadcast over the batch) or
+# "stacked" (per-row constants, the mega-batch kernel) — used to count
+# actual XLA compilations (one per distinct traced argument-shape set per
+# signature).  The density key is "u" for all-uniform workloads (the
+# literal pre-density-model kernel, bit-identical to the goldens) or
+# "s:<registered families>" for the structured variant, in which the
+# per-tensor family code and its numeric parameters are TRACED — a whole
+# family of N:M workloads, or a mixed uniform/banded/N:M fleet, shares
+# one compilation.
+_JIT_FNS: Dict[Tuple[int, int, str, str, str], object] = {}
 
 # Device dispatches issued through JaxCostModel / eval_stacked since the
 # last reset — the per-round dispatch-count benchmark hook.
@@ -96,9 +110,10 @@ def compilation_count() -> int:
     return total
 
 
-def compile_signatures() -> Tuple[Tuple[int, int, str], ...]:
-    """The (ndims, prime-bucket, topology) signatures built so far."""
-    return tuple(sorted({(k[0], k[1], k[2]) for k in _JIT_FNS}))
+def compile_signatures() -> Tuple[Tuple[int, int, str, str], ...]:
+    """The (ndims, prime-bucket, topology, density-key) signatures built
+    so far."""
+    return tuple(sorted({(k[0], k[1], k[2], k[3]) for k in _JIT_FNS}))
 
 
 def dispatch_count() -> int:
@@ -207,14 +222,86 @@ def _topo_tables(topo: Topology) -> _TopoTables:
         word_idx=word_idx)
 
 
+# ------------------------------------------- density occupancy builders
+#
+# JAX counterparts of DensityModel.block_nonempty, keyed by family name.
+# Each takes (params_row, elems) where params_row is the traced
+# [code, hit_rate, family params...] row (density.param_row) and elems
+# the (possibly fractional) tile extents, and returns P(block nonempty).
+# Custom families register with :func:`register_density_occ` BEFORE
+# building evaluators (the structured kernel bakes the registered set at
+# trace time; the registry fingerprint is part of the signature).
+
+
+def _occ_uniform(pr, e):
+    return 1.0 - jnp.power(1.0 - pr[2], jnp.maximum(e, 1.0))
+
+
+def _occ_banded(pr, e):
+    cov = jnp.maximum(pr[3], 1e-30)
+    d_in = jnp.clip(pr[2] / cov, 0.0, 1.0)
+    return cov * (1.0 - jnp.power(1.0 - d_in, jnp.maximum(e, 1.0)))
+
+
+def _occ_block_nm(pr, e):
+    # hypergeometric miss: C(m-n, e) / C(m, e) via log-gamma (fractional
+    # e supported); any window wider than the zero budget m-n must hit
+    from jax.scipy.special import gammaln
+    n_, m_ = pr[2], pr[3]
+    free = m_ - n_
+    e_ = jnp.maximum(e, 1.0)
+    ec = jnp.minimum(e_, free)
+    lg = (gammaln(free + 1.0) + gammaln(m_ - ec + 1.0)
+          - gammaln(free - ec + 1.0) - gammaln(m_ + 1.0))
+    return jnp.where(e_ > free, 1.0, 1.0 - jnp.exp(lg))
+
+
+_JAX_OCC = {"uniform": _occ_uniform, "banded": _occ_banded,
+            "block_nm": _occ_block_nm}
+
+
+def register_density_occ(family: str, fn) -> None:
+    """Register the JAX occupancy builder of a custom density family
+    (numpy side: ``density.register_density_model``).  Must happen before
+    any structured evaluator is built."""
+    if family in _JAX_OCC and _JAX_OCC[family] is not fn:
+        raise ValueError(f"density family {family!r} already has a JAX "
+                         f"occupancy builder")
+    _JAX_OCC[family] = fn
+
+
+def _occ_structured(pr, e):
+    """Trace-time dispatch over the registered families: every family's
+    occupancy is computed and the traced per-tensor code selects one —
+    the family assignment rides in the traced params, so it never splits
+    compilations."""
+    fams = density_lib.registered_families()
+    missing = [f for f in fams if f not in _JAX_OCC]
+    if missing:
+        raise KeyError(
+            f"density families {missing} have no JAX occupancy builder; "
+            f"call jax_cost.register_density_occ (COMPAT.md)")
+    out = _JAX_OCC[fams[0]](pr, e)
+    for fam in fams[1:]:
+        out = jnp.where(pr[0] == float(density_lib.family_code(fam)),
+                        _JAX_OCC[fam](pr, e), out)
+    return out
+
+
 # ---------------------------------------------------------------- kernel
 
 
 @lru_cache(maxsize=32)
 def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
-                 stacked: bool = False):
+                 dens_key: str = "u", stacked: bool = False):
     """Build the jitted batch evaluator for (ndims=d, padded prime count,
-    topology).
+    topology, density mode).
+
+    ``dens_key == "u"`` bakes the uniform-random occupancy model exactly
+    as the pre-density-model code did (bit-identical to the goldens);
+    any other value builds the structured variant, in which each
+    tensor's density-model family code and numeric parameters are read
+    from the traced ``dens_params`` rows (see ``_occ_structured``).
 
     With ``stacked=False`` the workload/platform quantities are broadcast
     over the batch (one workload per call); with ``stacked=True`` they are
@@ -222,8 +309,8 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
     platforms can be concatenated into one mega-batch and evaluated in a
     single device dispatch (``eval_stacked``)."""
     tt = _topo_tables(topo)
+    structured = dens_key != "u"
     NL = tt.n_levels
-    nl = NL * d
     NE = tt.n_edges
     perm_table = jnp.asarray(all_permutations(d), jnp.int32)
     store_outer_lv = jnp.asarray(np.asarray(tt.store_outer))  # (NE, NL)
@@ -234,7 +321,7 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
 
     def eval_one(perm_genes, assign, fmt_genes, sg,
                  primes, prime_dim, relevance, densities, full_elems,
-                 total_macs, z_onehot, plat):
+                 total_macs, z_onehot, plat, dens_params):
         # ---- tiling factors (NL, d) ----
         lvl_eq = assign[None, :] == jnp.arange(NL,
                                                dtype=jnp.int32)[:, None]
@@ -298,7 +385,12 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
             sub_bounds = jnp.where(is_sub, bounds, 1.0)
             suffix_prod = jnp.flip(jnp.cumprod(jnp.flip(sub_bounds)))
             elems_below = suffix_prod / sub_bounds
-            occ = 1.0 - jnp.power(1.0 - dens, jnp.maximum(elems_below, 1.0))
+            if structured:
+                occ = _occ_structured(dens_params[t], elems_below)
+            else:
+                # all-uniform: the literal pre-density-model expression
+                occ = 1.0 - jnp.power(1.0 - dens,
+                                      jnp.maximum(elems_below, 1.0))
             kept = sub_bounds * occ
             full = full_elems[t]
 
@@ -343,7 +435,12 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
         fol_q = jnp.asarray(SG_FOLLOW_Q)[sg]
         skips = jnp.asarray(SG_IS_SKIP)[sg]
         gates = jnp.asarray(SG_IS_GATE)[sg]
-        d_p, d_q = densities[0], densities[1]
+        if structured:
+            # element-granularity intersection hit rates of the input
+            # leaders (DensityModel.hit_rate, traced per tensor)
+            d_p, d_q = dens_params[0, 1], dens_params[1, 1]
+        else:
+            d_p, d_q = densities[0], densities[1]
         sg_invalid = jnp.any(skips & ((lead_p & ~p_comp) |
                                       (lead_q & ~q_comp)))
         frac_e_p = jnp.where(fol_p & (skips | gates), d_q, 1.0)
@@ -445,9 +542,9 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
                     edp=jnp.where(valid, edp, big),
                     log10_edp=jnp.where(valid, log10_edp, big))
 
-    in_axes = (0,) * 12 if stacked else (0, 0, 0, 0) + (None,) * 8
+    in_axes = (0,) * 13 if stacked else (0, 0, 0, 0) + (None,) * 9
     fn = jax.jit(jax.vmap(eval_one, in_axes=in_axes))
-    _JIT_FNS[(d, n_primes_pad, topo.fingerprint,
+    _JIT_FNS[(d, n_primes_pad, topo.fingerprint, dens_key,
               "stacked" if stacked else "bcast")] = fn
     return fn
 
@@ -464,11 +561,19 @@ class JaxCostModel:
     ``n_pad`` widens the prime axis beyond the workload's natural bucket so
     a group of concurrent searches over different workloads can be forced
     onto ONE compilation signature (``search.MultiSearch``); the padding
-    primes are 1.0 and are numerically inert."""
+    primes are 1.0 and are numerically inert.
+
+    ``structured`` likewise promotes an all-uniform workload onto the
+    structured-density kernel variant (its Uniform models become traced
+    family rows) so a mixed uniform/banded/N:M fleet shares one
+    signature; ``None`` picks the workload's natural mode — all-uniform
+    workloads then compile the literal pre-density-model kernel,
+    bit-identical to the goldens."""
 
     def __init__(self, spec: GenomeSpec,
                  platform: Union[str, Platform, ArchSpec],
-                 n_pad: Optional[int] = None):
+                 n_pad: Optional[int] = None,
+                 structured: Optional[bool] = None):
         self.spec = spec
         self.arch = as_arch(platform)
         self.platform = self.arch          # legacy alias
@@ -482,6 +587,16 @@ class JaxCostModel:
         self.d = d
         self.n_primes = spec.n_primes
         self.n_pad = _bucket(max(self.n_primes, 1, int(n_pad or 0)))
+        natural_structured = wl.structured_density
+        if structured is None:
+            structured = natural_structured
+        elif not structured and natural_structured:
+            raise ValueError(
+                f"workload {wl.name!r} declares structured density "
+                f"models; it cannot run on the uniform kernel")
+        self.structured = bool(structured)
+        self.dens_key = "u" if not self.structured else \
+            "s:" + density_lib.registry_fingerprint()
 
         primes = np.ones(self.n_pad, dtype=np.float32)
         prime_dim = np.zeros(self.n_pad, dtype=np.int32)
@@ -503,12 +618,16 @@ class JaxCostModel:
             np.float32(wl.macs),
             np.asarray([1.0 if t.is_output else 0.0 for t in wl.tensors],
                        np.float32),
-            self.arch.param_vector())
+            self.arch.param_vector(),
+            # per-tensor traced density rows [code, hit, family params..]
+            np.asarray([density_lib.param_row(wl.density_model_of(t.name))
+                        for t in wl.tensors], np.float32))
         (self._primes, self._prime_dim, self._relevance, self._densities,
-         self._full_elems, self._total_macs, self._z_onehot, self._plat) = \
-            [jnp.asarray(c) for c in self._np_consts]
+         self._full_elems, self._total_macs, self._z_onehot, self._plat,
+         self._dens_params) = [jnp.asarray(c) for c in self._np_consts]
 
-        self._fn = _jitted_eval(d, self.n_pad, self.arch.topology)
+        self._fn = _jitted_eval(d, self.n_pad, self.arch.topology,
+                                self.dens_key)
         s = spec.segments
         self._sl_perm = (s["perm"].start, s["perm"].stop)
         self._sl_til = (s["tiling"].start, s["tiling"].stop)
@@ -517,9 +636,11 @@ class JaxCostModel:
         self._sl_sg = (s["sg"].start, s["sg"].stop)
 
     @property
-    def signature(self) -> Tuple[int, int, str]:
-        """The (ndims, prime-bucket, topology) compilation signature."""
-        return (self.d, self.n_pad, self.arch.topology.fingerprint)
+    def signature(self) -> Tuple[int, int, str, str]:
+        """The (ndims, prime-bucket, topology, density-key) compilation
+        signature."""
+        return (self.d, self.n_pad, self.arch.topology.fingerprint,
+                self.dens_key)
 
     def _prepare(self, genomes: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -556,7 +677,7 @@ class JaxCostModel:
                        jnp.asarray(fmt), jnp.asarray(sg),
                        self._primes, self._prime_dim, self._relevance,
                        self._densities, self._full_elems, self._total_macs,
-                       self._z_onehot, self._plat)
+                       self._z_onehot, self._plat, self._dens_params)
         return _canonical({k: np.asarray(v)[:n] for k, v in out.items()})
 
 
@@ -593,7 +714,7 @@ def _canonical(out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
 # mega-batch shape changes.  Epoch keys are CONTENT (workload cache_key +
 # arch per model), never id(), so a recycled object can't alias a stale
 # entry and no strong model refs need pinning.
-_STACK_CONSTS: Dict[Tuple[int, int, str], Tuple[Tuple, List]] = {}
+_STACK_CONSTS: Dict[Tuple[int, int, str, str], Tuple[Tuple, List]] = {}
 _STACK_PREP_HITS = 0
 _STACK_PREP_MISSES = 0
 
@@ -676,7 +797,7 @@ def eval_stacked(models: Sequence["JaxCostModel"],
         ins.append(arr)
     consts = _stacked_consts(models, sizes, padded)
     fn = _jitted_eval(sig[0], sig[1], models[0].arch.topology,
-                      stacked=True)
+                      sig[3], stacked=True)
     _DISPATCHES += 1
     out = fn(*[jnp.asarray(a) for a in ins],
              *[jnp.asarray(c) for c in consts])

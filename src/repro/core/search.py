@@ -49,7 +49,7 @@ from .workload import Workload
 #: ArchSpec (see repro.core.arch.as_arch)
 PlatformLike = Union[str, accel.Platform, ArchSpec]
 
-_CACHE: Dict[Tuple[Tuple, ArchSpec, Optional[int]],
+_CACHE: Dict[Tuple[Tuple, ArchSpec, Optional[int], bool],
              Tuple[GenomeSpec, JaxCostModel]] = {}
 
 
@@ -59,16 +59,24 @@ def _platform(platform: PlatformLike) -> ArchSpec:
 
 
 def get_evaluator(workload: Workload, platform: PlatformLike,
-                  n_pad: Optional[int] = None
+                  n_pad: Optional[int] = None,
+                  structured: bool = False
                   ) -> Tuple[GenomeSpec, JaxCostModel]:
     plat = _platform(platform)
+    # ``structured=True`` promotes an all-uniform workload onto the
+    # structured-density kernel so it can mega-batch with banded/N:M
+    # peers (MultiSearch alignment); a naturally structured workload is
+    # normalized to its natural key so sequential and fleet runs share
+    # one evaluator
+    structured = bool(structured) and not workload.structured_density
     # the ArchSpec itself (content-hashable) keys the cache: two specs
     # that merely share a NAME must not alias one evaluator (same
     # aliasing class as the id(workload) bug fixed in PR 2)
-    key = (workload.cache_key(), plat, n_pad)
+    key = (workload.cache_key(), plat, n_pad, structured)
     if key not in _CACHE:
         spec = GenomeSpec(workload, arch=plat)
-        _CACHE[key] = (spec, JaxCostModel(spec, plat, n_pad=n_pad))
+        _CACHE[key] = (spec, JaxCostModel(spec, plat, n_pad=n_pad,
+                                          structured=structured or None))
     return _CACHE[key]
 
 
@@ -287,9 +295,18 @@ class MultiSearch:
                      _bucket(max(len(t.workload.prime_factors), 1)))
                     for t in self.tasks]
         pad_for: Dict[int, int] = {}
+        # density-mode alignment, same spirit as prime-axis padding: if
+        # any same-ndims peer declares a structured density model, the
+        # whole group runs on the structured kernel (uniform members'
+        # models become traced family rows), so a mixed
+        # uniform/banded/N:M fleet still shares one signature — one
+        # mega-batch dispatch per round
+        structured_for: Dict[int, bool] = {}
         if self.align_signatures:
-            for d, bucket in naturals:
+            for (d, bucket), t in zip(naturals, self.tasks):
                 pad_for[d] = max(pad_for.get(d, 0), bucket)
+                structured_for[d] = structured_for.get(d, False) or \
+                    t.workload.structured_density
 
         states: List[_TaskState] = []
         for task, natural, name in zip(self.tasks, naturals,
@@ -299,7 +316,9 @@ class MultiSearch:
                 else None
             if n_pad == natural[1]:
                 n_pad = None        # natural bucket: share the plain entry
-            spec, ev = get_evaluator(task.workload, plat, n_pad=n_pad)
+            spec, ev = get_evaluator(
+                task.workload, plat, n_pad=n_pad,
+                structured=structured_for.get(natural[0], False))
             gen, tracker = make_requests(task.method, spec, plat,
                                          task.budget, task.seed,
                                          **task.method_kw)

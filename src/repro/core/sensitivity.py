@@ -26,7 +26,7 @@ pass over the (I, L, S, S) pair lattice.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

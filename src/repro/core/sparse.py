@@ -26,15 +26,21 @@ Two components:
 
 The byte-accounting model follows Sparseloop's format taxonomy: a tensor
 tile with dims (outer..inner per the mapping's tiled sub-dimensions) is a
-fiber tree; level i has ``n_fibers(i)`` fibers of length ``L_i``; occupancy
-decays with density assuming uniform random nonzeros.
+fiber tree; level i has ``n_fibers(i)`` fibers of length ``L_i``; how
+occupancy decays down the tree is supplied by the tensor's
+:class:`~repro.core.density.DensityModel` (``block_nonempty``): a plain
+float density means uniform random nonzeros (the seed semantics,
+bit-identical), while banded / block-N:M operands keep/drop coordinates
+with their own statistics — which is exactly what moves the best
+format choice on structured workloads.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Tuple
 
+from .density import DensityLike, as_density
 from .workload import WORD_BYTES
 
 FMT_U, FMT_B, FMT_RLE, FMT_CP, FMT_UOP = range(5)
@@ -113,7 +119,7 @@ class TensorFormat:
         return True, ""
 
 
-def fiber_tree_bytes(fmt: TensorFormat, density: float,
+def fiber_tree_bytes(fmt: TensorFormat, density: DensityLike,
                      word_bytes: float = WORD_BYTES
                      ) -> Tuple[float, float]:
     """(data_bytes, metadata_bytes) for one *full tensor* tile whose tiled
@@ -123,10 +129,14 @@ def fiber_tree_bytes(fmt: TensorFormat, density: float,
     (``ArchSpec.store_word_bytes``); metadata bits are width-independent,
     so the effective compression ratio varies with the level's width.
 
-    Occupancy model (uniform random): the probability that a position at
-    tree level i contains any nonzero below it is
-        occ_i = 1 - (1 - density) ** (elements under the position).
+    ``density`` is a :class:`~repro.core.density.DensityModel` (a float
+    means :class:`~repro.core.density.Uniform`, the seed semantics): the
+    probability that a position at tree level i contains any nonzero
+    below it is ``occ_i = model.block_nonempty(elements under the
+    position)`` — for uniform random nonzeros that is
+    ``1 - (1 - d) ** elems``, bit-identical to the pre-model code.
     """
+    model = as_density(density)
     lens = fmt.fiber_lens
     n_elems = 1
     for L in lens:
@@ -134,14 +144,14 @@ def fiber_tree_bytes(fmt: TensorFormat, density: float,
     if not fmt.compressed:
         return float(n_elems * word_bytes), 0.0
 
-    data_bytes = n_elems * density * word_bytes
+    data_bytes = n_elems * model.density * word_bytes
     meta_bits = 0.0
     n_fibers = 1.0          # fibers at current level
     elems_below = n_elems
     for i, L in enumerate(lens):
         elems_below //= max(L, 1)
         # probability that a coordinate at this level is "kept"
-        occ = 1.0 - (1.0 - density) ** max(elems_below, 1)
+        occ = model.block_nonempty(max(elems_below, 1))
         kept = L * occ
         f = fmt.formats[i]
         if f == FMT_B:
@@ -164,7 +174,7 @@ def _clog2(x: float) -> float:
     return max(1.0, math.ceil(math.log2(max(x, 2))))
 
 
-def effective_bytes(fmt: TensorFormat, density: float,
+def effective_bytes(fmt: TensorFormat, density: DensityLike,
                     n_elems_tile: int,
                     word_bytes: float = WORD_BYTES) -> float:
     """Bytes occupied by a tile of ``n_elems_tile`` elements under this

@@ -3,7 +3,11 @@
 A workload is an einsum ``Z[m,n] += P[m,k] * Q[k,n]`` (SpMM) or a sparse
 convolution lowered to implicit GEMM (SpConv).  SparseMap treats both as a
 D-dimensional projective einsum: each tensor is indexed by a subset of the
-iteration dimensions, and each operand carries a density.
+iteration dimensions, and each operand carries a *density model*
+(:mod:`repro.core.density`): a plain float means uniform-random nonzeros
+(the seed semantics), while :class:`~repro.core.density.Banded` and
+:class:`~repro.core.density.BlockNM` describe clustered and
+structured-pruned operands whose byte/intersection statistics differ.
 
 Dimensions are named; the canonical GEMM order is ("M", "K", "N").  A batched
 workload (§IV.G, Fig. 15) adds "B" and the genome widens automatically — the
@@ -12,8 +16,9 @@ encoding only ever sees ``dims`` / ``prime_factors`` / relevance sets.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
+
+from .density import DensityLike, DensityModel, Uniform, as_density
 
 WORD_BYTES = 2  # 16-bit operands throughout (paper uses 16-bit, DSTC 12nm)
 
@@ -47,12 +52,25 @@ def pad_to_composite(n: int, max_prime: int = 7) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class TensorSpec:
-    """One tensor of the einsum."""
+    """One tensor of the einsum.
+
+    ``density`` accepts a plain float (fraction of nonzero elements in
+    (0, 1], meaning uniform-random placement) or any
+    :class:`~repro.core.density.DensityModel`; ``density_model`` is the
+    normalized view and ``mean_density`` the scalar mean."""
 
     name: str                 # "P" | "Q" | "Z"
     dims: Tuple[str, ...]     # iteration dims this tensor is indexed by
-    density: float            # fraction of nonzero elements, in (0, 1]
+    density: DensityLike      # float (= Uniform) or a DensityModel
     is_output: bool = False
+
+    @property
+    def density_model(self) -> DensityModel:
+        return as_density(self.density)
+
+    @property
+    def mean_density(self) -> float:
+        return self.density_model.density
 
     def size(self, dim_sizes: Dict[str, int]) -> int:
         s = 1
@@ -120,8 +138,10 @@ class Workload:
         return s
 
     def output_density(self) -> float:
-        """P(z != 0) under uniform-random nonzero placement: an output element
-        is nonzero iff any of the K (contraction) products is nonzero."""
+        """P(z != 0) under independent nonzero placement: an output element
+        is nonzero iff any of the K (contraction) products is nonzero.
+        Mean-field over the input models (their mean densities); input
+        structure correlating the products is not modeled here."""
         contraction = [d for d in self.dim_order
                        if d not in self.output.dims]
         k = 1
@@ -129,17 +149,36 @@ class Workload:
             k *= self.dim_sizes[d]
         dp = 1.0
         for t in self.inputs:
-            dp *= t.density
+            dp *= t.mean_density
         return float(1.0 - (1.0 - dp) ** k) if dp < 1.0 else 1.0
 
     def density_of(self, name: str) -> float:
-        if name == self.output.name:
-            return self.output_density()
-        return self.tensor(name).density
+        """Mean density of a tensor (the output's is derived)."""
+        return self.density_model_of(name).density
+
+    def density_model_of(self, name: str) -> DensityModel:
+        """The tensor's density model.  The output keeps the seed
+        semantics — its density is *derived* from the inputs
+        (:meth:`output_density`, uniform placement) — unless a
+        structured model was declared on it explicitly."""
+        t = self.tensor(name)
+        if t.is_output:
+            m = t.density_model
+            if m.family == "uniform":
+                return Uniform(self.output_density())
+            return m
+        return t.density_model
+
+    @property
+    def structured_density(self) -> bool:
+        """True when any tensor declares a non-uniform density model
+        (selects the structured JAX kernel variant)."""
+        return any(t.density_model.family != "uniform"
+                   for t in self.tensors)
 
 
 def spmm(name: str, m: int, k: int, n: int,
-         density_p: float, density_q: float) -> Workload:
+         density_p: DensityLike, density_q: DensityLike) -> Workload:
     """SpMM workload  P[M,K] x Q[K,N] = Z[M,N]  (paper Table III mm*)."""
     sizes = {"M": pad_to_composite(m), "K": pad_to_composite(k),
              "N": pad_to_composite(n)}
@@ -157,7 +196,8 @@ def spmm(name: str, m: int, k: int, n: int,
 
 
 def batched_spmm(name: str, b: int, m: int, k: int, n: int,
-                 density_p: float, density_q: float) -> Workload:
+                 density_p: DensityLike, density_q: DensityLike
+                 ) -> Workload:
     """4-dim workload (paper Fig. 15): adds batch dim B shared by all
     tensors.  Exercises the multi-dimensional genome path (perm range A_4^4)."""
     sizes = {"B": pad_to_composite(b), "M": pad_to_composite(m),
@@ -176,7 +216,7 @@ def batched_spmm(name: str, b: int, m: int, k: int, n: int,
 
 
 def spconv(name: str, c: int, h: int, w: int, kout: int, r: int, s: int,
-           density_i: float, density_w: float,
+           density_i: DensityLike, density_w: DensityLike,
            stride: int = 1, pad: int | None = None) -> Workload:
     """SpConv lowered to implicit GEMM (paper Table III conv*).
 
@@ -197,6 +237,6 @@ def spconv(name: str, c: int, h: int, w: int, kout: int, r: int, s: int,
 
 
 def from_gemm_shape(name: str, m: int, k: int, n: int,
-                    density_p: float = 1.0, density_q: float = 1.0
+                    density_p: DensityLike = 1.0, density_q: DensityLike = 1.0
                     ) -> Workload:
     return spmm(name, m, k, n, density_p, density_q)

@@ -13,10 +13,8 @@ tests/test_archs_smoke.py::test_loss_decreases_on_fixed_batch).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

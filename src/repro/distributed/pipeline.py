@@ -12,8 +12,7 @@ ticks; device s computes microbatch m at tick t = m + s.  Bubble fraction
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ matmul dims multiples of 128 give full MXU utilization.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

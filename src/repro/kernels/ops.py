@@ -9,10 +9,8 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from . import ref as ref_lib
 from .bsr_spmm import bsr_spmm as _bsr_spmm

@@ -26,14 +26,13 @@ import re
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config
-from repro.configs.shapes import ShapeSpec
 from repro.core.accel import TPU_V5E
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import batch_axes_of, make_production_mesh

@@ -5,7 +5,7 @@ every model input — no device allocation ever happens in the dry-run.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

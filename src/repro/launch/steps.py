@@ -1,8 +1,7 @@
 """Step builders shared by the trainer, the server and the dry-run."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,10 +15,8 @@ hundred steps); on a TPU pod the same driver runs the full configs under
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
-from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -61,7 +59,6 @@ def main(argv=None):
     from repro.models.model import Model
     from repro.optim import optimizer as opt
     from repro.runtime.fault_tolerance import StepMonitor, Supervisor
-    from repro.checkpoint import checkpoint as ckpt_lib
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")

@@ -12,7 +12,7 @@ unconditionally.  See COMPAT.md for the repo-wide version policy.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 
 def normalize_cost_analysis(ca: Any) -> Dict[str, float]:

@@ -9,7 +9,6 @@ model level.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

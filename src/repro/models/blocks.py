@@ -13,7 +13,7 @@ divisible by the TP degree stay replicated (GQA with few KV heads).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +24,9 @@ from . import attention as attn_lib
 from . import ssm as ssm_lib
 from .config import ModelConfig
 from .layers import (apply_m_rope, apply_rope, dtype_of, mlp, rms_norm,
-                     swiglu, _init_dense)
+                     _init_dense)
 from .moe import moe_ffn, moe_ffn_grouped, moe_params_shape
-from .sharding import bspec, constrain, constrain_batch
+from .sharding import constrain_batch
 
 TP = 16     # tensor-parallel degree of the production mesh ("model" axis)
 _TP_ENABLED = True

@@ -16,20 +16,16 @@ Public surface:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import blocks as blk
-from .attention import attention
 from .config import BlockSpec, ModelConfig
 from .layers import dtype_of, rms_norm, softmax_xent, _init_dense
-from .sharding import bspec, constrain, constrain_batch
+from .sharding import constrain_batch
 
 SHARED_KINDS = {"shared_attn"}      # zamba2: one weight copy, many uses
 

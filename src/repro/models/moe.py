@@ -12,12 +12,11 @@ compute is fully distributed and dispatch lowers to all-to-alls.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .layers import swiglu
 
 
 def moe_params_shape(d_model: int, n_experts: int, d_ff: int):

@@ -16,8 +16,7 @@ Tested in tests/test_compression.py on a forced multi-device host mesh.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

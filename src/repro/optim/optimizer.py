@@ -9,7 +9,7 @@ int8 quantized option lives in repro.optim.compression).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,9 @@ class OptState(NamedTuple):
 
 def init(params, cfg: OptConfig) -> OptState:
     dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
-    z = lambda p: jnp.zeros(p.shape, dt)
+
+    def z(p):
+        return jnp.zeros(p.shape, dt)
     return OptState(step=jnp.zeros((), jnp.int32),
                     mu=jax.tree.map(z, params),
                     nu=jax.tree.map(z, params))

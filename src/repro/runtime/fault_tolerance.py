@@ -17,7 +17,6 @@ tests on a single host (failure injection via exceptions):
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced config, one forward/train step on
 CPU, shape + finiteness assertions; decode step for every arch (no
 encoder-only archs are assigned, so decode applies everywhere)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ except ImportError:
 from repro.configs.archs import (CLUSTER_CLOUD, MAPLE_EDGE, QUANT_EDGE,
                                  SYSTOLIC_MESH)
 from repro.core import accel
-from repro.core.arch import as_arch
 from repro.core.cost_model import evaluate
 from repro.core.encoding import GenomeSpec
 from repro.core.jax_cost import JaxCostModel

@@ -1,5 +1,4 @@
 """Cost-model semantics: loop-nest reuse, sparsity effects, validity."""
-import numpy as np
 import pytest
 
 from repro.core import accel
@@ -93,8 +92,6 @@ def test_skip_saves_energy_and_cycles():
     base = strategy_uncompressed(mp)
     # compress Q (leader) on its innermost temporal sub-dim so skip is legal
     fmts = dict(base.formats)
-    genes = [0, 0, 0, 0, 0]
-    subs = [i for i in range(5)]
     fmts["Q"] = make_tensor_format(mp, "Q", (0, 0, 0, 1, 1))
     ok, why = fmts["Q"].valid()
     assert ok, why

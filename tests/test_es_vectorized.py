@@ -11,7 +11,7 @@ from repro.configs.paper_workloads import by_name
 from repro.core import search
 from repro.core.baselines import sparsemap_setup
 from repro.core.encoding import GenomeSpec
-from repro.core.evolution import (ESConfig, _Budget, annealing_p_high,
+from repro.core.evolution import (_Budget, annealing_p_high,
                                   crossover, evolve, hshi_init, lhs_init,
                                   mutate)
 from repro.core.sensitivity import SensitivityResult, build_probes, \

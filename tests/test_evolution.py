@@ -2,11 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import accel, search
-from repro.core.encoding import GenomeSpec
+from repro.core import search
 from repro.core.evolution import (ESConfig, annealing_p_high, crossover,
                                   evolve, lhs_init, mutate)
-from repro.core.jax_cost import JaxCostModel
 from repro.core.sensitivity import calibrate
 from repro.core.workload import spmm
 

@@ -5,13 +5,12 @@ import zlib
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.kernels.bsr_spmm import bsr_spmm
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ref import (bsr_spmm_ref, bsr_to_dense, dense_to_bsr,
+from repro.kernels.ref import (bsr_to_dense, dense_to_bsr,
                                flash_attention_ref)
 
 

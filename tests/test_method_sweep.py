@@ -287,7 +287,7 @@ def test_stacked_sweep_fewer_compiles_and_dispatches(sweep_runs):
     from repro.core.arch import ARCH_SPARSEMAP
     stats = sweep_runs["stacked_stats"]
     assert stats["signatures"] == \
-        [(3, 16, ARCH_SPARSEMAP.topology.fingerprint)]
+        [(3, 16, ARCH_SPARSEMAP.topology.fingerprint, "u")]
     assert stats["dispatches"] == stats["rounds"]
     # unstacked pays one dispatch per alive task per round
     assert stats["dispatches"] < sweep_runs["unstacked_stats"]["dispatches"]

@@ -4,7 +4,6 @@ and completeness of the dry-run sweep records."""
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -20,7 +19,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _params(rng, d, e, f):
-    mk = lambda *s: jnp.asarray(rng.standard_normal(s) * 0.2, jnp.float32)
+    def mk(*s):
+        return jnp.asarray(rng.standard_normal(s) * 0.2, jnp.float32)
     return dict(wg=mk(d, e), w1=mk(e, d, f), w3=mk(e, d, f),
                 w2=mk(e, f, d))
 

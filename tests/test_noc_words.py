@@ -22,7 +22,7 @@ from repro.core.encoding import GenomeSpec
 from repro.core.jax_cost import JaxCostModel
 from repro.core.mapping import Mapping, balanced_mapping_for_arch
 from repro.core.sparse import SG_GATE_BOTH
-from repro.core.workload import WORD_BYTES, spmm
+from repro.core.workload import spmm
 
 
 def _three_store(noc: NoCSpec, name: str) -> ArchSpec:

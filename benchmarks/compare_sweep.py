@@ -25,6 +25,45 @@ from typing import Dict, List, Tuple
 TIME_WARN_RATIO = 1.5
 
 
+def _derive_decay_rounds(trajectory) -> int:
+    """Stdlib mirror of ``repro.core.search.derive_pad_policy`` (this
+    gate must not import the package): one-off spike trajectories (step
+    down from the peak, never re-grow) suggest ``decay_rounds=2``,
+    anything else the conservative default 3."""
+    traj = list(trajectory)
+    peak = max(traj, default=0)
+    if peak <= 0 or traj[-1] >= peak:
+        return 3
+    first_down = next(i for i, v in enumerate(traj) if v < peak
+                      and max(traj[:i], default=0) == peak)
+    regrew = any(b > a for a, b in zip(traj[first_down:],
+                                       traj[first_down + 1:]))
+    return 3 if regrew else 2
+
+
+def stale_policy_warnings(current: dict) -> List[str]:
+    """Warn when a fresh run's watermark trajectory suggests the
+    registered PadPolicy is stale (registration lives in
+    ``repro.configs.archs._BASELINE_PAD_WATERMARKS``)."""
+    out: List[str] = []
+    for arec in current.get("archs", []):
+        policies = arec.get("pad_policies", {})
+        for sig_key, traj in arec.get("pad_watermarks", {}).items():
+            fp = sig_key.rsplit("_", 1)[-1]
+            pol = policies.get(fp)
+            if pol is None:
+                continue
+            want = _derive_decay_rounds(traj)
+            if want != pol.get("decay_rounds"):
+                out.append(
+                    f"{arec['arch']}: watermark trajectory {traj} for "
+                    f"topology {fp} suggests decay_rounds={want} but the "
+                    f"registered policy has "
+                    f"decay_rounds={pol.get('decay_rounds')} — update "
+                    f"repro.configs.archs._BASELINE_PAD_WATERMARKS")
+    return out
+
+
 def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
     """(failures, warnings) between two bench_sweep_json records."""
     failures: List[str] = []
@@ -57,6 +96,16 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
                 f"{name}: dispatches/round regressed "
                 f"{base['dispatches_per_round']} -> "
                 f"{cur['dispatches_per_round']}")
+        # host-sync regression: a device-resident fleet losing its k-round
+        # segments (or a per-round fleet growing extra host round-trips)
+        # shows up here even when dispatch counts stay flat
+        base_hspr = base.get("host_syncs_per_round")
+        cur_hspr = cur.get("host_syncs_per_round")
+        if base_hspr is not None and cur_hspr is not None and \
+                cur_hspr > base_hspr:
+            sink.append(
+                f"{name}: host syncs/round regressed "
+                f"{base_hspr} -> {cur_hspr}")
         if base.get("seconds") and cur.get("seconds", 0.0) > \
                 TIME_WARN_RATIO * base["seconds"]:
             warnings.append(
@@ -78,6 +127,7 @@ def main(argv=None) -> int:
     with open(args.current) as f:
         current = json.load(f)
     failures, warnings = compare(baseline, current)
+    warnings += stale_policy_warnings(current)
     for w in warnings:
         print(f"WARN: {w}")
     for x in failures:

@@ -175,6 +175,46 @@ def bench_stacked_prep(n_tasks: int = 6, rows_per_task: int = 64,
         prep_hits=hits, prep_misses=misses)
 
 
+def bench_device_rounds(budget: int = 2000, seed: int = 0,
+                        device_rounds: int = 8) -> Dict[str, float]:
+    """Fused-round vs host-loop throughput: the SAME pre-drawn operator
+    plans executed as one vmap-of-``lax.scan`` device program every k
+    generations (``device_execute=True``) vs replayed per-round on the
+    host (``device_execute=False``, one dispatch + one sync per
+    generation).  Results are bit-identical by construction, so the
+    deltas are pure host-sync/dispatch overhead."""
+    from repro.configs.paper_workloads import by_name
+    from repro.core import jax_cost, search
+
+    wls = [by_name("mm1"), by_name("mm3")]
+
+    def fleet(execute: bool):
+        search.clear_cache()
+        stats: Dict = {}
+        t0 = time.perf_counter()
+        grid = search.run_method_sweep(
+            ["sparsemap"], wls, "cloud", budget=budget, seed=seed,
+            stack_batches=True, device_rounds=device_rounds,
+            device_execute=execute, stats_out=stats)
+        dt = time.perf_counter() - t0
+        best = {w.name: grid["sparsemap"][w.name].best_edp for w in wls}
+        return dt, stats, best
+
+    fused_s, fused_stats, fused_best = fleet(True)
+    host_s, host_stats, host_best = fleet(False)
+    return dict(
+        budget=budget, device_rounds=device_rounds,
+        fused_seconds=fused_s, host_seconds=host_s,
+        speedup=host_s / fused_s,
+        fused_host_syncs=fused_stats["host_syncs"],
+        host_host_syncs=host_stats["host_syncs"],
+        fused_syncs_per_round=fused_stats["host_syncs_per_round"],
+        host_syncs_per_round=host_stats["host_syncs_per_round"],
+        fused_dispatches=fused_stats["dispatches"],
+        host_dispatches=host_stats["dispatches"],
+        edp_exact=all(fused_best[w] == host_best[w] for w in fused_best))
+
+
 def bench_multisearch(budget: int = 1000, seed: int = 0
                       ) -> Dict[str, float]:
     from repro.configs.paper_workloads import by_name
@@ -273,6 +313,14 @@ def main() -> None:
           f"{ms['seq_compiles']}, signatures {ms['signatures']} vs "
           f"{ms['natural_signatures']}, edp_match={ms['edp_match']}, "
           f"{ms['multi_seconds']:.1f}s vs {ms['seq_seconds']:.1f}s")
+    dr = bench_device_rounds()
+    print(f"device_rounds: k={dr['device_rounds']} — fused "
+          f"{dr['fused_seconds']:.1f}s vs host-loop "
+          f"{dr['host_seconds']:.1f}s ({dr['speedup']:.2f}x), syncs "
+          f"{dr['fused_host_syncs']} vs {dr['host_host_syncs']} "
+          f"({dr['fused_syncs_per_round']:.3f} vs "
+          f"{dr['host_syncs_per_round']:.3f} per round), "
+          f"edp_exact={dr['edp_exact']}")
     sw = bench_method_sweep()
     print(f"method_sweep: {sw['n_workloads']} workloads x "
           f"{sw['n_methods']} methods — compiles {sw['sweep_compiles']} vs "

@@ -43,20 +43,28 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
     record = dict(budget=budget, methods=methods,
                   workloads=[w.name for w in wls], archs=[], cells=[])
 
-    def run_fleet(entry_name, fleet_methods, fleet_wls, arch):
+    def run_fleet(entry_name, fleet_methods, fleet_wls, arch,
+                  fleet_budget=None, **fleet_kw):
         search.clear_cache()
         stats: dict = {}
         t0 = time.time()
         grid = search.run_method_sweep(fleet_methods, fleet_wls, arch,
-                                       budget=budget, seed=0,
-                                       stack_batches=True,
-                                       stats_out=stats)
+                                       budget=fleet_budget or budget,
+                                       seed=0, stack_batches=True,
+                                       stats_out=stats, **fleet_kw)
         arec = dict(
             arch=entry_name, seconds=round(time.time() - t0, 2),
+            budget=fleet_budget or budget,
             compiles=jax_cost.compilation_count(),
             rounds=stats["rounds"], dispatches=stats["dispatches"],
             dispatches_per_round=round(
                 stats["dispatches"] / max(stats["rounds"], 1), 3),
+            # host round-trips per search generation: 1.0 for per-round
+            # fleets, ~1/k in the segment phase of device_rounds=k fleets
+            host_syncs=stats["host_syncs"],
+            host_syncs_per_round=round(stats["host_syncs_per_round"], 3),
+            device_rounds=stats["device_rounds"],
+            n_devices=stats["devices"],
             signatures=[list(s) for s in stats["signatures"]],
             # per-topology mega-batch watermark trajectory + the
             # grow/decay policy that produced it (PadPolicy, per
@@ -86,6 +94,19 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
     run_fleet("structured_cloud", ["sparsemap", "random_mapper"],
               struct_wls, "cloud")
 
+    # device-resident fleet on the paper arch: the same ES searches fold
+    # k=4 generations per device program (host_syncs_per_round tracks the
+    # segment-phase sync ratio, gated at <= 1/k + prologue tolerance by
+    # compare_sweep); sharded across every visible device when the host
+    # exposes more than one (n_devices records it)
+    from repro.launch.mesh import make_search_mesh
+    # floor the budget so the run gets past the host-driven
+    # calibration/HSHI prologue and into the segment phase (where
+    # host_syncs_per_round is measured) even under --quick
+    run_fleet("cloud_device_k4", ["sparsemap"], wls, "cloud",
+              fleet_budget=max(budget, 1200),
+              device_rounds=4, mesh=make_search_mesh())
+
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     return record
@@ -101,7 +122,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig7,fig17,fig18,"
                          "table_iv,roofline,arch_dse,es_ops,stacked_prep,"
-                         "multisearch,method_sweep,sweep_json")
+                         "multisearch,method_sweep,device_rounds,"
+                         "sweep_json")
     args = ap.parse_args(argv)
 
     budget = args.budget or (300 if args.quick else
@@ -123,6 +145,18 @@ def main(argv=None) -> None:
               f"mutate_speedup={ops['mutate_speedup']:.1f}x;"
               f"crossover_speedup={ops['crossover_speedup']:.1f}x;"
               f"combined_speedup={ops['speedup']:.1f}x")
+
+    if want("device_rounds"):
+        from benchmarks import es_ops
+        t0 = time.time()
+        dr = es_ops.bench_device_rounds(
+            budget=min(max(budget, 1200), 2000))
+        print(f"device_rounds,{time.time()-t0:.1f},"
+              f"k={dr['device_rounds']};"
+              f"fused_vs_host_speedup={dr['speedup']:.2f}x;"
+              f"syncs_per_round={dr['fused_syncs_per_round']:.3f}"
+              f"_vs_{dr['host_syncs_per_round']:.3f};"
+              f"edp_exact={dr['edp_exact']}")
 
     if want("stacked_prep"):
         from benchmarks import es_ops

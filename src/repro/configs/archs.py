@@ -132,6 +132,43 @@ ACCEL_ARCHS: Dict[str, ArchSpec] = {
     a.name: a for a in (MAPLE_EDGE, CLUSTER_CLOUD, SYSTOLIC_MESH,
                         QUANT_EDGE)}
 
+# ------------------------------------------- measured pad-watermark policies
+#
+# Per-round mega-batch pad-watermark trajectories from the committed
+# benchmark baseline (benchmarks/BENCH_sweep.baseline.json, regenerated
+# with ``python -m benchmarks.run --quick --only sweep_json``), keyed by
+# arch name.  Every topology measured so far shows the same shape — a
+# round-1 calibration/chunk spike that decays once and never re-grows —
+# so ``search.derive_pad_policy`` tunes them all to the faster
+# ``decay_rounds=2`` instead of the conservative CPU default.  When a
+# regenerated baseline changes a trajectory, update the table; the
+# ``benchmarks/compare_sweep.py`` staleness check warns when a fresh
+# run's trajectory disagrees with the policy registered here.
+_BASELINE_PAD_WATERMARKS: Dict[str, tuple] = {
+    "cloud": (2048, 2048, 256, 256, 256, 256),
+    "maple_edge": (2048, 2048, 256, 256, 256, 256),
+    "cluster_cloud": (2048, 2048, 256, 256, 256, 256),
+    "systolic_mesh": (2048, 2048, 256, 256, 256, 256),
+    "quant_edge": (2048, 2048, 256, 256, 256, 256),
+}
+
+
+def register_measured_pad_policies() -> None:
+    """Derive and register a tuned :class:`~repro.core.search.PadPolicy`
+    per measured topology (idempotent; runs at import)."""
+    from repro.core.arch import as_arch
+    from repro.core.search import derive_pad_policy, set_pad_policy
+    for name, traj in _BASELINE_PAD_WATERMARKS.items():
+        spec = as_arch(name)
+        set_pad_policy(spec.topology.fingerprint,
+                       derive_pad_policy(traj))
+
+
+try:
+    register_measured_pad_policies()
+except ImportError:             # pragma: no cover - jax-less install
+    pass
+
 # --------------------------------------------------------------- LM family
 
 XLSTM_350M = ModelConfig(

@@ -566,6 +566,16 @@ def _factory_standard_es(spec: GenomeSpec, platform, budget: int,
                            **kw), tracker
 
 
+#: methods whose request generators can fold generations into
+#: device-resident segments (COMPAT.md "Device-resident round protocol"):
+#: the ``evolve_requests`` family accepts ``device_rounds``/``rng_backend``
+#: through its ESConfig.  ``standard_es`` is NOT foldable — the direct
+#: encoding needs a per-row host-side translation every generation — and
+#: the non-ES baselines (PSO/MCTS/TBPSA/PPO/DQN, random_mapper) keep
+#: their per-round host paths; in a ``device_rounds=k`` fleet they run
+#: unchanged alongside segmented ES tasks.
+SEGMENT_METHODS = frozenset({"sparsemap", "pfce_es", "sage_like"})
+
 #: method name -> (spec, platform, budget, seed, **kw) -> (Requests, _Budget)
 REQUEST_METHODS: Dict[str, Callable] = {
     "sparsemap": _factory_sparsemap,

@@ -35,7 +35,9 @@ from typing import Dict, Generator, List, Optional
 
 import numpy as np
 
+from . import es_ops
 from .encoding import GenomeSpec
+from .es_ops import DeviceSegment
 from .sensitivity import SensitivityResult, build_probes, score_probes
 
 
@@ -59,6 +61,18 @@ class ESConfig:
     # beyond-paper: restart on stagnation
     stagnation_restart: int = 0     # 0 = off; else #gens with no improvement
     seed: int = 0
+    # device-resident rounds (COMPAT.md "Device-resident round protocol"):
+    # with device_rounds=k>1 the main loop yields DeviceSegment requests
+    # covering k generations each instead of per-generation batches; a
+    # driver that can't execute segments sends None and the generator
+    # replays the identical plan on the host.  rng_backend picks where
+    # the per-generation randomness comes from: "numpy" (the legacy
+    # Generator stream, so k>1 makes the same operator choices as k=1)
+    # or "threefry" (jax.random keyed by (seed, generation) — a
+    # different, device-native stream).  Segments require
+    # stagnation_restart == 0 (the restart path is host-adaptive).
+    device_rounds: int = 1
+    rng_backend: str = "numpy"
 
 
 @dataclasses.dataclass
@@ -126,11 +140,20 @@ Requests = Generator[np.ndarray, Dict, Dict]
 
 def _drive(gen: Requests, batch_eval):
     """Run a request generator to completion against one evaluator and
-    return its StopIteration value verbatim."""
+    return its StopIteration value verbatim.  DeviceSegment requests are
+    routed to the evaluator's ``run_segment`` method when it has one
+    (``JaxCostModel``); evaluators without one are sent ``None`` and the
+    generator replays the segment on the host — same trajectory either
+    way (all randomness rides in the segment's plan)."""
     try:
         req = next(gen)
         while True:
-            req = gen.send(batch_eval(req))
+            if isinstance(req, DeviceSegment):
+                runner = getattr(batch_eval, "run_segment", None)
+                out = runner(req) if runner is not None else None
+            else:
+                out = batch_eval(req)
+            req = gen.send(out)
     except StopIteration as stop:
         return stop.value
 
@@ -256,34 +279,13 @@ def mutate(genomes: np.ndarray, spec: GenomeSpec, rng: np.random.Generator,
     element-wise ``rng.integers(0, ub[gene])`` call.  Duplicate draws
     within a row overwrite in draw order, exactly like the sequential
     formulation."""
-    out = genomes.copy()
-    n = len(out)
+    n = len(genomes)
     if n == 0 or genes_per <= 0:
-        return out
-    L = spec.length
-    all_idx = np.arange(L)
-    active = rng.random(n) < p_mut
-    if sens is not None:
-        hi = sens.high_indices
-        lo = sens.low_indices
-        if len(hi) == 0:
-            hi = all_idx
-        if len(lo) == 0:
-            lo = all_idx
-        use_high = rng.random(n) < p_high
-        u = rng.random((n, genes_per))
-        gene = np.where(use_high[:, None],
-                        hi[(u * len(hi)).astype(np.int64)],
-                        lo[(u * len(lo)).astype(np.int64)])
-    else:
-        gene = rng.integers(0, L, size=(n, genes_per))
-    vals = rng.integers(0, spec.gene_ub[gene])
-    act_rows = np.nonzero(active)[0]
-    if len(act_rows):
-        rows = np.repeat(act_rows, genes_per)
-        out[rows, gene[act_rows].reshape(-1)] = \
-            vals[act_rows].reshape(-1)
-    return out
+        return genomes.copy()
+    hi, lo = es_ops.mutation_index_tables(spec.length, sens)
+    active, gene, vals = es_ops.plan_mutation(
+        rng, n, spec.gene_ub, genes_per, p_mut, p_high, hi, lo)
+    return es_ops.apply_mutation(genomes, active, gene, vals)
 
 
 def crossover(parents: np.ndarray, n_children: int, spec: GenomeSpec,
@@ -296,21 +298,9 @@ def crossover(parents: np.ndarray, n_children: int, spec: GenomeSpec,
     Batched: parent pairs and cut points are drawn as vectors and all
     children are assembled with one ``np.where`` over the gene index
     grid."""
-    L = spec.length
-    if sens is not None:
-        pts = {0, L}
-        for a, b in sens.high_segments():
-            pts.add(a)
-            pts.add(b)
-        cut_points = sorted(pts - {0, L}) or [L // 2]
-    else:
-        cut_points = list(range(1, L))
-    cut_arr = np.asarray(cut_points, dtype=np.int64)
-    ab = rng.integers(0, len(parents), size=(n_children, 2))
-    cuts = cut_arr[rng.integers(0, len(cut_arr), size=n_children)]
-    col = np.arange(L, dtype=np.int64)[None, :]
-    kids = np.where(col < cuts[:, None], parents[ab[:, 0]],
-                    parents[ab[:, 1]])
+    cut_arr = es_ops.crossover_cut_points(spec.length, sens)
+    ab, cuts = es_ops.plan_crossover(rng, n_children, len(parents), cut_arr)
+    kids = es_ops.apply_crossover(parents, ab, cuts)
     return np.ascontiguousarray(kids, dtype=parents.dtype)
 
 
@@ -376,6 +366,13 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
     n_elite = max(1, int(cfg.pop_size * cfg.elite_frac))
     total_gens = max(1, (cfg.budget - tracker.evals) // cfg.pop_size)
 
+    if cfg.device_rounds > 1 and not cfg.stagnation_restart:
+        extras = yield from _segment_requests(
+            spec, cfg, tracker, rng, op_sens, fixed_genes, pop, edp,
+            n_parents, n_elite, total_gens)
+        extras["sensitivity"] = None if sens is None else sens.scores
+        return extras
+
     gen = 0
     since_improve = 0
     last_best = tracker.best
@@ -414,6 +411,88 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
 
     return dict(generations=gen,
                 sensitivity=None if sens is None else sens.scores)
+
+
+def _segment_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
+                      rng: np.random.Generator,
+                      op_sens: Optional[SensitivityResult],
+                      fixed_genes: Optional[Dict[int, int]],
+                      pop: np.ndarray, edp: np.ndarray,
+                      n_parents: int, n_elite: int,
+                      total_gens: int) -> Requests:
+    """The device-resident main loop: yields :class:`DeviceSegment`
+    requests covering ``cfg.device_rounds`` generations each.  All
+    per-generation randomness is planned up front (numpy Generator
+    stream, or threefry keyed by (seed, generation)), so a driver that
+    executes the segment on-device (``jax_cost.run_segments``) and a
+    driver that sends back ``None`` — making this generator replay the
+    plan as ordinary per-generation batch requests — produce the same
+    operator choices.  Selection uses the shared *stable* fitness order
+    (``es_ops.stable_order``) in both paths; the legacy per-round loop's
+    unstable ``np.argsort`` can differ on ties, which is one of the two
+    test-pinned parity seams (the other: in-scan float32 EDP vs the
+    host-recomputed canonical EDP)."""
+    cut_arr = es_ops.crossover_cut_points(spec.length, op_sens)
+    hi, lo = es_ops.mutation_index_tables(spec.length, op_sens)
+    k = cfg.device_rounds
+    n_children = cfg.pop_size - n_elite
+    edp_sel = np.asarray(edp, dtype=np.float32)
+    gen = 0
+    while not tracker.exhausted:
+        if cfg.rng_backend == "threefry":
+            plans = [es_ops.threefry_plan_generation(
+                cfg.seed, gen + i, n_children=n_children,
+                n_parents=n_parents, cut_arr=cut_arr,
+                gene_ub=spec.gene_ub, genes_per=cfg.genes_per_mutation,
+                p_mut=cfg.p_mutation,
+                p_high=annealing_p_high(gen + i, total_gens),
+                hi=hi, lo=lo) for i in range(k)]
+        else:
+            plans = [es_ops.plan_generation(
+                rng, n_children=n_children, n_parents=n_parents,
+                cut_arr=cut_arr, gene_ub=spec.gene_ub,
+                genes_per=cfg.genes_per_mutation, p_mut=cfg.p_mutation,
+                p_high=annealing_p_high(gen + i, total_gens),
+                hi=hi, lo=lo) for i in range(k)]
+        resp = yield DeviceSegment(
+            spec=spec, pop=pop, edp=edp_sel, rounds=k, gen0=gen,
+            n_parents=n_parents, n_elite=n_elite,
+            genes_per=cfg.genes_per_mutation,
+            draws=es_ops.stack_draws(plans), fixed_genes=fixed_genes,
+            rng_backend=cfg.rng_backend)
+        if resp is None:
+            # host replay of the identical plan, one generation per yield
+            for d in plans:
+                parents, elites, elite_edp = es_ops.select(
+                    pop, edp_sel, n_parents, n_elite)
+                kids = np.ascontiguousarray(
+                    es_ops.apply_crossover(parents, d.ab, d.cuts),
+                    dtype=pop.dtype)
+                kids = es_ops.apply_mutation(kids, d.active, d.gene,
+                                             d.vals)
+                kids = spec.clip(kids)
+                if fixed_genes:
+                    for idx, v in fixed_genes.items():
+                        kids[..., idx] = v
+                kout = yield kids
+                tracker.register(kids, kout)
+                kedp = np.where(
+                    np.asarray(kout["valid"]),
+                    np.asarray(kout["edp"], dtype=np.float32),
+                    np.float32(np.inf)).astype(np.float32)
+                pop = np.concatenate([elites, kids], axis=0)
+                edp_sel = np.concatenate(
+                    [np.asarray(elite_edp, np.float32), kedp])
+                gen += 1
+                if tracker.exhausted:
+                    break
+        else:
+            for kids, kout in resp.gens:
+                tracker.register(kids, kout)
+                gen += 1
+            pop = resp.final_pop
+            edp_sel = np.asarray(resp.final_edp, dtype=np.float32)
+    return dict(generations=gen)
 
 
 def evolve(spec: GenomeSpec, batch_eval, cfg: ESConfig,

@@ -47,6 +47,8 @@ from . import density as density_lib
 from .accel import Platform
 from .arch import ARCH_SPARSEMAP, ArchSpec, Topology, as_arch
 from .encoding import GenomeSpec, all_permutations
+from .es_ops import (DeviceSegment, PaddedLayout, SegmentResult,
+                     segment_shape_key)
 from .sparse import MAX_FMT_GENES
 from .workload import WORD_BYTES
 
@@ -130,7 +132,11 @@ def reset_dispatch_count() -> None:
 def clear_compile_cache() -> None:
     """Drop all shared jitted evaluators (benchmarking hook)."""
     _jitted_eval.cache_clear()
+    _build_eval_one.cache_clear()
+    _scan_task_fn.cache_clear()
+    _scan_fn.cache_clear()
     _JIT_FNS.clear()
+    _SHARD_FNS.clear()
     _STACK_CONSTS.clear()
     reset_stack_prep_counts()
     reset_dispatch_count()
@@ -291,23 +297,20 @@ def _occ_structured(pr, e):
 # ---------------------------------------------------------------- kernel
 
 
-@lru_cache(maxsize=32)
-def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
-                 dens_key: str = "u", stacked: bool = False):
-    """Build the jitted batch evaluator for (ndims=d, padded prime count,
-    topology, density mode).
+@lru_cache(maxsize=64)
+def _build_eval_one(d: int, n_primes_pad: int, topo: Topology,
+                    dens_key: str = "u"):
+    """Build the un-vmapped per-row kernel closure for (ndims=d, padded
+    prime count, topology, density mode).  Every dispatch path — the
+    broadcast and stacked batch evaluators, the sharded mega-batch, and
+    the device-resident ``run_segments`` scan — vmaps this ONE closure,
+    so per-row results are identical across all of them.
 
     ``dens_key == "u"`` bakes the uniform-random occupancy model exactly
     as the pre-density-model code did (bit-identical to the goldens);
     any other value builds the structured variant, in which each
     tensor's density-model family code and numeric parameters are read
-    from the traced ``dens_params`` rows (see ``_occ_structured``).
-
-    With ``stacked=False`` the workload/platform quantities are broadcast
-    over the batch (one workload per call); with ``stacked=True`` they are
-    batched per row, so rows belonging to *different* workloads and
-    platforms can be concatenated into one mega-batch and evaluated in a
-    single device dispatch (``eval_stacked``)."""
+    from the traced ``dens_params`` rows (see ``_occ_structured``)."""
     tt = _topo_tables(topo)
     structured = dens_key != "u"
     NL = tt.n_levels
@@ -542,11 +545,258 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
                     edp=jnp.where(valid, edp, big),
                     log10_edp=jnp.where(valid, log10_edp, big))
 
+    return eval_one
+
+
+@lru_cache(maxsize=32)
+def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
+                 dens_key: str = "u", stacked: bool = False):
+    """The jitted batch evaluator for (ndims=d, padded prime count,
+    topology, density mode): :func:`_build_eval_one` vmapped over the
+    batch axis.
+
+    With ``stacked=False`` the workload/platform quantities are broadcast
+    over the batch (one workload per call); with ``stacked=True`` they are
+    batched per row, so rows belonging to *different* workloads and
+    platforms can be concatenated into one mega-batch and evaluated in a
+    single device dispatch (``eval_stacked``)."""
+    eval_one = _build_eval_one(d, n_primes_pad, topo, dens_key)
     in_axes = (0,) * 13 if stacked else (0, 0, 0, 0) + (None,) * 9
     fn = jax.jit(jax.vmap(eval_one, in_axes=in_axes))
     _JIT_FNS[(d, n_primes_pad, topo.fingerprint, dens_key,
               "stacked" if stacked else "bcast")] = fn
     return fn
+
+
+# -------------------------------------------------- device-resident scan
+
+# Mesh-sharded jitted variants, keyed by (signature..., kind, mesh key).
+# Kept out of the lru_caches because a Mesh is identified by its device
+# set + axis names, not object identity.
+_SHARD_FNS: Dict[Tuple, object] = {}
+
+
+def _mesh_key(mesh) -> Tuple:
+    devs = np.asarray(mesh.devices).reshape(-1)
+    return (tuple(mesh.axis_names), tuple(int(d.id) for d in devs))
+
+
+def _mesh_ndev(mesh) -> int:
+    return 1 if mesh is None else int(np.asarray(mesh.devices).size)
+
+
+@lru_cache(maxsize=32)
+def _scan_task_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
+                  n_parents: int, n_elite: int, genes_per: int):
+    """The un-jitted scan program for ONE fleet of same-shape tasks:
+    vmap over the task axis of a ``lax.scan`` over generations, each
+    step folding {stable-sort elitist selection -> crossover -> mutation
+    -> clip/fixed-genes -> batched cost eval} into the carry.
+
+    All randomness arrives pre-drawn in the ``draws`` xs (plan arrays in
+    PADDED genome coordinates — see ``es_ops.PaddedLayout``), so the
+    program is a pure function of its inputs; the carry fitness for
+    selection is the explicit ``cycles * energy`` product of the emitted
+    outputs, the same multiply ``_canonical`` performs on the host."""
+    eval_one = _build_eval_one(d, n_pad, topo, dens_key)
+    tt = _topo_tables(topo)
+    NL = tt.n_levels
+    F3 = 3 * MAX_FMT_GENES
+    veval = jax.vmap(eval_one, in_axes=(0, 0, 0, 0) + (None,) * 9)
+
+    def one_task(pop, edp, gene_ub, fixed_mask, fixed_vals, draws, consts):
+        def step(carry, dr):
+            pop, edp = carry
+            order = jnp.argsort(edp)            # stable sort
+            parents = pop[order[:n_parents]]
+            elites = pop[order[:n_elite]]
+            elite_edp = edp[order[:n_elite]]
+            Lp = pop.shape[1]
+            col = jnp.arange(Lp)[None, :]
+            kids = jnp.where(col < dr["cuts"][:, None],
+                             parents[dr["ab"][:, 0]],
+                             parents[dr["ab"][:, 1]])
+            C = kids.shape[0]
+            rows = jnp.arange(C)
+            # draw-order duplicate overwrite: one column at a time (row
+            # indices are unique per column, so the order is defined)
+            for j in range(genes_per):
+                g = dr["gene"][:, j]
+                kids = kids.at[rows, g].set(
+                    jnp.where(dr["active"], dr["vals"][:, j],
+                              kids[rows, g]))
+            kids = jnp.clip(kids, 0, gene_ub[None, :] - 1)
+            kids = jnp.where(fixed_mask[None, :], fixed_vals[None, :],
+                             kids)
+            perm = kids[:, :NL]
+            til = kids[:, NL:NL + n_pad]
+            fmt = kids[:, NL + n_pad:NL + n_pad + F3].reshape(
+                C, 3, MAX_FMT_GENES)
+            sg = kids[:, NL + n_pad + F3:]
+            out = veval(perm, til, fmt, sg, *consts)
+            kedp = out["cycles"] * out["energy_pj"]
+            new_pop = jnp.concatenate([elites, kids], axis=0)
+            new_edp = jnp.concatenate([elite_edp, kedp], axis=0)
+            ys = dict(kids=kids, valid=out["valid"],
+                      energy_pj=out["energy_pj"], cycles=out["cycles"])
+            return (new_pop, new_edp), ys
+
+        (pop, edp), ys = jax.lax.scan(step, (pop, edp), draws)
+        return pop, edp, ys
+
+    return jax.vmap(one_task, in_axes=(0, 0, 0, 0, 0, 0, 0))
+
+
+@lru_cache(maxsize=32)
+def _scan_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
+             n_parents: int, n_elite: int, genes_per: int):
+    fn = jax.jit(_scan_task_fn(d, n_pad, topo, dens_key, n_parents,
+                               n_elite, genes_per))
+    _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
+              f"scan:p{n_parents}e{n_elite}g{genes_per}")] = fn
+    return fn
+
+
+def _sharded_scan_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
+                     n_parents: int, n_elite: int, genes_per: int, mesh):
+    """The scan program shard_map-ed over the task axis of ``mesh``'s
+    first axis (task count must divide the device count's multiple —
+    checked by the caller)."""
+    key = (d, n_pad, topo.fingerprint, dens_key,
+           f"scan:p{n_parents}e{n_elite}g{genes_per}", _mesh_key(mesh))
+    fn = _SHARD_FNS.get(key)
+    if fn is None:
+        from jax.sharding import PartitionSpec as P
+        from ..distributed.compat import shard_map
+        vfn = _scan_task_fn(d, n_pad, topo, dens_key, n_parents, n_elite,
+                            genes_per)
+        ax = mesh.axis_names[0]
+        fn = jax.jit(shard_map(vfn, mesh=mesh, in_specs=(P(ax),) * 7,
+                               out_specs=P(ax)))
+        _SHARD_FNS[key] = fn
+        _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
+                  f"scan:p{n_parents}e{n_elite}g{genes_per}"
+                  f"@{_mesh_ndev(mesh)}")] = fn
+    return fn
+
+
+def _sharded_stacked_fn(d: int, n_pad: int, topo: Topology,
+                        dens_key: str, mesh):
+    """The stacked mega-batch kernel shard_map-ed over batch rows."""
+    key = (d, n_pad, topo.fingerprint, dens_key, "stacked",
+           _mesh_key(mesh))
+    fn = _SHARD_FNS.get(key)
+    if fn is None:
+        from jax.sharding import PartitionSpec as P
+        from ..distributed.compat import shard_map
+        eval_one = _build_eval_one(d, n_pad, topo, dens_key)
+        vfn = jax.vmap(eval_one, in_axes=(0,) * 13)
+        ax = mesh.axis_names[0]
+        fn = jax.jit(shard_map(vfn, mesh=mesh, in_specs=(P(ax),) * 13,
+                               out_specs=P(ax)))
+        _SHARD_FNS[key] = fn
+        _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
+                  f"stacked@{_mesh_ndev(mesh)}")] = fn
+    return fn
+
+
+def _padded_layout(model: "JaxCostModel") -> PaddedLayout:
+    lay = getattr(model, "_pad_layout", None)
+    if lay is None:
+        lay = PaddedLayout(model.spec, model.n_pad)
+        model._pad_layout = lay
+    return lay
+
+
+def run_segments(models: Sequence["JaxCostModel"],
+                 segs: Sequence[DeviceSegment],
+                 mesh=None) -> List[SegmentResult]:
+    """Execute one DeviceSegment per model as a SINGLE device dispatch:
+    all segments (which must share the models' compilation signature and
+    the segment shape key) stack along a task axis, and a jitted
+    vmap-of-lax.scan advances every task ``k`` generations on-device.
+
+    Host work per call is limited to padding genomes/plan arrays into
+    the shared scan layout and, afterwards, slicing the per-generation
+    outputs back per task (``_canonical``-recomputed like every other
+    dispatch path).  With ``mesh`` given and the task count divisible by
+    the device count, tasks shard across devices via the
+    ``distributed.compat.shard_map`` shim; otherwise the single-device
+    program runs unchanged."""
+    global _DISPATCHES
+    if len(models) != len(segs):
+        raise ValueError("models and segments must pair up")
+    sig = models[0].signature
+    if any(m.signature != sig for m in models):
+        raise ValueError(
+            f"run_segments needs one shared signature, got "
+            f"{sorted({m.signature for m in models})}")
+    shape_key = segment_shape_key(segs[0])
+    if any(segment_shape_key(s) != shape_key for s in segs):
+        raise ValueError("run_segments needs one shared segment shape")
+    _, k, n_parents, n_elite, genes_per = shape_key
+
+    pops, edps, ubs, fmasks, fvals, draw_list = [], [], [], [], [], []
+    for m, s in zip(models, segs):
+        lay = _padded_layout(m)
+        pops.append(lay.pad_rows(np.asarray(s.pop, dtype=np.int32)))
+        edps.append(np.asarray(s.edp, dtype=np.float32))
+        ubs.append(lay.pad_vector(m.spec.gene_ub.astype(np.int32), 1))
+        fm = np.zeros(lay.Lp, dtype=bool)
+        fv = np.zeros(lay.Lp, dtype=np.int32)
+        if s.fixed_genes:
+            idx = lay.pad_index(
+                np.asarray(list(s.fixed_genes), dtype=np.int64))
+            fm[idx] = True
+            fv[idx] = np.asarray(list(s.fixed_genes.values()),
+                                 dtype=np.int32)
+        fmasks.append(fm)
+        fvals.append(fv)
+        dr = dict(s.draws)
+        dr["gene"] = lay.pad_index(dr["gene"]).astype(np.int32)
+        dr["cuts"] = lay.pad_cut(dr["cuts"]).astype(np.int32)
+        draw_list.append(dr)
+    draws = {kk: jnp.asarray(np.stack([d[kk] for d in draw_list]))
+             for kk in draw_list[0]}
+    consts = tuple(
+        jnp.asarray(np.stack([np.asarray(m._np_consts[j])
+                              for m in models]))
+        for j in range(len(models[0]._np_consts)))
+
+    T = len(segs)
+    topo = models[0].arch.topology
+    if mesh is not None and _mesh_ndev(mesh) > 1 and \
+            T % _mesh_ndev(mesh) == 0:
+        fn = _sharded_scan_fn(sig[0], sig[1], topo, sig[3], n_parents,
+                              n_elite, genes_per, mesh)
+    else:
+        fn = _scan_fn(sig[0], sig[1], topo, sig[3], n_parents, n_elite,
+                      genes_per)
+    _DISPATCHES += 1
+    pop_f, edp_f, ys = fn(jnp.asarray(np.stack(pops)),
+                          jnp.asarray(np.stack(edps)),
+                          jnp.asarray(np.stack(ubs)),
+                          jnp.asarray(np.stack(fmasks)),
+                          jnp.asarray(np.stack(fvals)),
+                          draws, consts)
+    pop_f = np.asarray(pop_f)
+    edp_f = np.asarray(edp_f)
+    ys = {kk: np.asarray(v) for kk, v in ys.items()}
+    results: List[SegmentResult] = []
+    for t, m in enumerate(models):
+        lay = _padded_layout(m)
+        gens = []
+        for g in range(k):
+            kids = lay.unpad_rows(ys["kids"][t, g]).astype(np.int64)
+            out = _canonical(dict(valid=ys["valid"][t, g],
+                                  energy_pj=ys["energy_pj"][t, g],
+                                  cycles=ys["cycles"][t, g]))
+            gens.append((kids, out))
+        results.append(SegmentResult(
+            gens=gens,
+            final_pop=lay.unpad_rows(pop_f[t]).astype(np.int64),
+            final_edp=edp_f[t]))
+    return results
 
 
 # ---------------------------------------------------------------- wrapper
@@ -680,6 +930,14 @@ class JaxCostModel:
                        self._z_onehot, self._plat, self._dens_params)
         return _canonical({k: np.asarray(v)[:n] for k, v in out.items()})
 
+    def run_segment(self, seg: DeviceSegment) -> SegmentResult:
+        """Execute one device-resident ES segment against this model
+        (the single-task case of :func:`run_segments`).  ``_drive`` and
+        other single-evaluator drivers discover this method by name —
+        evaluators without it receive ``None`` and the generator replays
+        the segment on the host."""
+        return run_segments([self], [seg])[0]
+
 
 def _pad_batch(n: int) -> int:
     """Batch-axis padding shared by every dispatch path: next power of
@@ -757,7 +1015,8 @@ def _stacked_consts(models: Sequence["JaxCostModel"],
 
 def eval_stacked(models: Sequence["JaxCostModel"],
                  batches: Sequence[np.ndarray],
-                 pad_floor: int = 0) -> List[Dict[str, np.ndarray]]:
+                 pad_floor: int = 0,
+                 mesh=None) -> List[Dict[str, np.ndarray]]:
     """Evaluate several (model, genome-batch) pairs sharing one
     compilation signature in a SINGLE device dispatch.
 
@@ -774,7 +1033,14 @@ def eval_stacked(models: Sequence["JaxCostModel"],
     ``pad_floor`` raises the batch padding beyond the power-of-two rule —
     drivers pass the watermark of earlier rounds so a shrinking fleet
     keeps hitting an already-compiled mega-batch shape instead of tracing
-    a new one (padding rows are zero genomes, sliced off)."""
+    a new one (padding rows are zero genomes, sliced off).
+
+    ``mesh`` shards the padded rows across the mesh's devices via the
+    ``distributed.compat.shard_map`` shim (rows are further padded to a
+    device-count multiple — a no-op for the usual power-of-two shapes);
+    with ``mesh=None`` (or one device) the single-device path runs
+    unchanged, and per-row results are identical either way because both
+    wrap the same per-row kernel."""
     global _DISPATCHES
     if len(models) != len(batches):
         raise ValueError("models and batches must pair up")
@@ -786,6 +1052,9 @@ def eval_stacked(models: Sequence["JaxCostModel"],
     sizes = [len(b) for b in batches]
     total = sum(sizes)
     padded = max(_pad_batch(total), int(pad_floor))
+    ndev = _mesh_ndev(mesh) if mesh is not None else 1
+    if ndev > 1 and padded % ndev:
+        padded = -(-padded // ndev) * ndev
     preps = [m._prepare(b) for m, b in zip(models, batches)]
     ins = []
     for cols in zip(*preps):
@@ -796,8 +1065,12 @@ def eval_stacked(models: Sequence["JaxCostModel"],
                                np.int32)], axis=0)
         ins.append(arr)
     consts = _stacked_consts(models, sizes, padded)
-    fn = _jitted_eval(sig[0], sig[1], models[0].arch.topology,
-                      sig[3], stacked=True)
+    if ndev > 1:
+        fn = _sharded_stacked_fn(sig[0], sig[1],
+                                 models[0].arch.topology, sig[3], mesh)
+    else:
+        fn = _jitted_eval(sig[0], sig[1], models[0].arch.topology,
+                          sig[3], stacked=True)
     _DISPATCHES += 1
     out = fn(*[jnp.asarray(a) for a in ins],
              *[jnp.asarray(c) for c in consts])

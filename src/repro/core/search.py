@@ -36,9 +36,11 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from . import accel, jax_cost
+from . import accel, es_ops, jax_cost
 from .arch import ArchSpec, as_arch
-from .baselines import METHODS, REQUEST_METHODS, make_requests
+from .baselines import (METHODS, REQUEST_METHODS, SEGMENT_METHODS,
+                        make_requests)
+from .es_ops import DeviceSegment
 from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
 from .evolution import SearchResult, _Budget
@@ -143,6 +145,38 @@ class PadPolicy:
     decay_ratio: float = 0.5
 
 
+def derive_pad_policy(trajectory: Sequence[int]) -> PadPolicy:
+    """Derive a per-topology :class:`PadPolicy` from a measured
+    pad-watermark trajectory (``stats["pad_watermarks"]`` of a committed
+    benchmark run, e.g. ``BENCH_sweep.baseline.json``).
+
+    Heuristic: a trajectory that steps down from its peak and never
+    re-grows afterwards is a one-off spike (round-1 calibration probes /
+    random_mapper chunks).  Such topologies decay earlier
+    (``decay_rounds=2``) — one fewer round of mostly-padding kernel
+    compute — with ``decay_ratio`` tightened to the observed post-spike
+    plateau, so the earlier decay does NOT buy extra re-traces later
+    (marginal follow-up decays, e.g. 256 -> 128, stay suppressed).  A
+    trajectory that re-grows after decaying (oscillating fleet demand)
+    keeps the conservative default, where an extra quiet round must pass
+    before paying the re-trace.  ``benchmarks/compare_sweep.py`` mirrors
+    the decay_rounds rule (stdlib-only) to warn when a fresh trajectory
+    disagrees with the registered policy."""
+    traj = list(trajectory)
+    peak = max(traj, default=0)
+    if peak <= 0 or traj[-1] >= peak:
+        return PadPolicy()          # never decayed: no evidence either way
+    first_down = next(i for i, v in enumerate(traj) if v < peak
+                      and max(traj[:i], default=0) == peak)
+    regrew = any(b > a for a, b in zip(traj[first_down:],
+                                       traj[first_down + 1:]))
+    if regrew:
+        return PadPolicy()
+    plateau_ratio = max(traj[first_down:]) / peak
+    return PadPolicy(decay_rounds=2,
+                     decay_ratio=min(max(plateau_ratio, 1 / 32), 0.5))
+
+
 #: topology fingerprint -> tuned PadPolicy (default policy when absent)
 _PAD_POLICIES: Dict[str, PadPolicy] = {}
 
@@ -153,7 +187,19 @@ def set_pad_policy(topology_fingerprint: str, policy: PadPolicy) -> None:
 
 
 def pad_policy_for(topology_fingerprint: str) -> PadPolicy:
+    _load_measured_policies()
     return _PAD_POLICIES.get(topology_fingerprint, PadPolicy())
+
+
+def _load_measured_policies() -> None:
+    """Importing ``repro.configs.archs`` registers the PadPolicies
+    derived from the committed benchmark baseline; built-in topologies
+    (e.g. the paper arch) never trigger ``as_arch``'s lazy configs
+    import, so the policy lookup triggers it itself."""
+    try:
+        import repro.configs.archs  # noqa: F401  (side effect: register)
+    except ImportError:             # pragma: no cover - jax-less install
+        pass
 
 
 @dataclasses.dataclass
@@ -229,16 +275,34 @@ class MultiSearch:
     bit-identical results; the baselines' odd native batch sizes (48, 50,
     64) simply become rows of the shared power-of-two-padded mega-batch.
 
-    After :meth:`run`, ``stats`` holds the round count, device-dispatch
-    count, and the aligned and natural signature sets.  Duplicate resolved
-    task names are made explicit: every colliding name gets a ``#k``
-    suffix (``name#0``, ``name#1``, ...), so no two tasks ever silently
-    share a results key.
+    With ``device_rounds=k > 1``, tasks whose method is scan-foldable
+    (``baselines.SEGMENT_METHODS``) advance in k-generation device
+    segments: the generator yields a :class:`~repro.core.es_ops.
+    DeviceSegment` carrying the pre-drawn per-generation operator plans,
+    the driver runs {select -> crossover -> mutate -> cost} for all k
+    generations as ONE ``lax.scan`` program (``jax_cost.run_segments``,
+    same-signature same-shape segments stacked and, with ``mesh``,
+    sharded across devices), and the host syncs only once per segment for
+    ``_Budget`` accounting and history.  Methods without a device path
+    (PSO/MCTS/PPO/DQN, ``standard_es``, ``random_mapper``) keep the
+    per-round path transparently, and mixed fleets interleave both.
+    ``device_execute=False`` forces the host-loop reference path: the
+    driver answers each segment with ``None`` and the generator replays
+    the identical operator plan per-round on the host (bit-identical
+    trajectories; see COMPAT.md "Device-resident round protocol").
+
+    After :meth:`run`, ``stats`` holds the weighted round count, host
+    sync count, device-dispatch count, and the aligned and natural
+    signature sets.  Duplicate resolved task names are made explicit:
+    every colliding name gets a ``#k`` suffix (``name#0``, ``name#1``,
+    ...), so no two tasks ever silently share a results key.
     """
 
     def __init__(self, tasks: Iterable, align_signatures: bool = True,
                  stack_batches: bool = False,
-                 pad_policies: Optional[Dict[str, PadPolicy]] = None):
+                 pad_policies: Optional[Dict[str, PadPolicy]] = None,
+                 device_rounds: int = 1, mesh=None,
+                 device_execute: bool = True):
         norm: List[SearchTask] = []
         for t in tasks:
             if isinstance(t, SearchTask):
@@ -253,6 +317,11 @@ class MultiSearch:
         self.align_signatures = align_signatures
         self.stack_batches = stack_batches
         self.pad_policies = dict(pad_policies or {})
+        if device_rounds < 1:
+            raise ValueError("device_rounds must be >= 1")
+        self.device_rounds = int(device_rounds)
+        self.mesh = mesh
+        self.device_execute = bool(device_execute)
         self.final_names: List[str] = self._resolve_names(norm)
         self.stats: Dict = {}
 
@@ -319,9 +388,13 @@ class MultiSearch:
             spec, ev = get_evaluator(
                 task.workload, plat, n_pad=n_pad,
                 structured=structured_for.get(natural[0], False))
+            kw = dict(task.method_kw)
+            if self.device_rounds > 1 and task.method in SEGMENT_METHODS:
+                # scan-foldable engines fold k generations per segment;
+                # an explicit per-task device_rounds wins over the fleet's
+                kw.setdefault("device_rounds", self.device_rounds)
             gen, tracker = make_requests(task.method, spec, plat,
-                                         task.budget, task.seed,
-                                         **task.method_kw)
+                                         task.budget, task.seed, **kw)
             states.append(_TaskState(name=name, gen=gen, tracker=tracker,
                                      ev=ev, natural=natural,
                                      method=task.method))
@@ -351,16 +424,59 @@ class MultiSearch:
         # topology); the per-round watermark trajectory lands in
         # ``stats["pad_watermarks"]`` for cross-PR tracking.
         pad_hwm: Dict[Tuple[int, int, str], int] = {}
-        pad_recent: Dict[Tuple[int, int, str], List[int]] = {}
+        # (target, weight) observations; weight = search rounds the fleet
+        # clock advanced at that observation, so quiet-round decay scales
+        # with device-segment length (one host observation per k rounds
+        # must count as k quiet rounds, not 1 — otherwise a post-spike
+        # watermark never decays under segmented fleets)
+        pad_recent: Dict[Tuple[int, int, str],
+                         List[Tuple[int, int]]] = {}
         wm_hist: Dict[Tuple[int, int, str], List[int]] = {}
-        rounds = 0
+        rounds = 0          # weighted generation clock (k per segment)
+        host_syncs = 0      # driver loop iterations (host round-trips)
+        seg_syncs = 0       # iterations that device-advanced a segment
+        seg_rounds = 0      # generation rounds covered by those
         dispatch0 = jax_cost.dispatch_count()
         while alive:
             pending: List[_TaskState] = []
+            seg_states = [st for st in alive
+                          if isinstance(st.req, DeviceSegment)]
+            plain = [st for st in alive
+                     if not isinstance(st.req, DeviceSegment)]
+            # one iteration advances segmented tasks by k generations and
+            # per-round tasks by 1; the fleet's round clock moves by the
+            # largest stride taken this iteration
+            iter_weight = 0
+            if seg_states and self.device_execute:
+                seg_groups: Dict[Tuple, List[_TaskState]] = {}
+                for st in seg_states:
+                    key = st.signature + es_ops.segment_shape_key(st.req)
+                    seg_groups.setdefault(key, []).append(st)
+                for key in sorted(seg_groups):
+                    grp = seg_groups[key]
+                    iter_weight = max(iter_weight, grp[0].req.rounds)
+                    segres = jax_cost.run_segments(
+                        [s.ev for s in grp], [s.req for s in grp],
+                        mesh=self.mesh)
+                    for st, res in zip(grp, segres):
+                        if self._advance(st, res):
+                            pending.append(st)
+            elif seg_states:
+                # host-loop reference path: the generator replays the
+                # identical pre-drawn plan per-round (its next yield is a
+                # plain batch, so the task rejoins the per-round path)
+                for st in seg_states:
+                    if self._advance(st, None):
+                        pending.append(st)
+            if seg_states and self.device_execute:
+                seg_syncs += 1
+                seg_rounds += iter_weight
+            if plain:
+                iter_weight = max(iter_weight, 1)
             if self.stack_batches:
                 groups: Dict[Tuple[int, int, str],
                              List[_TaskState]] = {}
-                for st in alive:
+                for st in plain:
                     groups.setdefault(st.signature, []).append(st)
                 for sig in sorted(groups):
                     grp = groups[sig]
@@ -368,29 +484,33 @@ class MultiSearch:
                     hwm = pad_hwm.get(sig, 0)
                     outs = jax_cost.eval_stacked(
                         [s.ev for s in grp], [s.req for s in grp],
-                        pad_floor=hwm)
+                        pad_floor=hwm, mesh=self.mesh)
                     target = jax_cost._pad_batch(
                         sum(len(s.req) for s in grp))
                     hist = pad_recent.setdefault(sig, [])
-                    hist.append(target)
-                    del hist[:-pol.decay_rounds]
+                    hist.append((target, max(iter_weight, 1)))
+                    wtot = sum(w for _, w in hist)
+                    while hist and wtot - hist[0][1] >= pol.decay_rounds:
+                        wtot -= hist.pop(0)[1]
                     if target > hwm:
                         pad_hwm[sig] = target
                         hist.clear()
-                    elif len(hist) == pol.decay_rounds and \
-                            all(t <= hwm * pol.decay_ratio for t in hist):
-                        pad_hwm[sig] = max(hist)
+                    elif wtot >= pol.decay_rounds and \
+                            all(t <= hwm * pol.decay_ratio
+                                for t, _ in hist):
+                        pad_hwm[sig] = max(t for t, _ in hist)
                         hist.clear()
                     wm_hist.setdefault(sig, []).append(pad_hwm[sig])
                     for st, out in zip(grp, outs):
                         if self._advance(st, out):
                             pending.append(st)
             else:
-                for st in alive:
+                for st in plain:
                     if self._advance(st, st.ev(st.req)):
                         pending.append(st)
             alive = pending
-            rounds += 1
+            rounds += iter_weight
+            host_syncs += 1
 
         results: Dict[str, SearchResult] = {}
         for st in states:
@@ -406,8 +526,19 @@ class MultiSearch:
                 evals=st.tracker.evals,
                 valid_evals=st.tracker.valid,
                 extras=extras)
+        # host_syncs_per_round: 1.0 for per-round fleets; for segmented
+        # fleets the steady-state metric is over the segment phase (the
+        # HSHI/calibration prologue is inherently host-driven, so the
+        # whole-run ratio can never reach 1/k) — seg iterations each
+        # cover k generations with ONE host sync
+        hspr = (seg_syncs / seg_rounds) if seg_rounds else \
+            (host_syncs / rounds if rounds else 1.0)
         self.stats = dict(
             rounds=rounds,
+            host_syncs=host_syncs,
+            host_syncs_per_round=hspr,
+            device_rounds=self.device_rounds,
+            devices=jax_cost._mesh_ndev(self.mesh),
             dispatches=jax_cost.dispatch_count() - dispatch0,
             signatures=sorted({s.signature for s in states}),
             natural_signatures=sorted({s.natural for s in states}),
@@ -426,13 +557,15 @@ def run_sweep(workloads: Sequence[Workload],
               platform: PlatformLike = "cloud",
               budget: int = 20_000, seed: int = 0,
               align_signatures: bool = True, stack_batches: bool = False,
+              device_rounds: int = 1, mesh=None,
               **es_kw) -> Dict[str, SearchResult]:
     """Convenience wrapper: one concurrent SparseMap search per workload
     (e.g. the paper's Table III list) on a shared platform."""
     ms = MultiSearch(
         [SearchTask(wl, platform, budget=budget, seed=seed,
                     method_kw=dict(es_kw)) for wl in workloads],
-        align_signatures=align_signatures, stack_batches=stack_batches)
+        align_signatures=align_signatures, stack_batches=stack_batches,
+        device_rounds=device_rounds, mesh=mesh)
     return ms.run()
 
 
@@ -443,7 +576,9 @@ def run_method_sweep(methods: Sequence[str],
                      align_signatures: bool = True,
                      stack_batches: bool = True,
                      method_kw: Optional[Dict[str, Dict]] = None,
-                     stats_out: Optional[Dict] = None
+                     stats_out: Optional[Dict] = None,
+                     device_rounds: int = 1, mesh=None,
+                     device_execute: bool = True
                      ) -> Dict[str, Dict[str, SearchResult]]:
     """The full fig17-style grid — every method on every workload — as ONE
     concurrent :class:`MultiSearch` fleet, mega-batched per signature by
@@ -464,7 +599,9 @@ def run_method_sweep(methods: Sequence[str],
                         method_kw=dict(method_kw.get(m, {})))
              for m in methods for wl in workloads]
     ms = MultiSearch(tasks, align_signatures=align_signatures,
-                     stack_batches=stack_batches)
+                     stack_batches=stack_batches,
+                     device_rounds=device_rounds, mesh=mesh,
+                     device_execute=device_execute)
     flat = ms.run()
     grid: Dict[str, Dict[str, SearchResult]] = {m: {} for m in methods}
     i = 0

@@ -45,6 +45,23 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def make_search_mesh(n_devices: Optional[int] = None, axis: str = "rows"):
+    """1-D mesh for sharding search mega-batches / segment fleets
+    (``jax_cost.eval_stacked`` shards batch rows, ``run_segments`` shards
+    the task axis).  Uses every visible device by default; returns None
+    on a single device so callers can pass the result straight to
+    ``MultiSearch(mesh=...)`` and keep the bit-identical fast path."""
+    import jax
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if n > len(devices):
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devices[:n]).reshape(n), (axis,))
+
+
 _BATCH_AXES_OVERRIDE: Optional[Tuple[str, ...]] = None
 
 

@@ -4,7 +4,7 @@ import copy
 
 import numpy as np
 
-from benchmarks.compare_sweep import compare
+from benchmarks.compare_sweep import compare, stale_policy_warnings
 from repro.core import search
 from repro.core.arch import ARCH_SPARSEMAP
 from repro.core.search import (MultiSearch, PadPolicy, SearchTask,
@@ -28,8 +28,12 @@ def test_pad_watermark_history_recorded_per_topology():
     ms.run()
     fp = ARCH_SPARSEMAP.topology.fingerprint
     assert list(ms.stats["pad_policies"]) == [fp]
+    # the paper topology carries the measured policy derived from the
+    # committed baseline trajectory (configs.archs), not the default:
+    # earlier decay (2 quiet rounds), ratio tightened to the observed
+    # post-spike plateau (256/2048)
     assert ms.stats["pad_policies"][fp] == \
-        {"decay_rounds": 3, "decay_ratio": 0.5}
+        {"decay_rounds": 2, "decay_ratio": 0.125}
     wms = ms.stats["pad_watermarks"]
     assert len(wms) == 1
     (key, hist), = wms.items()
@@ -129,8 +133,44 @@ def test_committed_baseline_is_well_formed():
         {"cloud", "maple_edge", "cluster_cloud", "systolic_mesh",
          "quant_edge"}
     for a in base["archs"]:
-        assert a["dispatches_per_round"] == 1.0
+        # per-round fleets hold 1 dispatch/round; the device-resident
+        # fleet (cloud_device_k4) folds k generations per dispatch
+        assert a["dispatches_per_round"] <= 1.0
+        assert a["host_syncs_per_round"] <= 1.0
         assert a["pad_watermarks"] and a["pad_policies"]
+    k4 = {a["arch"]: a for a in base["archs"]}["cloud_device_k4"]
+    assert k4["device_rounds"] == 4
+    assert k4["host_syncs_per_round"] <= 1 / 4
+    # no stale-policy warnings against the baseline itself: registered
+    # policies must match what its own trajectories derive
+    assert stale_policy_warnings(base) == []
+
+
+def test_compare_sweep_fails_on_host_sync_regression():
+    base = copy.deepcopy(BASE)
+    base["archs"][0]["host_syncs_per_round"] = 0.25
+    cur = copy.deepcopy(base)
+    cur["archs"][0]["host_syncs_per_round"] = 1.0
+    failures, _ = compare(base, cur)
+    assert failures == ["cloud: host syncs/round regressed 0.25 -> 1.0"]
+    # absent on either side (old baseline) -> not comparable, no failure
+    failures, _ = compare(BASE, cur)
+    assert failures == []
+
+
+def test_stale_policy_warning_fires_on_mismatched_trajectory():
+    rec = dict(archs=[dict(
+        arch="cloud",
+        # one-off spike, never re-grows -> derivation says decay_rounds=2
+        pad_watermarks={"d3_p16_feedf00d": [2048, 2048, 2048, 256, 256]},
+        pad_policies={"feedf00d": {"decay_rounds": 3,
+                                   "decay_ratio": 0.5}})])
+    warns = stale_policy_warnings(rec)
+    assert len(warns) == 1 and "decay_rounds=2" in warns[0]
+    # re-growing trajectory matches the conservative registered policy
+    rec["archs"][0]["pad_watermarks"]["d3_p16_feedf00d"] = \
+        [2048, 256, 2048, 256, 2048]
+    assert stale_policy_warnings(rec) == []
 
 
 def test_compare_sweep_fails_when_arch_disappears():

@@ -44,7 +44,10 @@ def _derive_decay_rounds(trajectory) -> int:
 def stale_policy_warnings(current: dict) -> List[str]:
     """Warn when a fresh run's watermark trajectory suggests the
     registered PadPolicy is stale (registration lives in
-    ``repro.configs.archs._BASELINE_PAD_WATERMARKS``)."""
+    ``repro.configs.archs._BASELINE_PAD_WATERMARKS``), or when a policy
+    still carries ``source="seed"`` — the author-declared placeholder
+    from ``_SEED_PAD_WATERMARKS`` — even though the run just MEASURED
+    the topology's real trajectory and the seed should be promoted."""
     out: List[str] = []
     for arec in current.get("archs", []):
         policies = arec.get("pad_policies", {})
@@ -53,6 +56,13 @@ def stale_policy_warnings(current: dict) -> List[str]:
             pol = policies.get(fp)
             if pol is None:
                 continue
+            if pol.get("source") == "seed":
+                out.append(
+                    f"{arec['arch']}: topology {fp} still runs on a "
+                    f"seed pad policy but this run measured trajectory "
+                    f"{traj} — promote the entry from "
+                    f"repro.configs.archs._SEED_PAD_WATERMARKS to "
+                    f"_BASELINE_PAD_WATERMARKS")
             want = _derive_decay_rounds(traj)
             if want != pol.get("decay_rounds"):
                 out.append(

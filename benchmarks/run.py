@@ -39,7 +39,7 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
     methods = ["sparsemap", "random_mapper", "pso"]
     wls = [by_name(n) for n in ("mm1", "mm3")]
     archs = ["cloud", "maple_edge", "cluster_cloud", "systolic_mesh",
-             "quant_edge"]
+             "quant_edge", "eyeriss_like", "sigma_like", "dstc_like"]
     record = dict(budget=budget, methods=methods,
                   workloads=[w.name for w in wls], archs=[], cells=[])
 

@@ -1,37 +1,66 @@
 """Full accelerator DSE scenario: search sparse-accelerator designs for
-the dominant GEMMs of an assigned LLM architecture across the three
-hardware platforms, and compare against the prior-work baselines.
+the dominant GEMMs of an assigned LLM architecture across hardware
+platforms, and compare against the prior-work baselines.
 
     PYTHONPATH=src python examples/search_accelerator.py \
-        [--arch kimi-k2-1t-a32b] [--budget 4000]
+        [--model kimi-k2-1t-a32b] [--budget 4000]
 
-``--platforms`` accepts any mix of the paper platforms (edge/mobile/
-cloud) and registered accelerator topologies (repro.configs.archs),
-e.g. ``--platforms cloud,maple_edge,cluster_cloud`` — the whole stack is
-ArchSpec-driven, so non-default memory hierarchies search end-to-end.
+``--arch`` targets any single paper platform or registered accelerator
+topology by name (``--list-archs`` prints the registry, including the
+published-accelerator zoo from ``repro.configs.archs``); ``--platforms``
+takes a comma-separated mix, e.g. ``--platforms cloud,eyeriss_like`` —
+the whole stack is ArchSpec-driven, so non-default memory hierarchies
+search end-to-end.
 """
 import argparse
 import time
 
 
+def list_archs():
+    from repro.core.accel import PLATFORMS
+    from repro.core.arch import registered_archs
+    print("paper platforms:")
+    for name in sorted(PLATFORMS):
+        print(f"  {name}")
+    print("registered archs (repro.configs.archs):")
+    for name, spec in sorted(registered_archs().items()):
+        head = spec.describe().splitlines()[-1]
+        print(f"  {name:>16s}  {head}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="kimi-k2-1t-a32b")
+    ap.add_argument("--model", default="kimi-k2-1t-a32b",
+                    help="assigned LLM architecture to extract GEMMs from")
     ap.add_argument("--budget", type=int, default=4000)
-    ap.add_argument("--platforms", default="edge,cloud")
+    ap.add_argument("--arch", default=None, metavar="NAME",
+                    help="single target platform/arch name (overrides "
+                         "--platforms); see --list-archs")
+    ap.add_argument("--platforms", default="edge,cloud",
+                    help="comma-separated platform/arch names")
+    ap.add_argument("--list-archs", action="store_true",
+                    help="print every resolvable platform/arch and exit")
     args = ap.parse_args(argv)
+
+    if args.list_archs:
+        list_archs()
+        return
 
     from repro.configs.paper_workloads import arch_gemms
     from repro.core import search
+    from repro.core.arch import as_arch
 
-    workloads = arch_gemms(args.arch, weight_density=0.5,
+    targets = [args.arch] if args.arch else args.platforms.split(",")
+    for t in targets:
+        as_arch(t)      # fail fast with the full registry listing
+
+    workloads = arch_gemms(args.model, weight_density=0.5,
                            act_density=0.6)
-    print(f"extracted {len(workloads)} GEMMs from {args.arch} "
+    print(f"extracted {len(workloads)} GEMMs from {args.model} "
           f"(50% pruned weights, 60% dense activations)\n")
 
     methods = ("sparsemap", "sage_like", "random_mapper")
-    for plat in args.platforms.split(","):
+    for plat in targets:
         print(f"== platform: {plat}")
         # the whole (method x workload) grid runs as one concurrent
         # mega-batched fleet — same results as per-method search.run

@@ -53,6 +53,37 @@ from .workload import WORD_BYTES
 EnergyGroups = Tuple[Tuple[str, Tuple[float, ...]], ...]
 
 
+def _noc_scheme(flag: Union[bool, str]) -> str:
+    """Normalize a NoC scheme declaration to "all" / "none" / "frac".
+
+    ``True`` and ``"all"`` mean full multicast (or full in-network
+    reduction); ``False`` and ``"none"`` mean pure unicast (or
+    all-partials).  Any OTHER non-empty string — ``"row"``, ``"col"``,
+    ``"cluster"``, ... — declares a *fractional* scheme: the label is
+    kept for display, but structurally every fractional scheme is the
+    same kernel shape ("frac"); its numeric discount fanout rides in the
+    traced param vector so a family of same-scheme archs shares one XLA
+    compilation."""
+    if flag is True or flag == "all":
+        return "all"
+    if flag is False or flag == "none":
+        return "none"
+    if isinstance(flag, str) and flag:
+        return "frac"
+    raise ValueError(
+        f"NoC scheme must be True/'all', False/'none', or a fractional "
+        f"scheme label ('row', 'col', 'cluster', ...); got {flag!r}")
+
+
+def _noc_topo_code(flag: Union[bool, str]) -> Union[bool, str]:
+    """The Topology-tuple encoding of a scheme: the legacy booleans for
+    all/none (existing fingerprints are unchanged) and the literal string
+    ``"frac"`` for every fractional scheme (labels never split
+    compilation)."""
+    s = _noc_scheme(flag)
+    return True if s == "all" else False if s == "none" else "frac"
+
+
 @dataclasses.dataclass(frozen=True)
 class NoCSpec:
     """Network-on-chip shape of the fill edge into a storage level: how
@@ -67,12 +98,52 @@ class NoCSpec:
     loop bound.  ``reduction`` is the same choice for the OUTPUT tensor:
     ``True`` reduces spatially-partitioned partial sums in-network (one
     reduced result crosses the edge per tile), ``False`` sends every
-    instance's partial sums across.  Both flags are *structural*: they
-    shape the compiled kernel and are part of the Topology fingerprint.
+    instance's partial sums across.
+
+    Between the two extremes sit *fractional* schemes, declared with a
+    string label and a numeric ``*_fanout``: ``multicast="row",
+    multicast_fanout=14`` models a row-wise bus on a 2-D mesh (one copy
+    serves each row of 14 instances), ``reduction="cluster",
+    reduction_fanout=8`` a cluster-local adder tree (partials reduce
+    within clusters of 8, one partial per cluster crosses the edge).
+    With ``S`` spatial instances needing a tile the edge carries
+    ``max(S / fanout, 1)`` copies — ``"all"`` is the ``fanout -> inf``
+    limit, ``"none"`` is ``fanout = 1``.
+
+    The *scheme* is structural: it shapes the compiled kernel and is part
+    of the Topology fingerprint (as the normalized code, so different
+    labels and fanouts never split compilation).  The *fanout* is a
+    number riding in ``ArchSpec.param_vector`` — a family of same-scheme
+    archs differing only in discount factors shares one XLA compilation.
     """
 
-    multicast: bool = True
-    reduction: bool = True
+    multicast: Union[bool, str] = True
+    reduction: Union[bool, str] = True
+    multicast_fanout: Optional[float] = None
+    reduction_fanout: Optional[float] = None
+
+    def __post_init__(self):
+        for kind, flag, fan in (
+                ("multicast", self.multicast, self.multicast_fanout),
+                ("reduction", self.reduction, self.reduction_fanout)):
+            scheme = _noc_scheme(flag)      # raises on junk values
+            if scheme == "frac":
+                if fan is None or not fan > 0:
+                    raise ValueError(
+                        f"NoCSpec {kind}={flag!r} is a fractional scheme "
+                        f"and needs {kind}_fanout > 0, got {fan!r}")
+            elif fan is not None:
+                raise ValueError(
+                    f"NoCSpec {kind}={flag!r} takes no {kind}_fanout "
+                    f"(only fractional schemes carry a numeric discount)")
+
+    @property
+    def multicast_scheme(self) -> str:
+        return _noc_scheme(self.multicast)
+
+    @property
+    def reduction_scheme(self) -> str:
+        return _noc_scheme(self.reduction)
 
 
 #: The default edge NoC: full multicast + in-network reduction (exactly
@@ -139,9 +210,12 @@ class Topology:
     edge_site: Tuple[Optional[int], ...]         # per edge: site idx | None
     has_bandwidth: Tuple[bool, ...]              # per edge
     sg_sites: Tuple[str, ...]                    # store sites + "C"
-    # NoC shape per edge (structural: changes the fills accounting)
-    noc_multicast: Tuple[bool, ...] = ()
-    noc_reduction: Tuple[bool, ...] = ()
+    # NoC scheme per edge (structural: changes the fills accounting).
+    # Entries are the legacy booleans for the all/none schemes (existing
+    # fingerprints unchanged) or the literal "frac" for any fractional
+    # scheme — the numeric fanout is traced, never part of the topology.
+    noc_multicast: Tuple[Union[bool, str], ...] = ()
+    noc_reduction: Tuple[Union[bool, str], ...] = ()
     # True when every level stores the global default word width; the
     # kernel then bakes the width as a constant (the pre-word-width code
     # path, bit-identical for existing topologies).  Custom-width specs
@@ -285,8 +359,10 @@ class ArchSpec:
                 l.fill_bandwidth_bytes_per_cycle is not None
                 for l in lv[1:]),
             sg_sites=self.sg_sites,
-            noc_multicast=tuple(n.multicast for n in self.edge_noc),
-            noc_reduction=tuple(n.reduction for n in self.edge_noc),
+            noc_multicast=tuple(_noc_topo_code(n.multicast)
+                                for n in self.edge_noc),
+            noc_reduction=tuple(_noc_topo_code(n.reduction)
+                                for n in self.edge_noc),
             uniform_word_bytes=all(
                 w == float(WORD_BYTES) for w in self.edge_word_bytes),
         )
@@ -306,10 +382,13 @@ class ArchSpec:
     def param_vector(self):
         """The traced parameter vector the JAX kernel consumes:
         [spatial caps | capacities | flat edge-energy components |
-        edge bandwidths | e_mac | per-edge word widths], float32.  Two
-        same-topology specs differ only here, so they share compilations
-        (uniform-default-width topologies bake the width as a kernel
-        constant and simply never read the width tail)."""
+        edge bandwidths | e_mac | per-edge word widths | fractional NoC
+        fanouts], float32.  Two same-topology specs differ only here, so
+        they share compilations (uniform-default-width topologies bake
+        the width as a kernel constant and simply never read the width
+        tail; the NoC tail only exists for edges declaring a fractional
+        scheme, in edge order, multicast fanout before reduction
+        fanout)."""
         import numpy as np
         vals = (list(self.spatial_caps()) +
                 [c for _, _, c in self.capacity_stores] +
@@ -318,6 +397,11 @@ class ArchSpec:
                 [bw for _, bw in self.bw_edges] +
                 [self.e_mac] +
                 list(self.edge_word_bytes))
+        for n in self.edge_noc:
+            if n.multicast_scheme == "frac":
+                vals.append(n.multicast_fanout)
+            if n.reduction_scheme == "frac":
+                vals.append(n.reduction_fanout)
         return np.asarray(vals, dtype=np.float32)
 
     def describe(self) -> str:
@@ -333,10 +417,19 @@ class ArchSpec:
             if l.word_bytes is not None:
                 bits.append(f"{l.word_bytes:g}B-word")
             if k > 0 and l.noc != NOC_DEFAULT:
+                def _bit(scheme, label, fanout, full, empty):
+                    if scheme == "all":
+                        return full
+                    if scheme == "none":
+                        return empty
+                    return f"{full}:{label}/{fanout:g}"
                 bits.append(
                     "noc["
-                    + ("mc" if l.noc.multicast else "ucast") + "/"
-                    + ("red" if l.noc.reduction else "all-partials") + "]")
+                    + _bit(l.noc.multicast_scheme, l.noc.multicast,
+                           l.noc.multicast_fanout, "mc", "ucast") + "/"
+                    + _bit(l.noc.reduction_scheme, l.noc.reduction,
+                           l.noc.reduction_fanout, "red", "all-partials")
+                    + "]")
             rows.append(" ".join(bits))
         rows.append(f"levels: {' '.join(self.level_names)}; "
                     f"sites: {'/'.join(self.sg_sites)}")
@@ -439,10 +532,21 @@ def _load_config_archs() -> None:
             raise
 
 
+class UnknownArchError(KeyError):
+    """Raised by :func:`as_arch` for an unresolvable name.  A KeyError
+    subclass (callers catching KeyError keep working) whose message is
+    not repr-quoted, so the full platform/arch listing stays readable."""
+
+    def __str__(self) -> str:
+        return self.args[0]
+
+
 def as_arch(platform: Union[str, Platform, ArchSpec]) -> ArchSpec:
     """Resolve any accepted hardware description to an ArchSpec:
     a Platform name ("edge"/"mobile"/"cloud"), a registered arch name,
-    a Platform object, or an ArchSpec (passed through)."""
+    a Platform object, or an ArchSpec (passed through).  Unknown names
+    raise :class:`UnknownArchError` listing every resolvable name (the
+    paper platforms plus :func:`registered_archs`)."""
     if isinstance(platform, ArchSpec):
         return platform
     if isinstance(platform, Platform):
@@ -455,9 +559,18 @@ def as_arch(platform: Union[str, Platform, ArchSpec]) -> ArchSpec:
             _load_config_archs()
         if platform in _REGISTRY:
             return _REGISTRY[platform]
-        raise KeyError(
-            f"unknown platform/arch {platform!r}; have platforms "
-            f"{sorted(PLATFORMS)} and archs {sorted(_REGISTRY)}")
+        import difflib
+        known = sorted(PLATFORMS) + sorted(_REGISTRY)
+        close = difflib.get_close_matches(platform, known, n=3)
+        hint = f"; did you mean {' / '.join(map(repr, close))}?" \
+            if close else ""
+        raise UnknownArchError(
+            f"unknown platform/arch {platform!r}{hint}\n"
+            f"  paper platforms: {', '.join(sorted(PLATFORMS))}\n"
+            f"  registered archs: {', '.join(sorted(_REGISTRY))}\n"
+            f"  (register new topologies with repro.core.arch."
+            f"register_arch or declare them via repro.core.arch_dsl; "
+            f"see repro.configs.archs and COMPAT.md)")
     raise TypeError(f"cannot resolve {type(platform).__name__} to an "
                     f"ArchSpec")
 

@@ -163,15 +163,20 @@ class _TopoTables:
     energy_idx: Tuple[Tuple[int, ...], ...]  # per edge: component indices
     bw_checks: Tuple[Tuple[int, int], ...]  # (edge idx, param idx)
     mac_idx: int
-    # NoC shape per edge + the word-width parameterization: with
-    # uniform_words the kernel bakes WORD_BYTES as a constant (the
-    # pre-width code path); otherwise per-edge widths are read from the
-    # param vector at word_idx, so same-topology custom-width specs
-    # still share one compilation
-    noc_multicast: Tuple[bool, ...] = ()
-    noc_reduction: Tuple[bool, ...] = ()
+    # NoC scheme per edge (True/False/"frac") + the word-width
+    # parameterization: with uniform_words the kernel bakes WORD_BYTES as
+    # a constant (the pre-width code path); otherwise per-edge widths are
+    # read from the param vector at word_idx, so same-topology
+    # custom-width specs still share one compilation.  Fractional NoC
+    # schemes read their discount fanout from the param-vector tail at
+    # noc_mc_idx / noc_red_idx (None on all/none edges) — same split, so
+    # a same-scheme family with different fanouts shares one compilation.
+    noc_multicast: Tuple[Union[bool, str], ...] = ()
+    noc_reduction: Tuple[Union[bool, str], ...] = ()
     uniform_words: bool = True
     word_idx: Tuple[int, ...] = ()          # per edge: param idx
+    noc_mc_idx: Tuple[Optional[int], ...] = ()   # per edge: param idx|None
+    noc_red_idx: Tuple[Optional[int], ...] = ()
 
 
 @lru_cache(maxsize=32)
@@ -214,6 +219,24 @@ def _topo_tables(topo: Topology) -> _TopoTables:
             pos += 1
     mac_idx = pos
     word_idx = tuple(range(pos + 1, pos + 1 + n_edges))
+    # fractional NoC fanouts trail the word widths (mirrors
+    # ArchSpec.param_vector: edge order, multicast before reduction)
+    noc_mc = topo.noc_multicast or (True,) * n_edges
+    noc_red = topo.noc_reduction or (True,) * n_edges
+    pos = word_idx[-1] + 1 if word_idx else mac_idx + 1
+    noc_mc_idx: List[Optional[int]] = []
+    noc_red_idx: List[Optional[int]] = []
+    for e in range(n_edges):
+        if noc_mc[e] == "frac":
+            noc_mc_idx.append(pos)
+            pos += 1
+        else:
+            noc_mc_idx.append(None)
+        if noc_red[e] == "frac":
+            noc_red_idx.append(pos)
+            pos += 1
+        else:
+            noc_red_idx.append(None)
 
     return _TopoTables(
         n_levels=nl, n_edges=n_edges, is_spatial=tuple(is_spatial),
@@ -222,10 +245,11 @@ def _topo_tables(topo: Topology) -> _TopoTables:
         n_sites=len(topo.sg_sites), fanout_idx=fanout_idx,
         cap_checks=tuple(cap_checks), energy_idx=tuple(energy_idx),
         bw_checks=tuple(bw_checks), mac_idx=mac_idx,
-        noc_multicast=topo.noc_multicast or (True,) * n_edges,
-        noc_reduction=topo.noc_reduction or (True,) * n_edges,
+        noc_multicast=noc_mc,
+        noc_reduction=noc_red,
         uniform_words=topo.uniform_word_bytes,
-        word_idx=word_idx)
+        word_idx=word_idx,
+        noc_mc_idx=tuple(noc_mc_idx), noc_red_idx=tuple(noc_red_idx))
 
 
 # ------------------------------------------- density occupancy builders
@@ -354,13 +378,21 @@ def _build_eval_one(d: int, n_primes_pad: int, topo: Topology,
             contrib = jnp.where(rel_flat[t], bounds,
                                 jnp.where(~spatial_flat, bounds, 1.0))
             mult = jnp.prod(jnp.where(active & ~in_suffix, contrib, 1.0))
-            # NoC shape of edge s: without multicast (reads) / in-network
-            # reduction (the output, tensor 2), every spatial instance's
-            # copy crosses the edge — irrelevant spatial loops multiply
-            # traffic wherever they sit in the nest (suffix included)
-            discount = (tt.noc_reduction[s] if t == 2
-                        else tt.noc_multicast[s])
-            if not discount:
+            # NoC scheme of edge s: without multicast (reads) /
+            # in-network reduction (the output, tensor 2), every spatial
+            # instance's copy crosses the edge — irrelevant spatial loops
+            # multiply traffic wherever they sit in the nest (suffix
+            # included).  Fractional schemes carry max(S / fanout, 1)
+            # copies over the same loop set, the fanout traced from the
+            # param-vector tail (same-scheme families share compilation).
+            scheme = (tt.noc_reduction[s] if t == 2
+                      else tt.noc_multicast[s])
+            if scheme == "frac":
+                fi = tt.noc_red_idx[s] if t == 2 else tt.noc_mc_idx[s]
+                s_irrel = jnp.prod(jnp.where(
+                    active & irrel & spatial_flat, bounds, 1.0))
+                mult = mult * jnp.maximum(s_irrel / plat[fi], 1.0)
+            elif not scheme:
                 mult = mult * jnp.prod(jnp.where(
                     active & irrel & spatial_flat, bounds, 1.0))
             tile = jnp.prod(jnp.where(

@@ -31,7 +31,10 @@ storage level is
      ``multicast=False`` every spatial instance's read copy crosses the
      edge, and with ``reduction=False`` every instance's partial output
      sums cross, so irrelevant spatial loops then multiply traffic by
-     their bound wherever they sit in the nest.)
+     their bound wherever they sit in the nest.  Fractional schemes —
+     ``multicast="row"``, ``reduction="cluster"``, ... with a numeric
+     ``*_fanout`` — sit in between: the S spatial instances group into
+     domains of ``fanout``, and ``max(S / fanout, 1)`` copies cross.)
 """
 from __future__ import annotations
 
@@ -124,9 +127,13 @@ class Mapping:
         outer = [l for l in outer if l[2] > 1]
         # NoC of the edge INTO this store: does an irrelevant spatial
         # loop's traffic collapse to one copy (reads: multicast; output:
-        # in-network reduction of partials) or cross per instance?
+        # in-network reduction of partials), cross per instance, or —
+        # fractional schemes — cross once per multicast/reduction domain
+        # of ``fanout`` instances?
         noc = self.arch.edge_noc[self.arch.store_index[store] - 1]
-        discount = noc.reduction if t.is_output else noc.multicast
+        scheme = (noc.reduction_scheme if t.is_output
+                  else noc.multicast_scheme)
+        discount = scheme != "none"
         # innermost contiguous run of irrelevant loops -> temporal reuse
         suffix = 0
         for lvl, d, bound, is_spatial in reversed(outer):
@@ -149,6 +156,20 @@ class Mapping:
             for lvl, d, bound, is_spatial in outer[len(outer) - suffix:]:
                 if is_spatial:
                     mult *= bound
+        elif scheme == "frac":
+            # fractional scheme ("row"/"col"/"cluster"): the S spatial
+            # instances needing the tile group into multicast/reduction
+            # domains of size ``fanout``, so max(S / fanout, 1) copies
+            # cross the edge — applied once over ALL irrelevant spatial
+            # loops (suffix included: replication is physical), with
+            # "all" the fanout->inf limit and "none" fanout=1
+            fan = (noc.reduction_fanout if t.is_output
+                   else noc.multicast_fanout)
+            s_irrel = 1.0
+            for lvl, d, bound, is_spatial in outer:
+                if is_spatial and d not in relevant_dims:
+                    s_irrel *= bound
+            mult *= max(s_irrel / fan, 1.0)
         return self.tensor_tile_elems(store, tensor_name) * mult
 
     def temporal_iterations(self) -> int:

@@ -139,16 +139,33 @@ class PadPolicy:
     so the retrace-vs-padded-compute sweet spot is a per-topology number
     — register a measured policy with :func:`set_pad_policy` (keyed by
     ``Topology.fingerprint``) or pass ``pad_policies`` to
-    :class:`MultiSearch` for a one-off override."""
+    :class:`MultiSearch` for a one-off override.
+
+    ``source`` records where the constants came from: ``"default"`` (the
+    CPU-tuned fallback), ``"measured"`` (derived from a committed
+    benchmark trajectory) or ``"seed"`` (declared by a topology's author
+    ahead of its first committed baseline run — a zoo entry lands with a
+    seed so it never *silently* inherits the default, and
+    ``benchmarks/compare_sweep.stale_policy_warnings`` flags the seed for
+    promotion once a baseline run has measured the real trajectory)."""
 
     decay_rounds: int = 3
     decay_ratio: float = 0.5
+    source: str = "default"
 
 
-def derive_pad_policy(trajectory: Sequence[int]) -> PadPolicy:
-    """Derive a per-topology :class:`PadPolicy` from a measured
-    pad-watermark trajectory (``stats["pad_watermarks"]`` of a committed
-    benchmark run, e.g. ``BENCH_sweep.baseline.json``).
+#: The explicit policy :func:`pad_policy_for` returns for topologies with
+#: no registered entry: the conservative CPU-tuned constants.
+DEFAULT_PAD_POLICY = PadPolicy()
+
+
+def derive_pad_policy(trajectory: Sequence[int],
+                      source: str = "measured") -> PadPolicy:
+    """Derive a per-topology :class:`PadPolicy` from a pad-watermark
+    trajectory (``stats["pad_watermarks"]`` of a committed benchmark
+    run, e.g. ``BENCH_sweep.baseline.json``; pass ``source="seed"`` when
+    the trajectory is an author-declared expectation rather than a
+    committed measurement).
 
     Heuristic: a trajectory that steps down from its peak and never
     re-grows afterwards is a one-off spike (round-1 calibration probes /
@@ -165,16 +182,19 @@ def derive_pad_policy(trajectory: Sequence[int]) -> PadPolicy:
     traj = list(trajectory)
     peak = max(traj, default=0)
     if peak <= 0 or traj[-1] >= peak:
-        return PadPolicy()          # never decayed: no evidence either way
+        # never decayed: no evidence either way — default constants, but
+        # stamped with the source so the registry records it was derived
+        return PadPolicy(source=source)
     first_down = next(i for i, v in enumerate(traj) if v < peak
                       and max(traj[:i], default=0) == peak)
     regrew = any(b > a for a, b in zip(traj[first_down:],
                                        traj[first_down + 1:]))
     if regrew:
-        return PadPolicy()
+        return PadPolicy(source=source)
     plateau_ratio = max(traj[first_down:]) / peak
     return PadPolicy(decay_rounds=2,
-                     decay_ratio=min(max(plateau_ratio, 1 / 32), 0.5))
+                     decay_ratio=min(max(plateau_ratio, 1 / 32), 0.5),
+                     source=source)
 
 
 #: topology fingerprint -> tuned PadPolicy (default policy when absent)
@@ -187,8 +207,12 @@ def set_pad_policy(topology_fingerprint: str, policy: PadPolicy) -> None:
 
 
 def pad_policy_for(topology_fingerprint: str) -> PadPolicy:
+    """The registered policy for a topology, or — documented, not an
+    accident — :data:`DEFAULT_PAD_POLICY` when none is registered (new
+    topologies start on the conservative CPU-tuned constants until a
+    seed or measured policy lands in ``repro.configs.archs``)."""
     _load_measured_policies()
-    return _PAD_POLICIES.get(topology_fingerprint, PadPolicy())
+    return _PAD_POLICIES.get(topology_fingerprint, DEFAULT_PAD_POLICY)
 
 
 def _load_measured_policies() -> None:

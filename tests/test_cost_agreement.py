@@ -12,7 +12,8 @@ try:        # hypothesis is an optional test extra (pyproject.toml)
 except ImportError:
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.configs.archs import (CLUSTER_CLOUD, MAPLE_EDGE, QUANT_EDGE,
+from repro.configs.archs import (CLUSTER_CLOUD, DSTC_LIKE, EYERISS_LIKE,
+                                 MAPLE_EDGE, QUANT_EDGE, SIGMA_LIKE,
                                  SYSTOLIC_MESH)
 from repro.core import accel
 from repro.core.cost_model import evaluate
@@ -139,6 +140,31 @@ def test_agreement_quant_edge(wl, seed):
     """1-byte on-chip words: the traced per-edge width path of the
     kernel must agree with the width-parameterized numpy oracle."""
     _check_agreement(wl, QUANT_EDGE, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_agreement_eyeriss_like(wl, seed):
+    """Fractional NoC both ways (row multicast f=14, column reduction
+    f=12 on the 12x14 mesh): the traced-discount kernel path must agree
+    with the numpy oracle."""
+    _check_agreement(wl, EYERISS_LIKE, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_agreement_dstc_like(wl, seed):
+    """Row multicast plus cluster-local reduction (both fractional) on a
+    4-store hierarchy."""
+    _check_agreement(wl, DSTC_LIKE, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_workloads(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_agreement_sigma_like(wl, seed):
+    """Full multicast with a fractional reduction tree over a 16384-wide
+    spatial level."""
+    _check_agreement(wl, SIGMA_LIKE, seed)
 
 
 def test_new_archs_reach_valid_points():

@@ -10,7 +10,8 @@ import os
 import numpy as np
 import pytest
 
-from repro.configs.archs import (CLUSTER_CLOUD, MAPLE_EDGE, QUANT_EDGE,
+from repro.configs.archs import (CLUSTER_CLOUD, DSTC_LIKE, EYERISS_LIKE,
+                                 MAPLE_EDGE, QUANT_EDGE, SIGMA_LIKE,
                                  SYSTOLIC_MESH)
 from repro.core import search
 from repro.core.arch import (ARCH_SPARSEMAP, ArchSpec, NoCSpec,
@@ -75,6 +76,66 @@ def test_no_reduction_noc_multiplies_partial_output_traffic():
     assert m_f.fills("reg", "Z") == 4 * m_t.fills("reg", "Z")
     assert m_f.fills("reg", "P") == m_t.fills("reg", "P")
     assert m_f.fills("reg", "Q") == m_t.fills("reg", "Q")
+
+
+def test_fractional_noc_interpolates_between_all_and_none():
+    """A fractional scheme discounts irrelevant-spatial read traffic by
+    ``max(S / fanout, 1)``: fanout 1 reproduces unicast, fanout >= S
+    reproduces full multicast, and in between the edge carries S/fanout
+    copies.  Same story for cluster-local reduction on the output."""
+    wl = spmm("frac_wl", 4, 4, 4, 0.5, 0.5)
+    mcast = _three_store(NoCSpec(), "frac_mc_all")
+    ucast = _three_store(NoCSpec(multicast=False), "frac_mc_none")
+    half = _three_store(NoCSpec(multicast="row", multicast_fanout=2.0),
+                        "frac_mc_2")
+    wide = _three_store(NoCSpec(multicast="row", multicast_fanout=8.0),
+                        "frac_mc_8")
+    base = _mapping(mcast, wl, "N").fills("reg", "P")
+    assert _mapping(ucast, wl, "N").fills("reg", "P") == 4 * base
+    assert _mapping(half, wl, "N").fills("reg", "P") == 2 * base
+    assert _mapping(wide, wl, "N").fills("reg", "P") == base
+    # relevant-tensor fills never see the discount
+    assert _mapping(half, wl, "N").fills("reg", "Q") == \
+        _mapping(mcast, wl, "N").fills("reg", "Q")
+    tree = _three_store(NoCSpec(), "frac_red_all")
+    cluster = _three_store(
+        NoCSpec(reduction="cluster", reduction_fanout=2.0), "frac_red_2")
+    assert _mapping(cluster, wl, "K").fills("reg", "Z") == \
+        2 * _mapping(tree, wl, "K").fills("reg", "Z")
+
+
+def test_fractional_noc_validation():
+    """Fractional schemes need a positive fanout; all/none take none."""
+    with pytest.raises(ValueError):
+        NoCSpec(multicast="row")
+    with pytest.raises(ValueError):
+        NoCSpec(multicast="row", multicast_fanout=0.0)
+    with pytest.raises(ValueError):
+        NoCSpec(multicast=True, multicast_fanout=4.0)
+    with pytest.raises(ValueError):
+        NoCSpec(reduction="")
+
+
+def test_fractional_noc_family_shares_one_compilation():
+    """The scheme is structural, the discount fanout is traced: two
+    same-scheme archs with different fanouts share the topology, the
+    signature AND the compiled kernel object; labels don't split either.
+    The discount rides in the param-vector tail."""
+    a = _three_store(NoCSpec(multicast="row", multicast_fanout=2.0),
+                     "frac_fam_a")
+    b = _three_store(NoCSpec(multicast="bus", multicast_fanout=7.0),
+                     "frac_fam_b")
+    c = _three_store(NoCSpec(), "frac_fam_c")
+    assert a.topology == b.topology
+    assert a.topology != c.topology
+    assert a.param_vector()[-1] == 2.0
+    assert b.param_vector()[-1] == 7.0
+    wl = spmm("frac_sig", 16, 16, 16, 0.5, 0.5)
+    m_a = JaxCostModel(GenomeSpec(wl, arch=a), a)
+    m_b = JaxCostModel(GenomeSpec(wl, arch=b), b)
+    assert m_a.signature == m_b.signature
+    assert m_a._fn is m_b._fn
+    assert m_a.signature != JaxCostModel(GenomeSpec(wl, arch=c), c).signature
 
 
 def test_default_noc_is_bitwise_neutral():
@@ -219,11 +280,12 @@ def test_sparsemap_finds_valid_designs_on_noc_word_archs():
         assert rep.edp == pytest.approx(res.best_edp, rel=1e-3)
 
 
-def test_five_registered_topologies_are_distinct():
+def test_registered_topologies_are_distinct():
     fps = {a.topology.fingerprint
            for a in (ARCH_SPARSEMAP, MAPLE_EDGE, CLUSTER_CLOUD,
-                     SYSTOLIC_MESH, QUANT_EDGE)}
-    assert len(fps) == 5
+                     SYSTOLIC_MESH, QUANT_EDGE, EYERISS_LIKE,
+                     SIGMA_LIKE, DSTC_LIKE)}
+    assert len(fps) == 8
 
 
 # ------------------------------------------- capacity-aware fallback
@@ -294,8 +356,9 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
 
 def test_nondefault_arch_cost_reports_match_goldens():
     """CostReport energy_breakdown / occupancy_bytes / cycles for
-    maple_edge and cluster_cloud, pinned as float hex on deterministic
-    designs (engineer default, the manual sparse strategy, gate-both)."""
+    maple_edge, cluster_cloud and the zoo entries, pinned as float hex
+    on deterministic designs (engineer default, the manual sparse
+    strategy, gate-both)."""
     from repro.core.workload import spconv
     gold = json.load(open(GOLDEN))
     wls = {
@@ -304,7 +367,8 @@ def test_nondefault_arch_cost_reports_match_goldens():
         "conv": spconv("conv", 64, 32, 32, 256, 1, 1, 0.45, 0.252),
     }
     seen = 0
-    for arch in (MAPLE_EDGE, CLUSTER_CLOUD):
+    for arch in (MAPLE_EDGE, CLUSTER_CLOUD, EYERISS_LIKE, SIGMA_LIKE,
+                 DSTC_LIKE):
         for wname, wl in wls.items():
             spec = GenomeSpec(wl, arch=arch)
             g0 = np.zeros(spec.length, dtype=np.int64)
@@ -332,4 +396,4 @@ def test_nondefault_arch_cost_reports_match_goldens():
                     assert rep.energy_pj.hex() == exp["energy_pj"]
                     assert rep.edp.hex() == exp["edp"]
                 seen += 1
-    assert seen == len(gold) == 18
+    assert seen == len(gold) == 45

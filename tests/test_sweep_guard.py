@@ -33,7 +33,7 @@ def test_pad_watermark_history_recorded_per_topology():
     # earlier decay (2 quiet rounds), ratio tightened to the observed
     # post-spike plateau (256/2048)
     assert ms.stats["pad_policies"][fp] == \
-        {"decay_rounds": 2, "decay_ratio": 0.125}
+        {"decay_rounds": 2, "decay_ratio": 0.125, "source": "measured"}
     wms = ms.stats["pad_watermarks"]
     assert len(wms) == 1
     (key, hist), = wms.items()
@@ -48,7 +48,7 @@ def test_pad_policy_override_and_registry():
     ms = _fleet(pad_policies={fp: aggressive})
     res_o = ms.run()
     assert ms.stats["pad_policies"][fp] == \
-        {"decay_rounds": 1, "decay_ratio": 1.0}
+        {"decay_rounds": 1, "decay_ratio": 1.0, "source": "default"}
     (_, hist_o), = ms.stats["pad_watermarks"].items()
     ms_d = _fleet()
     res_d = ms_d.run()
@@ -170,6 +170,25 @@ def test_stale_policy_warning_fires_on_mismatched_trajectory():
     # re-growing trajectory matches the conservative registered policy
     rec["archs"][0]["pad_watermarks"]["d3_p16_feedf00d"] = \
         [2048, 256, 2048, 256, 2048]
+    assert stale_policy_warnings(rec) == []
+
+
+def test_stale_policy_warning_promotes_seed_policies():
+    """A policy still carrying source="seed" after a run that measured
+    the topology's real trajectory asks for promotion to the baseline
+    watermark table — even when decay_rounds already agrees."""
+    rec = dict(archs=[dict(
+        arch="sigma_like",
+        pad_watermarks={"d3_p16_8b2430a8": [2048, 2048, 256, 256]},
+        pad_policies={"8b2430a8": {"decay_rounds": 2,
+                                   "decay_ratio": 0.125,
+                                   "source": "seed"}})])
+    warns = stale_policy_warnings(rec)
+    assert len(warns) == 1
+    assert "seed pad policy" in warns[0]
+    assert "_SEED_PAD_WATERMARKS" in warns[0]
+    # once promoted (source measured), the same record is quiet
+    rec["archs"][0]["pad_policies"]["8b2430a8"]["source"] = "measured"
     assert stale_policy_warnings(rec) == []
 
 

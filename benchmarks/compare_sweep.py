@@ -7,12 +7,16 @@ moves the counts) — the CI perf-regression gate.
         --baseline benchmarks/BENCH_sweep.baseline.json \
         --current BENCH_sweep.new.json
 
-Hard failures (exit 1): a per-arch XLA compile-count increase or a
-dispatches-per-round increase, compared arch-by-arch over the archs
-present in BOTH files (a newly added arch has no baseline and is
-reported, not failed).  Timing is warn-only — CI machines are too noisy
-to gate on seconds.  When the two runs used different budgets the counts
-are not comparable either, so everything downgrades to warnings.
+Hard failures (exit 1): a per-arch XLA compile-count increase, a
+dispatches-per-round increase, a host-syncs-per-round increase, or a
+compile-ahead-miss increase (the AOT predictor losing coverage of a
+round-1 signature), compared arch-by-arch over the archs present in
+BOTH files (a newly added arch has no baseline and is reported, not
+failed).  Timing — seconds, seconds_per_round, host_blocked_s, and the
+pipelined-vs-unpipelined host_blocked_s comparison — is warn-only: CI
+machines are too noisy to gate on wall-clock.  When the two runs used
+different budgets the counts are not comparable either, so everything
+downgrades to warnings.
 """
 from __future__ import annotations
 
@@ -25,15 +29,18 @@ from typing import Dict, List, Tuple
 TIME_WARN_RATIO = 1.5
 
 
-def _derive_decay_rounds(trajectory) -> int:
+def _derive_decay_rounds(trajectory):
     """Stdlib mirror of ``repro.core.search.derive_pad_policy`` (this
     gate must not import the package): one-off spike trajectories (step
     down from the peak, never re-grow) suggest ``decay_rounds=2``,
-    anything else the conservative default 3."""
+    re-growing ones the conservative default 3, and a trajectory that
+    never decayed at all (e.g. a short device-resident fleet that holds
+    one mega-batch size throughout) carries no evidence either way —
+    ``None``, never warned against the registered policy."""
     traj = list(trajectory)
     peak = max(traj, default=0)
     if peak <= 0 or traj[-1] >= peak:
-        return 3
+        return None
     first_down = next(i for i, v in enumerate(traj) if v < peak
                       and max(traj[:i], default=0) == peak)
     regrew = any(b > a for a, b in zip(traj[first_down:],
@@ -64,7 +71,7 @@ def stale_policy_warnings(current: dict) -> List[str]:
                     f"repro.configs.archs._SEED_PAD_WATERMARKS to "
                     f"_BASELINE_PAD_WATERMARKS")
             want = _derive_decay_rounds(traj)
-            if want != pol.get("decay_rounds"):
+            if want is not None and want != pol.get("decay_rounds"):
                 out.append(
                     f"{arec['arch']}: watermark trajectory {traj} for "
                     f"topology {fp} suggests decay_rounds={want} but the "
@@ -116,12 +123,41 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
             sink.append(
                 f"{name}: host syncs/round regressed "
                 f"{base_hspr} -> {cur_hspr}")
+        # compile-ahead coverage: the predictor failing to claim a
+        # round-1 signature it used to cover is a hard regression (a
+        # miss means a fresh jit trace landed on the fleet's critical
+        # path); hit-count drift and all timing fields stay warn-only
+        base_ca = base.get("compile_ahead_misses")
+        cur_ca = cur.get("compile_ahead_misses")
+        if base_ca is not None and cur_ca is not None and \
+                cur_ca > base_ca:
+            sink.append(
+                f"{name}: compile-ahead misses regressed "
+                f"{base_ca} -> {cur_ca}")
         if base.get("seconds") and cur.get("seconds", 0.0) > \
                 TIME_WARN_RATIO * base["seconds"]:
             warnings.append(
                 f"{name}: {cur['seconds']:.2f}s vs baseline "
                 f"{base['seconds']:.2f}s (> {TIME_WARN_RATIO}x, "
                 f"warn-only)")
+        base_hb = base.get("host_blocked_s")
+        cur_hb = cur.get("host_blocked_s", 0.0)
+        if base_hb and cur_hb > TIME_WARN_RATIO * base_hb:
+            warnings.append(
+                f"{name}: host_blocked_s {cur_hb:.4f} vs baseline "
+                f"{base_hb:.4f} (> {TIME_WARN_RATIO}x, warn-only)")
+    # pipelining acceptance (warn-only, it is a timing measure): the
+    # pipelined device fleet should spend strictly less host-blocked
+    # wall-clock than its unpipelined twin in the SAME run
+    pipe = cur_archs.get("cloud_device_k4")
+    nopipe = cur_archs.get("cloud_device_k4_unpipelined")
+    if pipe is not None and nopipe is not None and \
+            pipe.get("host_blocked_s") is not None and \
+            pipe["host_blocked_s"] >= nopipe.get("host_blocked_s", 0.0):
+        warnings.append(
+            f"cloud_device_k4: pipelined host_blocked_s "
+            f"{pipe['host_blocked_s']} not below unpipelined "
+            f"{nopipe.get('host_blocked_s')} (warn-only)")
     return failures, warnings
 
 

@@ -52,18 +52,30 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
                                        budget=fleet_budget or budget,
                                        seed=0, stack_batches=True,
                                        stats_out=stats, **fleet_kw)
+        seconds = round(time.time() - t0, 2)
         arec = dict(
-            arch=entry_name, seconds=round(time.time() - t0, 2),
+            arch=entry_name, seconds=seconds,
             budget=fleet_budget or budget,
             compiles=jax_cost.compilation_count(),
             rounds=stats["rounds"], dispatches=stats["dispatches"],
             dispatches_per_round=round(
                 stats["dispatches"] / max(stats["rounds"], 1), 3),
+            seconds_per_round=round(
+                seconds / max(stats["rounds"], 1), 4),
             # host round-trips per search generation: 1.0 for per-round
             # fleets, ~1/k in the segment phase of device_rounds=k fleets
             host_syncs=stats["host_syncs"],
             host_syncs_per_round=round(stats["host_syncs_per_round"], 3),
             device_rounds=stats["device_rounds"],
+            device_rounds_source=stats["device_rounds_source"],
+            # pipelining record: wall-clock the host spent blocked in
+            # device->numpy conversions, and the AOT compile-ahead
+            # coverage of the fleet's round-1 dispatch signatures
+            # (misses are gated by compare_sweep; timing is warn-only)
+            host_blocked_s=round(stats["host_blocked_s"], 4),
+            compile_ahead_hits=stats["compile_ahead_hits"],
+            compile_ahead_misses=stats["compile_ahead_misses"],
+            pipeline=stats["pipeline"],
             n_devices=stats["devices"],
             signatures=[list(s) for s in stats["signatures"]],
             # per-topology mega-batch watermark trajectory + the
@@ -104,8 +116,18 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
     # calibration/HSHI prologue and into the segment phase (where
     # host_syncs_per_round is measured) even under --quick
     run_fleet("cloud_device_k4", ["sparsemap"], wls, "cloud",
-              fleet_budget=max(budget, 1200),
+              fleet_budget=max(budget, 2000),
               device_rounds=4, mesh=make_search_mesh())
+
+    # the same fleet with the pipelined driver and compile-ahead both
+    # disabled: the acceptance comparison for the pipelining PR —
+    # cloud_device_k4's host_blocked_s must stay strictly below this
+    # entry's, and its compile_ahead_misses must stay at the committed
+    # baseline (0 = every round-1 signature predicted)
+    run_fleet("cloud_device_k4_unpipelined", ["sparsemap"], wls, "cloud",
+              fleet_budget=max(budget, 2000),
+              device_rounds=4, mesh=make_search_mesh(),
+              pipeline=False, compile_ahead=False)
 
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)

@@ -11,6 +11,12 @@ published-accelerator zoo from ``repro.configs.archs``); ``--platforms``
 takes a comma-separated mix, e.g. ``--platforms cloud,eyeriss_like`` —
 the whole stack is ArchSpec-driven, so non-default memory hierarchies
 search end-to-end.
+
+``--profile DIR`` wraps the whole sweep in ``jax.profiler`` and dumps a
+TensorBoard-loadable trace directory — the tool for eyeballing the
+pipelined round loop (device kernels should tile the timeline with the
+host planning in the gaps; big host-blocked stalls mean a compile-ahead
+miss or a lost overlap).
 """
 import argparse
 import time
@@ -40,6 +46,9 @@ def main(argv=None):
                     help="comma-separated platform/arch names")
     ap.add_argument("--list-archs", action="store_true",
                     help="print every resolvable platform/arch and exit")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="dump a jax.profiler trace of the sweep to DIR "
+                         "(view with TensorBoard)")
     args = ap.parse_args(argv)
 
     if args.list_archs:
@@ -58,6 +67,10 @@ def main(argv=None):
                            act_density=0.6)
     print(f"extracted {len(workloads)} GEMMs from {args.model} "
           f"(50% pruned weights, 60% dense activations)\n")
+
+    if args.profile:
+        import jax
+        jax.profiler.start_trace(args.profile)
 
     methods = ("sparsemap", "sage_like", "random_mapper")
     for plat in targets:
@@ -78,8 +91,17 @@ def main(argv=None):
                   f"Sparseloop-like {row['random_mapper'] / ours:6.1f}x")
         print(f"  [{len(workloads) * len(methods)} searches, "
               f"{stats['rounds']} rounds, {stats['dispatches']} device "
-              f"dispatches, {time.time() - t0:.1f}s]")
+              f"dispatches, compile-ahead "
+              f"{stats['compile_ahead_hits']}h/"
+              f"{stats['compile_ahead_misses']}m, "
+              f"host-blocked {stats['host_blocked_s']:.3f}s, "
+              f"{time.time() - t0:.1f}s]")
     print("\n(EDP = cycles x pJ; larger ratio = larger our advantage)")
+
+    if args.profile:
+        jax.profiler.stop_trace()
+        print(f"\nprofiler trace written to {args.profile}/ "
+              f"(tensorboard --logdir {args.profile})")
 
 
 if __name__ == "__main__":

@@ -299,6 +299,25 @@ _SEED_PAD_WATERMARKS: Dict[str, tuple] = {
 }
 
 
+def measured_watermark_values(topology_fingerprint: str) -> list:
+    """The DISTINCT pad-watermark values a topology's committed baseline
+    trajectory visited (measured entry, else the author-declared seed),
+    sorted descending — the steady-state mega-batch shapes
+    ``search.MultiSearch`` AOT-compiles ahead of round 1.  Unknown
+    topologies return ``[]`` (no shapes claimed, so their dispatches
+    never count as compile-ahead misses)."""
+    from repro.core.arch import as_arch
+    for table in (_BASELINE_PAD_WATERMARKS, _SEED_PAD_WATERMARKS):
+        for name, traj in table.items():
+            try:
+                fp = as_arch(name).topology.fingerprint
+            except KeyError:        # pragma: no cover - stale entry
+                continue
+            if fp == topology_fingerprint:
+                return sorted({int(v) for v in traj}, reverse=True)
+    return []
+
+
 def register_measured_pad_policies() -> None:
     """Derive and register a tuned :class:`~repro.core.search.PadPolicy`
     per known topology (idempotent; runs at import).  Seeds register

@@ -569,12 +569,99 @@ def _factory_standard_es(spec: GenomeSpec, platform, budget: int,
 #: methods whose request generators can fold generations into
 #: device-resident segments (COMPAT.md "Device-resident round protocol"):
 #: the ``evolve_requests`` family accepts ``device_rounds``/``rng_backend``
-#: through its ESConfig.  ``standard_es`` is NOT foldable — the direct
-#: encoding needs a per-row host-side translation every generation — and
-#: the non-ES baselines (PSO/MCTS/TBPSA/PPO/DQN, random_mapper) keep
-#: their per-round host paths; in a ``device_rounds=k`` fleet they run
-#: unchanged alongside segmented ES tasks.
-SEGMENT_METHODS = frozenset({"sparsemap", "pfce_es", "sage_like"})
+#: through its ESConfig, and ``standard_es`` accepts ``device_rounds``
+#: directly — its direct-to-canonical translation now runs in-scan
+#: (``kind="direct"`` segments; COMPAT.md "standard_es segment protocol
+#: addendum").  The non-ES baselines (PSO/MCTS/TBPSA/PPO/DQN,
+#: random_mapper) keep their per-round host paths; in a
+#: ``device_rounds=k`` fleet they run unchanged alongside segmented ES
+#: tasks.
+SEGMENT_METHODS = frozenset({"sparsemap", "pfce_es", "sage_like",
+                             "standard_es"})
+
+
+# ------------------- compile-ahead shape predictors (search.MultiSearch)
+
+
+def _es_cfg_for(method: str, budget: int, seed: int, kw: Dict) -> ESConfig:
+    """The ESConfig the method's factory would build — the factories'
+    default arithmetic, re-expressed for shape prediction."""
+    params = dict(kw)
+    if method == "sparsemap":
+        params.setdefault("pop_size", int(min(100, max(24, budget // 20))))
+    elif method == "sage_like":
+        base = dict(use_hshi=False, use_custom_ops=False, pop_size=64)
+        base.update(params)
+        params = base
+    elif method == "pfce_es":
+        base = dict(use_hshi=False, use_custom_ops=False)
+        base.update(params)
+        params = base
+    return ESConfig(budget=budget, seed=seed, **params)
+
+
+def round1_rows(method: str, spec: GenomeSpec, budget: int, seed: int,
+                **kw) -> Optional[int]:
+    """Row count of the FIRST batch ``method``'s request generator will
+    yield — the signature ``MultiSearch`` AOT-compiles ahead of round 1
+    while the host runs the prologue.  ``None`` means the first round is
+    not predictable (no job is scheduled; the dispatch falls back to
+    ordinary jit and does NOT count as a compile-ahead miss unless the
+    method's family was claimed)."""
+    from .evolution import calib_plan
+    if method in ("sparsemap", "pfce_es", "sage_like"):
+        cfg = _es_cfg_for(method, budget, seed, kw)
+        if cfg.use_hshi or cfg.use_custom_ops:
+            n_ctx, n_smp = calib_plan(spec.length, cfg)
+            return n_ctx * n_smp * spec.length
+        return cfg.pop_size
+    if method == "standard_es":
+        # the first yield is the TRANSLATABLE subset of the seeded random
+        # population — data-dependent, so simulate it exactly (cheap
+        # numpy work on <= pop_size rows, same seed => same subset)
+        from .direct_encoding import DirectValueSpec
+        dspec = DirectValueSpec(spec)
+        rng = np.random.default_rng(seed)
+        pop = dspec.random_genomes(rng, int(kw.get("pop_size", 100)))
+        _, index = dspec.translate_batch(pop)
+        return len(index) or None
+    if method == "random_mapper":
+        return min(512, budget)
+    if method == "pso":
+        return int(kw.get("n_particles", 50))
+    if method == "mcts":
+        return min(int(kw.get("rollout_batch", 16)), budget)
+    if method == "tbpsa":
+        return min(int(kw.get("llambda", 48)), budget)
+    if method == "ppo":
+        return min(int(kw.get("batch", 64)), budget)
+    if method == "dqn":
+        return min(int(kw.get("batch", 32)), budget)
+    return None
+
+
+def segment_plan(method: str, spec: GenomeSpec, budget: int, seed: int,
+                 **kw) -> Optional[Dict]:
+    """Predicted :func:`es_ops.segment_shape_key` fields for a segmented
+    task (``device_rounds > 1``), or ``None`` when the method will not
+    yield DeviceSegments.  Feeds ``jax_cost.scan_compile_job`` /
+    ``direct_scan_compile_job``."""
+    rounds = int(kw.get("device_rounds", 1) or 1)
+    if rounds <= 1 or method not in SEGMENT_METHODS:
+        return None
+    if method == "standard_es":
+        B = int(kw.get("pop_size", 100))
+        return dict(B=B, rounds=rounds,
+                    n_parents=max(2, int(B * kw.get("parent_frac", 0.4))),
+                    n_elite=max(1, int(B * kw.get("elite_frac", 0.1))),
+                    genes_per=2, kind="direct", restart=0)
+    cfg = _es_cfg_for(method, budget, seed, kw)
+    B = cfg.pop_size
+    return dict(B=B, rounds=rounds,
+                n_parents=max(2, int(B * cfg.parent_frac)),
+                n_elite=max(1, int(B * cfg.elite_frac)),
+                genes_per=cfg.genes_per_mutation, kind="es",
+                restart=int(cfg.stagnation_restart or 0))
 
 #: method name -> (spec, platform, budget, seed, **kw) -> (Requests, _Budget)
 REQUEST_METHODS: Dict[str, Callable] = {

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import es_ops
 from .encoding import GenomeSpec, all_permutations
 
 
@@ -166,10 +167,55 @@ class DirectValueSpec:
         return _eval
 
 
+def _direct_value_draw(dspec: DirectValueSpec, j: int,
+                       rng: np.random.Generator) -> int:
+    """The replacement value :meth:`DirectValueSpec.mutate_gene` would
+    write at gene ``j`` — same rng consumption (one ``integers`` draw),
+    value independent of the genome, so a plan can pre-draw it."""
+    if j < dspec.perm_sl.stop:
+        return int(rng.integers(0, dspec.n_perm_codes))
+    if j < dspec.fact_sl.stop:
+        rel = j - dspec.fact_sl.start
+        dim = dspec.workload.dim_order[rel // dspec.n_levels]
+        dv = dspec.div[dim]
+        return int(dv[rng.integers(0, len(dv))])
+    rel = j - dspec.tail_sl.start
+    ub = dspec.canonical.gene_ub[
+        dspec.canonical.segments["fmt_P"].start + rel]
+    return int(rng.integers(0, ub))
+
+
+def _direct_plan(dspec: DirectValueSpec, rng: np.random.Generator,
+                 n_children: int, n_parents: int,
+                 p_mut: float) -> es_ops.GenDraws:
+    """One generation's randomness for the direct-encoding ES, drawn in
+    EXACTLY the legacy per-child order (parent pair, cut, mutation coin,
+    then per-mutated-gene index+value) so the plan is a pure
+    re-expression of the sequential loop's stream."""
+    L = dspec.length
+    ab = np.empty((n_children, 2), dtype=np.int64)
+    cuts = np.empty(n_children, dtype=np.int64)
+    active = np.empty(n_children, dtype=bool)
+    gene = np.zeros((n_children, 2), dtype=np.int64)
+    vals = np.zeros((n_children, 2), dtype=np.int64)
+    for i in range(n_children):
+        ab[i] = rng.integers(0, n_parents, 2)
+        cuts[i] = rng.integers(1, L)
+        active[i] = rng.random() < p_mut
+        if active[i]:
+            for j in range(2):
+                gi = int(rng.integers(0, L))
+                gene[i, j] = gi
+                vals[i, j] = _direct_value_draw(dspec, gi, rng)
+    return es_ops.GenDraws(ab=ab, cuts=cuts, active=active,
+                           gene=gene, vals=vals)
+
+
 def direct_requests(spec: GenomeSpec, tracker: "_Budget", seed: int,
                     platform=None, pop_size: int = 100,
                     parent_frac: float = 0.4, elite_frac: float = 0.1,
-                    p_mut: float = 0.9) -> "Requests":
+                    p_mut: float = 0.9, device_rounds: int = 1,
+                    rng_backend: str = "numpy") -> "Requests":
     """Standard ES on the direct encoding (Fig. 18 curve 'ES') as a
     request generator over CANONICAL genome rows: each round the direct
     population is translated, the translatable subset is yielded for
@@ -177,7 +223,22 @@ def direct_requests(spec: GenomeSpec, tracker: "_Budget", seed: int,
     (translatable or not) is charged to the budget.  Canonical rows are
     registered with the tracker, so ``best_genome`` decodes with the
     ordinary :class:`GenomeSpec` like every other method's result.
+
+    ``device_rounds=k>1`` switches to the segment protocol: the loop
+    yields ``kind="direct"`` :class:`~.es_ops.DeviceSegment` requests
+    whose pre-drawn plans cover k generations; ``jax_cost`` runs the
+    whole fold — including the direct-to-canonical translation — as one
+    scanned dispatch, pipelined one round late exactly like the main
+    ES's ``_segment_requests`` (COMPAT.md "standard_es segment
+    protocol").  Selection then uses the stable f32 fitness order shared
+    with the device kernel (the legacy per-round loop keeps its unstable
+    f64 ``np.argsort``, same seam as the canonical ES).
     """
+    if rng_backend != "numpy":
+        raise ValueError(
+            "standard_es segments support only rng_backend='numpy' "
+            f"(got {rng_backend!r}); the direct value draws are tied to "
+            "the legacy Generator stream")
     rng = np.random.default_rng(seed)
     dspec = DirectValueSpec(spec)
 
@@ -200,6 +261,11 @@ def direct_requests(spec: GenomeSpec, tracker: "_Budget", seed: int,
     edp = yield from charge(pop)
     n_parents = max(2, int(pop_size * parent_frac))
     n_elite = max(1, int(pop_size * elite_frac))
+    if device_rounds > 1:
+        extras = yield from _direct_segment_requests(
+            spec, dspec, tracker, rng, pop, edp, pop_size,
+            n_parents, n_elite, p_mut, device_rounds)
+        return extras
     while not tracker.exhausted:
         order = np.argsort(edp)
         parents = pop[order[:n_parents]]
@@ -219,6 +285,97 @@ def direct_requests(spec: GenomeSpec, tracker: "_Budget", seed: int,
         pop = np.concatenate([elites, kids])
         edp = np.concatenate([elite_edp, kedp])
     return dict(method="standard_es", encoding="direct")
+
+
+def _direct_segment_requests(spec: GenomeSpec, dspec: DirectValueSpec,
+                             tracker: "_Budget", rng: np.random.Generator,
+                             pop: np.ndarray, edp: np.ndarray,
+                             pop_size: int, n_parents: int, n_elite: int,
+                             p_mut: float, k: int) -> "Requests":
+    """Device-resident rounds for the direct encoding: yields
+    ``kind="direct"`` :class:`~.es_ops.DeviceSegment` requests whose
+    ``aux`` carries the translation tables (permutation scramble and
+    dimension sizes) so ``jax_cost`` can run crossover, mutation,
+    direct-to-canonical translation AND evaluation as one scanned
+    dispatch.  Pipelined one round late exactly like
+    ``evolution._segment_requests`` (COMPAT.md "Pipelined dispatch
+    contract"): the response for segment N is stashed unresolved, segment
+    N+1 is planned from the ``planned`` counter and yielded carrying the
+    device-resident ``resp.carry``, then N is resolved and registered.
+    Drivers that answer ``None`` get a host replay of the identical plan
+    (translate + canonical-subset yield per generation, same
+    registration rows as the device harvest)."""
+    n_children = pop_size - n_elite
+    edp_sel = np.where(np.isfinite(edp), edp, np.inf).astype(np.float32)
+    aux = dict(
+        scramble=np.asarray(dspec.scramble, dtype=np.int32),
+        dim_sizes=np.asarray(
+            [dspec.workload.dim_sizes[d] for d in dspec.workload.dim_order],
+            dtype=np.float32))
+    gen = 0
+
+    def absorb(resp):
+        nonlocal pop, edp_sel, gen
+        resp.resolve()
+        for kids, kout in resp.gens:
+            tracker.register(kids, kout)
+            gen += 1
+        pop = resp.final_pop
+        edp_sel = np.asarray(resp.final_edp, dtype=np.float32)
+
+    planned = tracker.evals
+    pending = None
+    carry = None
+    while planned < tracker.budget:
+        plans = [_direct_plan(dspec, rng, n_children, n_parents, p_mut)
+                 for _ in range(k)]
+        for _ in range(k):
+            planned += min(n_children, tracker.budget - planned)
+        resp = yield es_ops.DeviceSegment(
+            spec=spec, pop=pop, edp=edp_sel, rounds=k, gen0=gen,
+            n_parents=n_parents, n_elite=n_elite, genes_per=2,
+            draws=es_ops.stack_draws(plans), fixed_genes=None,
+            rng_backend="numpy", carry=carry, kind="direct", aux=aux)
+        if resp is None:
+            # host replay of the identical plan, one generation per yield:
+            # the registered rows (canonical where translatable, zeros
+            # otherwise) match the device harvest's ``canon`` output
+            for d in plans:
+                parents, elites, elite_edp = es_ops.select(
+                    pop, edp_sel, n_parents, n_elite)
+                kids = np.ascontiguousarray(
+                    es_ops.apply_crossover(parents, d.ab, d.cuts),
+                    dtype=pop.dtype)
+                kids = es_ops.apply_mutation(kids, d.active, d.gene,
+                                             d.vals)
+                canon, index = dspec.translate_batch(kids)
+                out = None
+                if canon is not None:
+                    out = yield canon
+                full = dspec.expand_out(len(kids), index, out)
+                reg_rows = np.zeros((len(kids), spec.length),
+                                    dtype=np.int64)
+                if canon is not None:
+                    reg_rows[index] = canon
+                tracker.register(reg_rows, full)
+                kedp = np.where(
+                    np.asarray(full["valid"]),
+                    np.asarray(full["edp"], dtype=np.float32),
+                    np.float32(np.inf)).astype(np.float32)
+                pop = np.concatenate([elites, kids], axis=0)
+                edp_sel = np.concatenate(
+                    [np.asarray(elite_edp, np.float32), kedp])
+                gen += 1
+                if tracker.exhausted:
+                    break
+            continue
+        if pending is not None:
+            absorb(pending)
+        pending = resp
+        carry = resp.carry
+    if pending is not None:
+        absorb(pending)
+    return dict(method="standard_es", encoding="direct", generations=gen)
 
 
 def direct_standard_es(canonical_spec: GenomeSpec, canonical_eval,

@@ -31,7 +31,7 @@ numerically inert: value 0, upper bound 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -310,21 +310,58 @@ class DeviceSegment:
     draws: Dict[str, np.ndarray]    # stacked (k, ...) plan arrays
     fixed_genes: Optional[Dict[int, int]] = None
     rng_backend: str = "numpy"
+    # pipelined dispatch (COMPAT.md "Pipelined dispatch contract"):
+    # ``carry`` holds the previous segment's device-resident PADDED
+    # (pop, edp) pair — when set, drivers feed the scan from it directly
+    # and ``pop``/``edp`` are only the host-side fallback of record.
+    carry: Optional[Tuple] = None
+    # segment flavor: "es" runs in canonical genome coordinates;
+    # "direct" carries direct-value genomes plus the translation tables
+    # in ``aux`` (scramble, dim_sizes) and translates rows in-scan.
+    kind: str = "es"
+    aux: Optional[Dict[str, np.ndarray]] = None
+    # stagnation restart folded into the scan: re-init the non-elite
+    # population after ``restart`` generations without improvement of the
+    # carried float32 best (0 = off).  ``state`` is the (best, since)
+    # carry across segments; ``draws["fresh"]`` holds the pre-drawn
+    # replacement populations.
+    restart: int = 0
+    state: Optional[Tuple[float, int]] = None
 
 
 @dataclasses.dataclass
 class SegmentResult:
     """What a driver sends back for a :class:`DeviceSegment`: the per-
     generation (kids, canonical output dict) pairs for `_Budget`
-    accounting, plus the device's final carry state."""
+    accounting, plus the device's final carry state.
+
+    With deferred harvesting (``jax_cost.run_segments(..., defer=True)``)
+    ``gens``/``final_pop``/``final_edp`` start empty and ``harvest`` is a
+    thunk that converts the device outputs to numpy on first call —
+    request generators call :meth:`resolve` one round late, so the
+    blocking conversion overlaps the next segment's device execution.
+    ``carry`` always holds the device-resident PADDED (pop, edp) pair for
+    the follow-up segment, and ``state`` the device (best, since) restart
+    carry when the segment folded stagnation restarts."""
 
     gens: List[Tuple[np.ndarray, Dict[str, np.ndarray]]]
-    final_pop: np.ndarray           # (B, L) int64, unpadded
-    final_edp: np.ndarray           # (B,) float32
+    final_pop: Optional[np.ndarray]  # (B, L) int64, unpadded
+    final_edp: Optional[np.ndarray]  # (B,) float32
+    carry: Optional[Tuple] = None    # device-resident padded (pop, edp)
+    state: Optional[Tuple] = None    # device (best, since) restart carry
+    harvest: Optional[Callable] = None
+
+    def resolve(self) -> "SegmentResult":
+        """Run the deferred numpy conversion (idempotent)."""
+        if self.harvest is not None:
+            self.gens, self.final_pop, self.final_edp = self.harvest()
+            self.harvest = None
+        return self
 
 
 def segment_shape_key(seg: DeviceSegment) -> Tuple:
     """Tasks whose segments share this key (plus the evaluator
     compilation signature) can stack into one scan dispatch."""
     return (len(seg.pop), seg.rounds, seg.n_parents, seg.n_elite,
-            seg.genes_per)
+            seg.genes_per, getattr(seg, "kind", "es"),
+            getattr(seg, "restart", 0))

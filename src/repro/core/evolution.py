@@ -69,8 +69,14 @@ class ESConfig:
     # the per-generation randomness comes from: "numpy" (the legacy
     # Generator stream, so k>1 makes the same operator choices as k=1)
     # or "threefry" (jax.random keyed by (seed, generation) — a
-    # different, device-native stream).  Segments require
-    # stagnation_restart == 0 (the restart path is host-adaptive).
+    # different, device-native stream).  stagnation_restart > 0 no
+    # longer forces the per-round path: restart segments pre-draw one
+    # fresh LHS block per generation and the scan adopts it via a
+    # re-init branch on the carried (best-so-far, stagnant-gens) state
+    # — a different rng consumption order than the host-adaptive
+    # device_rounds=1 restart, by design (fixed shapes need the draws
+    # up front), but identical between the device segment and its host
+    # replay (test-pinned).
     device_rounds: int = 1
     rng_backend: str = "numpy"
 
@@ -307,6 +313,22 @@ def crossover(parents: np.ndarray, n_children: int, spec: GenomeSpec,
 # ---------------------------------------------------------------- main loop
 
 
+def calib_plan(length: int, cfg: ESConfig) -> tuple:
+    """The (n_contexts, n_samples) the sensitivity calibration actually
+    uses after shrinking to keep init+calibration under ~10% of the
+    budget.  Shared with the compile-ahead shape predictors: the probe
+    batch the generator's FIRST yield carries has exactly
+    ``n_ctx * n_smp * length`` rows."""
+    calib_target = max(int(0.10 * cfg.budget), 2 * length)
+    n_ctx = cfg.calib_contexts
+    n_smp = cfg.calib_samples
+    while n_ctx * n_smp * length > calib_target and n_ctx > 2:
+        n_ctx -= 1
+    while n_ctx * n_smp * length > calib_target and n_smp > 4:
+        n_smp -= 1
+    return n_ctx, n_smp
+
+
 def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
                     sens: Optional[SensitivityResult] = None,
                     fixed_genes: Optional[Dict[int, int]] = None,
@@ -331,13 +353,7 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
     # The paper keeps init+calibration under ~10% of total search time; we
     # shrink the per-gene sampling to respect that at small CI budgets.
     if (cfg.use_hshi or cfg.use_custom_ops) and sens is None:
-        calib_target = max(int(0.10 * cfg.budget), 2 * spec.length)
-        n_ctx = cfg.calib_contexts
-        n_smp = cfg.calib_samples
-        while n_ctx * n_smp * spec.length > calib_target and n_ctx > 2:
-            n_ctx -= 1
-        while n_ctx * n_smp * spec.length > calib_target and n_smp > 4:
-            n_smp -= 1
+        n_ctx, n_smp = calib_plan(spec.length, cfg)
         probes, gene_idx, sampled_vals = build_probes(
             spec, rng, n_contexts=n_ctx, n_samples=n_smp)
         out = yield probes
@@ -366,10 +382,15 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
     n_elite = max(1, int(cfg.pop_size * cfg.elite_frac))
     total_gens = max(1, (cfg.budget - tracker.evals) // cfg.pop_size)
 
-    if cfg.device_rounds > 1 and not cfg.stagnation_restart:
-        extras = yield from _segment_requests(
-            spec, cfg, tracker, rng, op_sens, fixed_genes, pop, edp,
-            n_parents, n_elite, total_gens)
+    if cfg.device_rounds > 1:
+        if cfg.stagnation_restart:
+            extras = yield from _restart_segment_requests(
+                spec, cfg, tracker, rng, op_sens, fixed_genes, pop, edp,
+                n_parents, n_elite, total_gens)
+        else:
+            extras = yield from _segment_requests(
+                spec, cfg, tracker, rng, op_sens, fixed_genes, pop, edp,
+                n_parents, n_elite, total_gens)
         extras["sensitivity"] = None if sens is None else sens.scores
         return extras
 
@@ -431,35 +452,68 @@ def _segment_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
     (``es_ops.stable_order``) in both paths; the legacy per-round loop's
     unstable ``np.argsort`` can differ on ties, which is one of the two
     test-pinned parity seams (the other: in-scan float32 EDP vs the
-    host-recomputed canonical EDP)."""
+    host-recomputed canonical EDP).
+
+    PIPELINED DISPATCH (COMPAT.md "Pipelined dispatch contract"): this
+    generator never blocks on the segment it just received.  The
+    response for segment N is stashed unresolved; segment N+1 is planned
+    from the ``planned`` evaluation counter (which replicates
+    ``_Budget.register``'s value-independent truncation arithmetic, so
+    budget exhaustion is known without harvesting) and yielded carrying
+    ``resp.carry`` — the device-resident padded (pop, edp) — and only
+    THEN is segment N resolved and registered.  With an async driver
+    (``run_segments(..., defer=True)``) the host's blocking conversion
+    of round N overlaps the device executing round N+1; with a
+    synchronous driver the very same code runs, merely blocking earlier
+    — registration order and values are identical by construction, which
+    is the ``pipeline=False`` escape hatch's bit-identity guarantee."""
     cut_arr = es_ops.crossover_cut_points(spec.length, op_sens)
     hi, lo = es_ops.mutation_index_tables(spec.length, op_sens)
     k = cfg.device_rounds
     n_children = cfg.pop_size - n_elite
     edp_sel = np.asarray(edp, dtype=np.float32)
     gen = 0
-    while not tracker.exhausted:
+
+    def make_plans(g0):
         if cfg.rng_backend == "threefry":
-            plans = [es_ops.threefry_plan_generation(
-                cfg.seed, gen + i, n_children=n_children,
+            return [es_ops.threefry_plan_generation(
+                cfg.seed, g0 + i, n_children=n_children,
                 n_parents=n_parents, cut_arr=cut_arr,
                 gene_ub=spec.gene_ub, genes_per=cfg.genes_per_mutation,
                 p_mut=cfg.p_mutation,
-                p_high=annealing_p_high(gen + i, total_gens),
+                p_high=annealing_p_high(g0 + i, total_gens),
                 hi=hi, lo=lo) for i in range(k)]
-        else:
-            plans = [es_ops.plan_generation(
-                rng, n_children=n_children, n_parents=n_parents,
-                cut_arr=cut_arr, gene_ub=spec.gene_ub,
-                genes_per=cfg.genes_per_mutation, p_mut=cfg.p_mutation,
-                p_high=annealing_p_high(gen + i, total_gens),
-                hi=hi, lo=lo) for i in range(k)]
+        return [es_ops.plan_generation(
+            rng, n_children=n_children, n_parents=n_parents,
+            cut_arr=cut_arr, gene_ub=spec.gene_ub,
+            genes_per=cfg.genes_per_mutation, p_mut=cfg.p_mutation,
+            p_high=annealing_p_high(g0 + i, total_gens),
+            hi=hi, lo=lo) for i in range(k)]
+
+    def absorb(resp):
+        nonlocal pop, edp_sel, gen
+        resp.resolve()
+        for kids, kout in resp.gens:
+            tracker.register(kids, kout)
+            gen += 1
+        pop = resp.final_pop
+        edp_sel = np.asarray(resp.final_edp, dtype=np.float32)
+
+    planned = tracker.evals
+    gen_planned = 0
+    pending = None
+    carry = None
+    while planned < cfg.budget:
+        plans = make_plans(gen_planned)
+        for _ in range(k):
+            planned += min(n_children, cfg.budget - planned)
+        gen_planned += k
         resp = yield DeviceSegment(
-            spec=spec, pop=pop, edp=edp_sel, rounds=k, gen0=gen,
-            n_parents=n_parents, n_elite=n_elite,
+            spec=spec, pop=pop, edp=edp_sel, rounds=k,
+            gen0=gen_planned - k, n_parents=n_parents, n_elite=n_elite,
             genes_per=cfg.genes_per_mutation,
             draws=es_ops.stack_draws(plans), fixed_genes=fixed_genes,
-            rng_backend=cfg.rng_backend)
+            rng_backend=cfg.rng_backend, carry=carry)
         if resp is None:
             # host replay of the identical plan, one generation per yield
             for d in plans:
@@ -486,12 +540,137 @@ def _segment_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
                 gen += 1
                 if tracker.exhausted:
                     break
+            continue
+        if pending is not None:
+            absorb(pending)
+        pending = resp
+        carry = resp.carry
+    if pending is not None:
+        absorb(pending)
+    return dict(generations=gen)
+
+
+def _restart_segment_requests(spec: GenomeSpec, cfg: ESConfig,
+                              tracker: _Budget,
+                              rng: np.random.Generator,
+                              op_sens: Optional[SensitivityResult],
+                              fixed_genes: Optional[Dict[int, int]],
+                              pop: np.ndarray, edp: np.ndarray,
+                              n_parents: int, n_elite: int,
+                              total_gens: int) -> Requests:
+    """Device-resident rounds WITH stagnation restart: each segment
+    additionally pre-draws one fresh LHS block per generation (fixed
+    shapes — the scan always evaluates it but only ADOPTS it when the
+    carried stagnation counter trips; only adopted blocks are
+    registered, so the eval budget is spent exactly like an adaptive
+    restart).  The carried (best-so-far f32, stagnant-generations)
+    state crosses segments via ``DeviceSegment.state`` /
+    ``SegmentResult.state``.
+
+    Because whether a restart fired — and therefore how many evaluations
+    were registered — is DATA-dependent, this generator harvests eagerly
+    (``resp.resolve()`` on receipt) instead of one round late; a
+    pipelined fleet driver still overlaps it with the other tasks'
+    deferred segments in the same round."""
+    cut_arr = es_ops.crossover_cut_points(spec.length, op_sens)
+    hi, lo = es_ops.mutation_index_tables(spec.length, op_sens)
+    k = cfg.device_rounds
+    R = int(cfg.stagnation_restart)
+    n_children = cfg.pop_size - n_elite
+    edp_sel = np.asarray(edp, dtype=np.float32)
+    best = np.float32(np.min(edp_sel)) if len(edp_sel) else \
+        np.float32(np.inf)
+    since = 0
+    gen = 0
+
+    def apply_fixed(g: np.ndarray) -> np.ndarray:
+        if fixed_genes:
+            for idx, v in fixed_genes.items():
+                g[..., idx] = v
+        return g
+
+    while not tracker.exhausted:
+        if cfg.rng_backend == "threefry":
+            plans = [es_ops.threefry_plan_generation(
+                cfg.seed, gen + i, n_children=n_children,
+                n_parents=n_parents, cut_arr=cut_arr,
+                gene_ub=spec.gene_ub, genes_per=cfg.genes_per_mutation,
+                p_mut=cfg.p_mutation,
+                p_high=annealing_p_high(gen + i, total_gens),
+                hi=hi, lo=lo) for i in range(k)]
         else:
-            for kids, kout in resp.gens:
+            plans = [es_ops.plan_generation(
+                rng, n_children=n_children, n_parents=n_parents,
+                cut_arr=cut_arr, gene_ub=spec.gene_ub,
+                genes_per=cfg.genes_per_mutation, p_mut=cfg.p_mutation,
+                p_high=annealing_p_high(gen + i, total_gens),
+                hi=hi, lo=lo) for i in range(k)]
+        # fresh re-init blocks, one per generation, drawn AFTER the
+        # generation plans (deterministic stream order either backend)
+        fresh = np.stack([apply_fixed(lhs_init(spec, rng, n_children))
+                          for _ in range(k)])
+        draws = es_ops.stack_draws(plans)
+        draws["fresh"] = fresh
+        resp = yield DeviceSegment(
+            spec=spec, pop=pop, edp=edp_sel, rounds=k, gen0=gen,
+            n_parents=n_parents, n_elite=n_elite,
+            genes_per=cfg.genes_per_mutation, draws=draws,
+            fixed_genes=fixed_genes, rng_backend=cfg.rng_backend,
+            restart=R, state=(float(best), int(since)))
+        if resp is None:
+            # host replay mirroring step_restart's f32 state machine
+            for i, d in enumerate(plans):
+                parents, elites, elite_edp = es_ops.select(
+                    pop, edp_sel, n_parents, n_elite)
+                kids = np.ascontiguousarray(
+                    es_ops.apply_crossover(parents, d.ab, d.cuts),
+                    dtype=pop.dtype)
+                kids = es_ops.apply_mutation(kids, d.active, d.gene,
+                                             d.vals)
+                kids = apply_fixed(spec.clip(kids))
+                kout = yield kids
+                tracker.register(kids, kout)
+                kedp = np.where(
+                    np.asarray(kout["valid"]),
+                    np.asarray(kout["edp"], dtype=np.float32),
+                    np.float32(np.inf)).astype(np.float32)
+                kbest = np.float32(min(best, kedp.min()))
+                since = 0 if kbest < best else since + 1
+                best = kbest
+                gen += 1
+                if since >= R:
+                    fr = fresh[i].astype(pop.dtype)
+                    fout = yield fr
+                    tracker.register(fr, fout)
+                    fedp = np.where(
+                        np.asarray(fout["valid"]),
+                        np.asarray(fout["edp"], dtype=np.float32),
+                        np.float32(np.inf)).astype(np.float32)
+                    pop = np.concatenate([elites, fr], axis=0)
+                    edp_sel = np.concatenate(
+                        [np.asarray(elite_edp, np.float32), fedp])
+                    best = np.float32(min(best, fedp.min()))
+                    since = 0
+                else:
+                    pop = np.concatenate([elites, kids], axis=0)
+                    edp_sel = np.concatenate(
+                        [np.asarray(elite_edp, np.float32), kedp])
+                if tracker.exhausted:
+                    break
+        else:
+            resp.resolve()      # eager: restart consumption is adaptive
+            for i, (kids, kout) in enumerate(resp.gens):
                 tracker.register(kids, kout)
                 gen += 1
+                if kout.get("restarted"):
+                    fr = draws["fresh"][i].astype(np.int64)
+                    tracker.register(fr, kout["fresh"])
+                if tracker.exhausted:
+                    break
             pop = resp.final_pop
             edp_sel = np.asarray(resp.final_edp, dtype=np.float32)
+            best = np.float32(resp.state[0])
+            since = int(resp.state[1])
     return dict(generations=gen)
 
 

@@ -36,8 +36,10 @@ the fiber-tree byte accounting via a lax.scan over the loop slots.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -98,13 +100,61 @@ _JIT_FNS: Dict[Tuple[int, int, str, str, str], object] = {}
 # last reset — the per-round dispatch-count benchmark hook.
 _DISPATCHES = 0
 
+# One reentrant lock guards every module-level counter and registry
+# (_JIT_FNS/_SHARD_FNS/_STACK_CONSTS/_AOT_*): the compile-ahead worker
+# mutates them from its background thread while the search thread
+# dispatches, so bare ``+= 1`` increments are no longer safe.
+_LOCK = threading.RLock()
+
+# Wall-clock seconds the host spent BLOCKED converting device results to
+# numpy (np.asarray on a jax Array waits for the computation) since the
+# last reset.  The pipelined drivers exist to shrink this number; the
+# benchmark suite records it per fleet.
+_HOST_BLOCKED_S = 0.0
+
+
+def _count_dispatch() -> None:
+    global _DISPATCHES
+    with _LOCK:
+        _DISPATCHES += 1
+
+
+def _time_block(fn: Callable):
+    """Run a blocking device->host conversion thunk, charging its wall
+    clock to the host-blocked accumulator."""
+    global _HOST_BLOCKED_S
+    t0 = time.perf_counter()
+    out = fn()
+    dt = time.perf_counter() - t0
+    with _LOCK:
+        _HOST_BLOCKED_S += dt
+    return out
+
+
+def host_blocked_s() -> float:
+    """Seconds the host spent blocked on device->numpy conversions since
+    the last reset."""
+    with _LOCK:
+        return _HOST_BLOCKED_S
+
+
+def reset_host_blocked_s() -> None:
+    global _HOST_BLOCKED_S
+    with _LOCK:
+        _HOST_BLOCKED_S = 0.0
+
 
 def compilation_count() -> int:
     """Total XLA compilations held by the shared evaluator cache: the sum
     of per-signature jit cache sizes (each distinct batch shape traced on
-    a signature is one compilation)."""
+    a signature is one compilation), plus the AOT executables the
+    compile-ahead worker built (shapes served from the AOT registry never
+    enter a jit cache)."""
     total = 0
-    for fn in _JIT_FNS.values():
+    with _LOCK:
+        fns = list(_JIT_FNS.values())
+        total += len(_AOT_FNS)
+    for fn in fns:
         try:
             total += fn._cache_size()
         except Exception:       # private API; degrade to signature count
@@ -115,31 +165,207 @@ def compilation_count() -> int:
 def compile_signatures() -> Tuple[Tuple[int, int, str, str], ...]:
     """The (ndims, prime-bucket, topology, density-key) signatures built
     so far."""
-    return tuple(sorted({(k[0], k[1], k[2], k[3]) for k in _JIT_FNS}))
+    with _LOCK:
+        return tuple(sorted({(k[0], k[1], k[2], k[3]) for k in _JIT_FNS}))
 
 
 def dispatch_count() -> int:
     """Device dispatches issued since the last reset (each batched
     evaluator call — per-task or mega-batch — is one dispatch)."""
-    return _DISPATCHES
+    with _LOCK:
+        return _DISPATCHES
 
 
 def reset_dispatch_count() -> None:
     global _DISPATCHES
-    _DISPATCHES = 0
+    with _LOCK:
+        _DISPATCHES = 0
+
+
+# ------------------------------------------------- AOT compile-ahead
+#
+# ``compile_ahead`` lowers and compiles predicted dispatch shapes on a
+# background thread (jit(...).lower(shapes).compile()) while the host
+# runs the HSHI/LHS prologue.  A ``.lower().compile()`` does NOT populate
+# the jit function's own call cache, so the finished executables live in
+# their own registry, keyed (jit-fn key, shape fingerprint), and the
+# dispatch paths consult it first.  ``_AOT_PENDING`` holds an Event per
+# in-flight background compile so a dispatch that races the worker WAITS
+# for the executable instead of duplicate-tracing.
+
+_AOT_FNS: Dict[Tuple, object] = {}
+_AOT_PENDING: Dict[Tuple, threading.Event] = {}
+_CA_ACTIVE = False              # a compile-ahead pass ran this epoch
+_CA_PREFIXES: set = set()       # (sig..., tag) families compile-ahead built
+_CA_HITS = 0                    # dispatches served by an AOT executable
+_CA_MISSES = 0                  # fresh XLA traces while compile-ahead on
+_CA_CANCEL = None               # cancel event of the latest worker
+
+
+def compile_ahead_counts() -> Tuple[int, int]:
+    """(hits, misses) of the AOT compile-ahead registry: a hit is a
+    dispatch served by a pre-built executable, a miss a dispatch that had
+    to trace a fresh XLA program even though compile-ahead ran."""
+    with _LOCK:
+        return _CA_HITS, _CA_MISSES
+
+
+def reset_compile_ahead_counts() -> None:
+    global _CA_HITS, _CA_MISSES
+    with _LOCK:
+        _CA_HITS = _CA_MISSES = 0
+
+
+def _aot_lookup(key: Tuple):
+    """The AOT executable for ``key``, waiting out an in-flight
+    background compile of the same key first; None when absent."""
+    with _LOCK:
+        fn = _AOT_FNS.get(key)
+        ev = _AOT_PENDING.get(key)
+    if fn is not None or ev is None:
+        return fn
+    ev.wait(timeout=600.0)
+    with _LOCK:
+        return _AOT_FNS.get(key)
+
+
+def _aot_call(key: Tuple, jit_fn, args: Tuple):
+    """Dispatch through the AOT registry when it covers ``key``; fall
+    back to the ordinary jit call.  A compile-ahead MISS is a dispatch
+    that had to trace a fresh XLA program even though compile-ahead
+    claimed its (signature, kernel-tag) family — shapes in families the
+    worker never touched (e.g. prologue probe batches when only
+    scan/stacked shapes were predicted) don't count."""
+    global _CA_HITS, _CA_MISSES
+    cfn = _aot_lookup(key)
+    if cfn is not None:
+        try:
+            out = cfn(*args)
+        except Exception:       # shape/dtype drift vs the predicted job
+            with _LOCK:
+                _CA_MISSES += 1
+            return jit_fn(*args)
+        with _LOCK:
+            _CA_HITS += 1
+        return out
+    with _LOCK:
+        armed = _CA_ACTIVE and key[:5] in _CA_PREFIXES
+    if not armed:
+        return jit_fn(*args)
+    try:
+        before = jit_fn._cache_size()
+    except Exception:
+        before = None
+    out = jit_fn(*args)
+    try:
+        traced = before is None or jit_fn._cache_size() > before
+    except Exception:
+        traced = True
+    if traced:
+        with _LOCK:
+            _CA_MISSES += 1
+    return out
+
+
+def compile_ahead(jobs: Sequence[Tuple[Tuple, object, Tuple]],
+                  wait: bool = False) -> Optional[threading.Thread]:
+    """Compile the given (key, jit_fn, arg_structs) jobs on a background
+    thread.  Returns the thread (already started); ``wait=True`` joins it
+    before returning (tests).  Marks compile-ahead active for the epoch,
+    which arms the miss counter on every later dispatch.
+
+    Every queued key is claimed in ``_AOT_PENDING`` *before* the worker
+    starts: a dispatch that races the worker finds its key pending and
+    waits for the executable (``_aot_lookup``) instead of tracing a
+    duplicate program inline — a queued shape can never count as a miss,
+    only a shape the predictor failed to enumerate.
+
+    The worker is a NON-daemon thread with a cooperative cancel
+    (:func:`compile_ahead_quiesce`): a daemon thread killed mid-XLA
+    -compile at interpreter exit aborts the process from C++
+    (``terminate called without an active exception``), so instead the
+    fleet cancels leftover queue work when its run ends and interpreter
+    shutdown joins at most the one in-flight compile."""
+    global _CA_ACTIVE, _CA_CANCEL
+    cancel = threading.Event()
+    with _LOCK:
+        _CA_ACTIVE = True
+        _CA_PREFIXES.update(key[:5] for key, _, _ in jobs)
+        queued = []
+        for key, jit_fn, arg_structs in jobs:
+            if key in _AOT_FNS or key in _AOT_PENDING:
+                continue
+            ev = threading.Event()
+            _AOT_PENDING[key] = ev
+            queued.append((key, jit_fn, arg_structs, ev))
+        _CA_CANCEL = cancel
+    if not queued:
+        return None
+
+    def work():
+        for key, jit_fn, arg_structs, ev in queued:
+            try:
+                if not cancel.is_set():
+                    compiled = jit_fn.lower(*arg_structs).compile()
+                    with _LOCK:
+                        _AOT_FNS[key] = compiled
+            except Exception:   # dispatch path falls back to tracing
+                pass
+            finally:
+                ev.set()
+                with _LOCK:
+                    _AOT_PENDING.pop(key, None)
+
+    th = threading.Thread(target=work, name="compile-ahead")
+    th.start()
+    if wait:
+        th.join()
+    return th
+
+
+def compile_ahead_quiesce() -> None:
+    """Cancel any compile-ahead work still queued (the in-flight compile
+    finishes; skipped jobs release their pending events so no waiter
+    hangs).  Called by the fleet when its run ends — whatever is still
+    queued was predicted for dispatches that will never come — and at
+    interpreter shutdown, so exit joins at most one in-flight compile."""
+    with _LOCK:
+        cancel = _CA_CANCEL
+    if cancel is not None:
+        cancel.set()
+
+
+# threading._register_atexit callbacks fire BEFORE the interpreter joins
+# non-daemon threads (plain atexit fires after, too late) — the same
+# hook concurrent.futures uses to wind down its workers
+try:
+    threading._register_atexit(compile_ahead_quiesce)
+except Exception:               # pragma: no cover - future-proofing
+    import atexit
+    atexit.register(compile_ahead_quiesce)
 
 
 def clear_compile_cache() -> None:
     """Drop all shared jitted evaluators (benchmarking hook)."""
+    global _CA_ACTIVE
     _jitted_eval.cache_clear()
     _build_eval_one.cache_clear()
     _scan_task_fn.cache_clear()
     _scan_fn.cache_clear()
-    _JIT_FNS.clear()
-    _SHARD_FNS.clear()
-    _STACK_CONSTS.clear()
+    _direct_scan_task_fn.cache_clear()
+    _direct_scan_fn.cache_clear()
+    with _LOCK:
+        _JIT_FNS.clear()
+        _SHARD_FNS.clear()
+        _STACK_CONSTS.clear()
+        _AOT_FNS.clear()
+        _AOT_PENDING.clear()
+        _CA_PREFIXES.clear()
+        _CA_ACTIVE = False
     reset_stack_prep_counts()
     reset_dispatch_count()
+    reset_compile_ahead_counts()
+    reset_host_blocked_s()
 
 
 # ------------------------------------------------------- topology tables
@@ -595,8 +821,9 @@ def _jitted_eval(d: int, n_primes_pad: int, topo: Topology,
     eval_one = _build_eval_one(d, n_primes_pad, topo, dens_key)
     in_axes = (0,) * 13 if stacked else (0, 0, 0, 0) + (None,) * 9
     fn = jax.jit(jax.vmap(eval_one, in_axes=in_axes))
-    _JIT_FNS[(d, n_primes_pad, topo.fingerprint, dens_key,
-              "stacked" if stacked else "bcast")] = fn
+    with _LOCK:
+        _JIT_FNS[(d, n_primes_pad, topo.fingerprint, dens_key,
+                  "stacked" if stacked else "bcast")] = fn
     return fn
 
 
@@ -619,7 +846,8 @@ def _mesh_ndev(mesh) -> int:
 
 @lru_cache(maxsize=32)
 def _scan_task_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
-                  n_parents: int, n_elite: int, genes_per: int):
+                  n_parents: int, n_elite: int, genes_per: int,
+                  restart: int = 0):
     """The un-jitted scan program for ONE fleet of same-shape tasks:
     vmap over the task axis of a ``lax.scan`` over generations, each
     step folding {stable-sort elitist selection -> crossover -> mutation
@@ -629,20 +857,33 @@ def _scan_task_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
     PADDED genome coordinates — see ``es_ops.PaddedLayout``), so the
     program is a pure function of its inputs; the carry fitness for
     selection is the explicit ``cycles * energy`` product of the emitted
-    outputs, the same multiply ``_canonical`` performs on the host."""
+    outputs, the same multiply ``_canonical`` performs on the host.
+
+    ``restart > 0`` extends the carry with the float32 best-so-far and a
+    no-improvement counter: after ``restart`` stagnant generations the
+    non-elite population is replaced by the pre-drawn fresh block of
+    ``draws["fresh"]`` (always evaluated — fixed shapes — and adopted
+    via a where-select on the carry, the ``lax.cond`` re-init branch in
+    its vmap-compatible form).  ``restart == 0`` builds EXACTLY the
+    pre-restart program."""
     eval_one = _build_eval_one(d, n_pad, topo, dens_key)
     tt = _topo_tables(topo)
     NL = tt.n_levels
     F3 = 3 * MAX_FMT_GENES
     veval = jax.vmap(eval_one, in_axes=(0, 0, 0, 0) + (None,) * 9)
 
+    def eval_rows(kids, consts):
+        C = kids.shape[0]
+        perm = kids[:, :NL]
+        til = kids[:, NL:NL + n_pad]
+        fmt = kids[:, NL + n_pad:NL + n_pad + F3].reshape(
+            C, 3, MAX_FMT_GENES)
+        sg = kids[:, NL + n_pad + F3:]
+        return veval(perm, til, fmt, sg, *consts)
+
     def one_task(pop, edp, gene_ub, fixed_mask, fixed_vals, draws, consts):
-        def step(carry, dr):
-            pop, edp = carry
-            order = jnp.argsort(edp)            # stable sort
+        def make_kids(pop, order, dr):
             parents = pop[order[:n_parents]]
-            elites = pop[order[:n_elite]]
-            elite_edp = edp[order[:n_elite]]
             Lp = pop.shape[1]
             col = jnp.arange(Lp)[None, :]
             kids = jnp.where(col < dr["cuts"][:, None],
@@ -660,12 +901,15 @@ def _scan_task_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
             kids = jnp.clip(kids, 0, gene_ub[None, :] - 1)
             kids = jnp.where(fixed_mask[None, :], fixed_vals[None, :],
                              kids)
-            perm = kids[:, :NL]
-            til = kids[:, NL:NL + n_pad]
-            fmt = kids[:, NL + n_pad:NL + n_pad + F3].reshape(
-                C, 3, MAX_FMT_GENES)
-            sg = kids[:, NL + n_pad + F3:]
-            out = veval(perm, til, fmt, sg, *consts)
+            return kids
+
+        def step(carry, dr):
+            pop, edp = carry
+            order = jnp.argsort(edp)            # stable sort
+            elites = pop[order[:n_elite]]
+            elite_edp = edp[order[:n_elite]]
+            kids = make_kids(pop, order, dr)
+            out = eval_rows(kids, consts)
             kedp = out["cycles"] * out["energy_pj"]
             new_pop = jnp.concatenate([elites, kids], axis=0)
             new_edp = jnp.concatenate([elite_edp, kedp], axis=0)
@@ -673,19 +917,182 @@ def _scan_task_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
                       energy_pj=out["energy_pj"], cycles=out["cycles"])
             return (new_pop, new_edp), ys
 
+        def step_restart(carry, dr):
+            pop, edp, best, since = carry
+            order = jnp.argsort(edp)
+            elites = pop[order[:n_elite]]
+            elite_edp = edp[order[:n_elite]]
+            kids = make_kids(pop, order, dr)
+            out = eval_rows(kids, consts)
+            kedp = out["cycles"] * out["energy_pj"]
+            kbest = jnp.minimum(best, jnp.min(kedp))
+            since1 = jnp.where(kbest < best, 0, since + 1)
+            # the fresh block is always evaluated (fixed shapes) and only
+            # ADOPTED when the stagnation threshold trips
+            fresh = dr["fresh"]
+            fout = eval_rows(fresh, consts)
+            fedp = fout["cycles"] * fout["energy_pj"]
+            do_r = since1 >= restart
+            new_pop = jnp.where(
+                do_r, jnp.concatenate([elites, fresh], axis=0),
+                jnp.concatenate([elites, kids], axis=0))
+            new_edp = jnp.where(
+                do_r, jnp.concatenate([elite_edp, fedp], axis=0),
+                jnp.concatenate([elite_edp, kedp], axis=0))
+            best2 = jnp.where(do_r, jnp.minimum(kbest, jnp.min(fedp)),
+                              kbest)
+            since2 = jnp.where(do_r, 0, since1)
+            ys = dict(kids=kids, valid=out["valid"],
+                      energy_pj=out["energy_pj"], cycles=out["cycles"],
+                      f_valid=fout["valid"],
+                      f_energy_pj=fout["energy_pj"],
+                      f_cycles=fout["cycles"], restarted=do_r)
+            return (new_pop, new_edp, best2, since2), ys
+
+        if restart > 0:
+            best0 = draws["best0"][0]
+            since0 = draws["since0"][0]
+            dr_xs = {kk: v for kk, v in draws.items()
+                     if kk not in ("best0", "since0")}
+            (pop, edp, best, since), ys = jax.lax.scan(
+                step_restart, (pop, edp, best0, since0), dr_xs)
+            ys = dict(ys, best=best[None], since=since[None])
+            return pop, edp, ys
         (pop, edp), ys = jax.lax.scan(step, (pop, edp), draws)
         return pop, edp, ys
 
     return jax.vmap(one_task, in_axes=(0, 0, 0, 0, 0, 0, 0))
 
 
+def _donate_args() -> Tuple[int, ...]:
+    """Donate the scan carry buffers (pop, edp) on accelerators so a
+    pipelined fleet's device-resident populations update in place;
+    donation on CPU only produces warnings, so it stays gated."""
+    return (0, 1) if jax.default_backend() in ("gpu", "tpu") else ()
+
+
 @lru_cache(maxsize=32)
 def _scan_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
-             n_parents: int, n_elite: int, genes_per: int):
+             n_parents: int, n_elite: int, genes_per: int,
+             restart: int = 0):
     fn = jax.jit(_scan_task_fn(d, n_pad, topo, dens_key, n_parents,
-                               n_elite, genes_per))
-    _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
-              f"scan:p{n_parents}e{n_elite}g{genes_per}")] = fn
+                               n_elite, genes_per, restart),
+                 donate_argnums=_donate_args())
+    tag = f"scan:p{n_parents}e{n_elite}g{genes_per}" + (
+        f"r{restart}" if restart else "")
+    with _LOCK:
+        _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key, tag)] = fn
+    return fn
+
+
+@lru_cache(maxsize=32)
+def _direct_scan_task_fn(d: int, n_pad: int, topo: Topology,
+                         dens_key: str, n_parents: int, n_elite: int,
+                         genes_per: int):
+    """The scan program for ``standard_es`` segments: the same
+    {select -> single-point crossover -> gated mutation -> cost} fold,
+    but the carry population lives in DIRECT value coordinates
+    (``direct_encoding.DirectValueSpec`` layout: [perm codes | factor
+    values d x n_levels | fmt/sg tail]) and every generation's children
+    are translated to canonical rows IN-SCAN — the jnp twin of
+    ``DirectValueSpec.to_canonical``'s greedy prime placement, vectorized
+    over rows and unrolled over the padded prime axis with the prime
+    value/dimension TRACED (from the shared consts), so same-signature
+    workloads share one compilation.  The scrambled permutation table and
+    dim sizes are traced per-task aux inputs for the same reason.
+
+    Numerics note: factor products and remainders stay well inside
+    float32's exact-integer range, so the divisibility/validity decisions
+    are exact — the translation equals the numpy oracle row-for-row
+    (test-pinned)."""
+    eval_one = _build_eval_one(d, n_pad, topo, dens_key)
+    tt = _topo_tables(topo)
+    NL = tt.n_levels
+    F3 = 3 * MAX_FMT_GENES
+    tail_len = F3 + tt.n_sites
+    Ld = NL + d * NL + tail_len
+    veval = jax.vmap(eval_one, in_axes=(0, 0, 0, 0) + (None,) * 9)
+
+    def one_task(pop, edp, scramble, dim_sizes, draws, consts):
+        primes_f, prime_dim = consts[0], consts[1]
+
+        def translate(kids):
+            C = kids.shape[0]
+            perm = scramble[kids[:, :NL]].astype(jnp.int32)
+            factors = kids[:, NL:NL + d * NL].reshape(
+                C, d, NL).astype(jnp.float32)
+            prod = jnp.prod(factors, axis=2)                # (C, d)
+            ok = jnp.all(prod == dim_sizes[None, :], axis=1)
+            remaining = factors
+            til = jnp.zeros((C, n_pad), dtype=jnp.int32)
+            for kk in range(n_pad):
+                p = primes_f[kk]
+                di = prime_dim[kk]
+                is_real = p > 1.5       # pad primes are 1.0
+                rem = jax.lax.dynamic_index_in_dim(
+                    remaining, di, axis=1, keepdims=False)  # (C, NL)
+                can = (jnp.mod(rem, p) == 0) & (rem > 1.0)
+                lvl = jnp.argmax(can, axis=1).astype(jnp.int32)
+                hasl = jnp.any(can, axis=1)
+                ok = ok & (hasl | ~is_real)
+                upd = ((jnp.arange(NL)[None, :] == lvl[:, None]) &
+                       hasl[:, None] & is_real)
+                remaining = jax.lax.dynamic_update_index_in_dim(
+                    remaining, jnp.where(upd, rem / p, rem), di, axis=1)
+                til = til.at[:, kk].set(
+                    jnp.where(is_real & hasl, lvl, 0))
+            return perm, til, ok
+
+        def step(carry, dr):
+            pop, edp = carry
+            order = jnp.argsort(edp)            # stable sort
+            parents = pop[order[:n_parents]]
+            elites = pop[order[:n_elite]]
+            elite_edp = edp[order[:n_elite]]
+            col = jnp.arange(Ld)[None, :]
+            kids = jnp.where(col < dr["cuts"][:, None],
+                             parents[dr["ab"][:, 0]],
+                             parents[dr["ab"][:, 1]])
+            C = kids.shape[0]
+            rows = jnp.arange(C)
+            for j in range(genes_per):
+                g = dr["gene"][:, j]
+                kids = kids.at[rows, g].set(
+                    jnp.where(dr["active"], dr["vals"][:, j],
+                              kids[rows, g]))
+            # direct mutation draws are valid values by construction —
+            # no clip, no fixed genes (matches the host loop exactly)
+            perm, til, ok = translate(kids)
+            tail = kids[:, NL + d * NL:]
+            fmt = tail[:, :F3].reshape(C, 3, MAX_FMT_GENES)
+            sg = tail[:, F3:]
+            out = veval(perm, til, fmt, sg, *consts)
+            big = jnp.float32(jnp.inf)
+            kedp = jnp.where(ok, out["cycles"] * out["energy_pj"], big)
+            canon = jnp.concatenate([perm, til, tail], axis=1)
+            canon = jnp.where(ok[:, None], canon, 0)
+            new_pop = jnp.concatenate([elites, kids], axis=0)
+            new_edp = jnp.concatenate([elite_edp, kedp], axis=0)
+            ys = dict(canon=canon, valid=ok & out["valid"],
+                      energy_pj=jnp.where(ok, out["energy_pj"], big),
+                      cycles=jnp.where(ok, out["cycles"], big))
+            return (new_pop, new_edp), ys
+
+        (pop, edp), ys = jax.lax.scan(step, (pop, edp), draws)
+        return pop, edp, ys
+
+    return jax.vmap(one_task, in_axes=(0, 0, 0, 0, 0, 0))
+
+
+@lru_cache(maxsize=32)
+def _direct_scan_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
+                    n_parents: int, n_elite: int, genes_per: int):
+    fn = jax.jit(_direct_scan_task_fn(d, n_pad, topo, dens_key,
+                                      n_parents, n_elite, genes_per),
+                 donate_argnums=_donate_args())
+    with _LOCK:
+        _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
+                  f"dscan:p{n_parents}e{n_elite}g{genes_per}")] = fn
     return fn
 
 
@@ -742,7 +1149,7 @@ def _padded_layout(model: "JaxCostModel") -> PaddedLayout:
 
 def run_segments(models: Sequence["JaxCostModel"],
                  segs: Sequence[DeviceSegment],
-                 mesh=None) -> List[SegmentResult]:
+                 mesh=None, defer: bool = False) -> List[SegmentResult]:
     """Execute one DeviceSegment per model as a SINGLE device dispatch:
     all segments (which must share the models' compilation signature and
     the segment shape key) stack along a task axis, and a jitted
@@ -754,8 +1161,22 @@ def run_segments(models: Sequence["JaxCostModel"],
     dispatch path).  With ``mesh`` given and the task count divisible by
     the device count, tasks shard across devices via the
     ``distributed.compat.shard_map`` shim; otherwise the single-device
-    program runs unchanged."""
-    global _DISPATCHES
+    program runs unchanged.
+
+    Pipelining hooks: a segment carrying ``carry`` (the device-resident
+    padded (pop, edp) of its previous SegmentResult) skips the host-side
+    genome padding entirely — the population never leaves the device
+    between rounds.  With ``defer=True`` the returned results hold a
+    ``harvest`` thunk instead of materialized numpy gens; the device is
+    already computing when this function returns, and the caller
+    converts (``SegmentResult.resolve``) one round late.  ``carry`` and
+    the device handles are valid either way, so the next segment can
+    dispatch before the previous one is harvested.
+
+    ``kind == "direct"`` segments (``standard_es``) route to the
+    direct-genome scan; ``restart > 0`` runs the stagnation-restart
+    kernel variant and needs ``seg.state`` (best-so-far, stagnant-gens)
+    plus per-generation ``draws["fresh"]`` re-init blocks."""
     if len(models) != len(segs):
         raise ValueError("models and segments must pair up")
     sig = models[0].signature
@@ -766,13 +1187,21 @@ def run_segments(models: Sequence["JaxCostModel"],
     shape_key = segment_shape_key(segs[0])
     if any(segment_shape_key(s) != shape_key for s in segs):
         raise ValueError("run_segments needs one shared segment shape")
-    _, k, n_parents, n_elite, genes_per = shape_key
+    B, k, n_parents, n_elite, genes_per, kind, restart = shape_key
+    if kind == "direct":
+        return _run_direct_segments(models, segs, defer=defer)
 
     pops, edps, ubs, fmasks, fvals, draw_list = [], [], [], [], [], []
+    n_children = 0
     for m, s in zip(models, segs):
         lay = _padded_layout(m)
-        pops.append(lay.pad_rows(np.asarray(s.pop, dtype=np.int32)))
-        edps.append(np.asarray(s.edp, dtype=np.float32))
+        if s.carry is not None:
+            pops.append(jnp.asarray(s.carry[0]))
+            edps.append(jnp.asarray(s.carry[1]))
+        else:
+            pops.append(jnp.asarray(
+                lay.pad_rows(np.asarray(s.pop, dtype=np.int32))))
+            edps.append(jnp.asarray(np.asarray(s.edp, dtype=np.float32)))
         ubs.append(lay.pad_vector(m.spec.gene_ub.astype(np.int32), 1))
         fm = np.zeros(lay.Lp, dtype=bool)
         fv = np.zeros(lay.Lp, dtype=np.int32)
@@ -787,6 +1216,14 @@ def run_segments(models: Sequence["JaxCostModel"],
         dr = dict(s.draws)
         dr["gene"] = lay.pad_index(dr["gene"]).astype(np.int32)
         dr["cuts"] = lay.pad_cut(dr["cuts"]).astype(np.int32)
+        if restart:
+            fr = np.asarray(dr["fresh"], dtype=np.int32)
+            gk, gc = fr.shape[0], fr.shape[1]
+            dr["fresh"] = lay.pad_rows(
+                fr.reshape(gk * gc, -1)).reshape(gk, gc, -1)
+            dr["best0"] = np.asarray([s.state[0]], dtype=np.float32)
+            dr["since0"] = np.asarray([s.state[1]], dtype=np.int32)
+        n_children = dr["ab"].shape[1]
         draw_list.append(dr)
     draws = {kk: jnp.asarray(np.stack([d[kk] for d in draw_list]))
              for kk in draw_list[0]}
@@ -797,37 +1234,150 @@ def run_segments(models: Sequence["JaxCostModel"],
 
     T = len(segs)
     topo = models[0].arch.topology
+    args = (jnp.stack(pops), jnp.stack(edps),
+            jnp.asarray(np.stack(ubs)), jnp.asarray(np.stack(fmasks)),
+            jnp.asarray(np.stack(fvals)), draws, consts)
+    _count_dispatch()
     if mesh is not None and _mesh_ndev(mesh) > 1 and \
-            T % _mesh_ndev(mesh) == 0:
+            T % _mesh_ndev(mesh) == 0 and not restart:
         fn = _sharded_scan_fn(sig[0], sig[1], topo, sig[3], n_parents,
                               n_elite, genes_per, mesh)
+        pop_f, edp_f, ys = fn(*args)
     else:
         fn = _scan_fn(sig[0], sig[1], topo, sig[3], n_parents, n_elite,
-                      genes_per)
-    _DISPATCHES += 1
-    pop_f, edp_f, ys = fn(jnp.asarray(np.stack(pops)),
-                          jnp.asarray(np.stack(edps)),
-                          jnp.asarray(np.stack(ubs)),
-                          jnp.asarray(np.stack(fmasks)),
-                          jnp.asarray(np.stack(fvals)),
-                          draws, consts)
-    pop_f = np.asarray(pop_f)
-    edp_f = np.asarray(edp_f)
-    ys = {kk: np.asarray(v) for kk, v in ys.items()}
+                      genes_per, restart)
+        tag = f"scan:p{n_parents}e{n_elite}g{genes_per}" + (
+            f"r{restart}" if restart else "")
+        key = sig + (tag, T, B, k, n_children)
+        pop_f, edp_f, ys = _aot_call(key, fn, args)
+
+    host = {}
+
+    def materialize():
+        if "ys" not in host:
+            def conv():
+                return (np.asarray(pop_f), np.asarray(edp_f),
+                        {kk: np.asarray(v) for kk, v in ys.items()})
+            host["pf"], host["ef"], host["ys"] = _time_block(conv)
+        return host["pf"], host["ef"], host["ys"]
+
+    def make_harvest(t, m):
+        def harvest():
+            pf, ef, ys_h = materialize()
+            lay = _padded_layout(m)
+            gens = []
+            for g in range(k):
+                kids = lay.unpad_rows(ys_h["kids"][t, g]).astype(np.int64)
+                out = _canonical(dict(valid=ys_h["valid"][t, g],
+                                      energy_pj=ys_h["energy_pj"][t, g],
+                                      cycles=ys_h["cycles"][t, g]))
+                if restart:
+                    out["fresh"] = _canonical(dict(
+                        valid=ys_h["f_valid"][t, g],
+                        energy_pj=ys_h["f_energy_pj"][t, g],
+                        cycles=ys_h["f_cycles"][t, g]))
+                    out["restarted"] = bool(ys_h["restarted"][t, g])
+                gens.append((kids, out))
+            return (gens, lay.unpad_rows(pf[t]).astype(np.int64), ef[t])
+        return harvest
+
     results: List[SegmentResult] = []
     for t, m in enumerate(models):
-        lay = _padded_layout(m)
-        gens = []
-        for g in range(k):
-            kids = lay.unpad_rows(ys["kids"][t, g]).astype(np.int64)
-            out = _canonical(dict(valid=ys["valid"][t, g],
-                                  energy_pj=ys["energy_pj"][t, g],
-                                  cycles=ys["cycles"][t, g]))
-            gens.append((kids, out))
-        results.append(SegmentResult(
-            gens=gens,
-            final_pop=lay.unpad_rows(pop_f[t]).astype(np.int64),
-            final_edp=edp_f[t]))
+        r = SegmentResult(gens=None, final_pop=None, final_edp=None,
+                          carry=(pop_f[t], edp_f[t]),
+                          harvest=make_harvest(t, m))
+        if not defer:
+            r.resolve()
+        if restart:
+            _, _, ys_h = materialize()
+            r.state = (float(ys_h["best"][t, 0]),
+                       int(ys_h["since"][t, 0]))
+        results.append(r)
+    return results
+
+
+def _run_direct_segments(models: Sequence["JaxCostModel"],
+                         segs: Sequence[DeviceSegment],
+                         defer: bool = False) -> List[SegmentResult]:
+    """:func:`run_segments` for ``kind == "direct"`` segments: the carry
+    population lives in DIRECT value coordinates and the in-scan
+    translation (see ``_direct_scan_task_fn``) produces the canonical
+    rows each generation's ``gens`` report.  ``final_pop`` is returned
+    in direct coordinates (the generator's mirror), while ``gens`` kid
+    rows are canonical genomes with untranslatable rows zeroed — exactly
+    the legacy ``direct_requests`` registration rows."""
+    sig = models[0].signature
+    shape_key = segment_shape_key(segs[0])
+    B, k, n_parents, n_elite, genes_per, kind, restart = shape_key
+    if restart:
+        raise ValueError("direct segments do not support in-scan restart")
+
+    pops, edps, scrs, dims, draw_list = [], [], [], [], []
+    n_children = 0
+    for m, s in zip(models, segs):
+        if s.carry is not None:
+            pops.append(jnp.asarray(s.carry[0]))
+            edps.append(jnp.asarray(s.carry[1]))
+        else:
+            pops.append(jnp.asarray(np.asarray(s.pop, dtype=np.int32)))
+            edps.append(jnp.asarray(np.asarray(s.edp, dtype=np.float32)))
+        scrs.append(np.asarray(s.aux["scramble"], dtype=np.int32))
+        dims.append(np.asarray(s.aux["dim_sizes"], dtype=np.float32))
+        dr = {kk: np.asarray(v) for kk, v in s.draws.items()}
+        n_children = dr["ab"].shape[1]
+        draw_list.append(dr)
+    draws = {kk: jnp.asarray(np.stack([d[kk] for d in draw_list]))
+             for kk in draw_list[0]}
+    consts = tuple(
+        jnp.asarray(np.stack([np.asarray(m._np_consts[j])
+                              for m in models]))
+        for j in range(len(models[0]._np_consts)))
+
+    T = len(segs)
+    topo = models[0].arch.topology
+    fn = _direct_scan_fn(sig[0], sig[1], topo, sig[3], n_parents,
+                         n_elite, genes_per)
+    key = sig + (f"dscan:p{n_parents}e{n_elite}g{genes_per}",
+                 T, B, k, n_children)
+    _count_dispatch()
+    pop_f, edp_f, ys = _aot_call(
+        key, fn, (jnp.stack(pops), jnp.stack(edps),
+                  jnp.asarray(np.stack(scrs)), jnp.asarray(np.stack(dims)),
+                  draws, consts))
+
+    host = {}
+
+    def materialize():
+        if "ys" not in host:
+            def conv():
+                return (np.asarray(pop_f), np.asarray(edp_f),
+                        {kk: np.asarray(v) for kk, v in ys.items()})
+            host["pf"], host["ef"], host["ys"] = _time_block(conv)
+        return host["pf"], host["ef"], host["ys"]
+
+    def make_harvest(t, m):
+        def harvest():
+            pf, ef, ys_h = materialize()
+            lay = _padded_layout(m)
+            gens = []
+            for g in range(k):
+                kids = lay.unpad_rows(
+                    ys_h["canon"][t, g]).astype(np.int64)
+                out = _canonical(dict(valid=ys_h["valid"][t, g],
+                                      energy_pj=ys_h["energy_pj"][t, g],
+                                      cycles=ys_h["cycles"][t, g]))
+                gens.append((kids, out))
+            return gens, pf[t].astype(np.int64), ef[t]
+        return harvest
+
+    results: List[SegmentResult] = []
+    for t, m in enumerate(models):
+        r = SegmentResult(gens=None, final_pop=None, final_edp=None,
+                          carry=(pop_f[t], edp_f[t]),
+                          harvest=make_harvest(t, m))
+        if not defer:
+            r.resolve()
+        results.append(r)
     return results
 
 
@@ -945,7 +1495,6 @@ class JaxCostModel:
     def __call__(self, genomes) -> Dict[str, np.ndarray]:
         """genomes: (B, L) ints -> dict of (B,) arrays.  Pads the batch to
         the next power of two and the prime axis to its bucket."""
-        global _DISPATCHES
         n = len(genomes)
         padded = _pad_batch(n)
         perm, til, fmt, sg = self._prepare(genomes)
@@ -954,13 +1503,16 @@ class JaxCostModel:
                 np.concatenate(
                     [a, np.zeros((padded - n,) + a.shape[1:], np.int32)],
                     axis=0) for a in (perm, til, fmt, sg))
-        _DISPATCHES += 1
-        out = self._fn(jnp.asarray(perm), jnp.asarray(til),
-                       jnp.asarray(fmt), jnp.asarray(sg),
-                       self._primes, self._prime_dim, self._relevance,
-                       self._densities, self._full_elems, self._total_macs,
-                       self._z_onehot, self._plat, self._dens_params)
-        return _canonical({k: np.asarray(v)[:n] for k, v in out.items()})
+        _count_dispatch()
+        out = _aot_call(
+            self.signature + ("bcast", padded), self._fn,
+            (jnp.asarray(perm), jnp.asarray(til),
+             jnp.asarray(fmt), jnp.asarray(sg),
+             self._primes, self._prime_dim, self._relevance,
+             self._densities, self._full_elems, self._total_macs,
+             self._z_onehot, self._plat, self._dens_params))
+        return _canonical(_time_block(
+            lambda: {k: np.asarray(v)[:n] for k, v in out.items()}))
 
     def run_segment(self, seg: DeviceSegment) -> SegmentResult:
         """Execute one device-resident ES segment against this model
@@ -1011,12 +1563,14 @@ _STACK_PREP_MISSES = 0
 
 def stack_prep_counts() -> Tuple[int, int]:
     """(cache hits, cache misses) of the stacked-constants prep cache."""
-    return _STACK_PREP_HITS, _STACK_PREP_MISSES
+    with _LOCK:
+        return _STACK_PREP_HITS, _STACK_PREP_MISSES
 
 
 def reset_stack_prep_counts() -> None:
     global _STACK_PREP_HITS, _STACK_PREP_MISSES
-    _STACK_PREP_HITS = _STACK_PREP_MISSES = 0
+    with _LOCK:
+        _STACK_PREP_HITS = _STACK_PREP_MISSES = 0
 
 
 def _stacked_consts(models: Sequence["JaxCostModel"],
@@ -1025,11 +1579,14 @@ def _stacked_consts(models: Sequence["JaxCostModel"],
     sig = models[0].signature
     key = (tuple((m.spec.workload.cache_key(), m.arch) for m in models),
            tuple(sizes), padded)
-    hit = _STACK_CONSTS.get(sig)
+    with _LOCK:
+        hit = _STACK_CONSTS.get(sig)
     if hit is not None and hit[0] == key:
-        _STACK_PREP_HITS += 1
+        with _LOCK:
+            _STACK_PREP_HITS += 1
         return hit[1]
-    _STACK_PREP_MISSES += 1
+    with _LOCK:
+        _STACK_PREP_MISSES += 1
     consts: List[np.ndarray] = []
     for j in range(len(models[0]._np_consts)):
         rows = [np.broadcast_to(m._np_consts[j],
@@ -1041,14 +1598,41 @@ def _stacked_consts(models: Sequence["JaxCostModel"],
                 models[0]._np_consts[j],
                 (padded - total,) + np.shape(models[0]._np_consts[j])))
         consts.append(np.ascontiguousarray(np.concatenate(rows, axis=0)))
-    _STACK_CONSTS[sig] = (key, consts)
+    with _LOCK:
+        _STACK_CONSTS[sig] = (key, consts)
     return consts
+
+
+class StackedPending:
+    """Handle to an in-flight ``eval_stacked(..., defer=True)`` dispatch:
+    the device is computing when this is constructed, and ``finalize()``
+    blocks (charged to :func:`host_blocked_s`), canonicalizes, and slices
+    the mega-batch back per task.  ``finalize`` is idempotent."""
+
+    def __init__(self, out, sizes: Sequence[int]):
+        self._out = out
+        self._sizes = list(sizes)
+        self._sliced: Optional[List[Dict[str, np.ndarray]]] = None
+
+    def finalize(self) -> List[Dict[str, np.ndarray]]:
+        if self._sliced is None:
+            out = self._out
+            flat = _canonical(_time_block(
+                lambda: {k: np.asarray(v) for k, v in out.items()}))
+            sliced: List[Dict[str, np.ndarray]] = []
+            off = 0
+            for n in self._sizes:
+                sliced.append({k: v[off:off + n] for k, v in flat.items()})
+                off += n
+            self._sliced = sliced
+            self._out = None
+        return self._sliced
 
 
 def eval_stacked(models: Sequence["JaxCostModel"],
                  batches: Sequence[np.ndarray],
                  pad_floor: int = 0,
-                 mesh=None) -> List[Dict[str, np.ndarray]]:
+                 mesh=None, defer: bool = False):
     """Evaluate several (model, genome-batch) pairs sharing one
     compilation signature in a SINGLE device dispatch.
 
@@ -1072,8 +1656,15 @@ def eval_stacked(models: Sequence["JaxCostModel"],
     device-count multiple — a no-op for the usual power-of-two shapes);
     with ``mesh=None`` (or one device) the single-device path runs
     unchanged, and per-row results are identical either way because both
-    wrap the same per-row kernel."""
-    global _DISPATCHES
+    wrap the same per-row kernel.
+
+    ``defer=True`` returns a :class:`StackedPending` instead of the
+    sliced list: the dispatch has been issued (JAX async dispatch keeps
+    the device busy) but no host-blocking conversion happens until
+    ``finalize()`` — the pipelined driver finalizes round N while round
+    N+1 computes.  Results are bit-identical to ``defer=False`` because
+    finalize performs exactly the conversion this function otherwise
+    does inline."""
     if len(models) != len(batches):
         raise ValueError("models and batches must pair up")
     sig = models[0].signature
@@ -1097,19 +1688,117 @@ def eval_stacked(models: Sequence["JaxCostModel"],
                                np.int32)], axis=0)
         ins.append(arr)
     consts = _stacked_consts(models, sizes, padded)
+    _count_dispatch()
+    args = tuple(jnp.asarray(a) for a in ins) + \
+        tuple(jnp.asarray(c) for c in consts)
     if ndev > 1:
         fn = _sharded_stacked_fn(sig[0], sig[1],
                                  models[0].arch.topology, sig[3], mesh)
+        out = fn(*args)
     else:
         fn = _jitted_eval(sig[0], sig[1], models[0].arch.topology,
                           sig[3], stacked=True)
-    _DISPATCHES += 1
-    out = fn(*[jnp.asarray(a) for a in ins],
-             *[jnp.asarray(c) for c in consts])
-    flat = _canonical({k: np.asarray(v) for k, v in out.items()})
-    sliced: List[Dict[str, np.ndarray]] = []
-    off = 0
-    for n in sizes:
-        sliced.append({k: v[off:off + n] for k, v in flat.items()})
-        off += n
-    return sliced
+        out = _aot_call(sig + ("stacked", padded), fn, args)
+    pending = StackedPending(out, sizes)
+    if defer:
+        return pending
+    return pending.finalize()
+
+
+# ----------------------------------------------- compile-ahead job prep
+#
+# Builders for the (key, jit_fn, arg_structs) triples ``compile_ahead``
+# consumes.  Each mirrors EXACTLY the argument pytree its dispatch path
+# passes — the AOT registry key doubles as the contract: if the builder
+# and the dispatch ever disagree on shapes/dtypes the executable simply
+# isn't found (or fails its call and falls back), never a wrong answer.
+
+
+def _row_structs(model: "JaxCostModel", padded: int) -> Tuple:
+    tt = _topo_tables(model.arch.topology)
+    S = jax.ShapeDtypeStruct
+    return (S((padded, tt.n_levels), np.int32),
+            S((padded, model.n_pad), np.int32),
+            S((padded, 3, MAX_FMT_GENES), np.int32),
+            S((padded, tt.n_sites), np.int32))
+
+
+def stacked_compile_job(model: "JaxCostModel", padded: int) -> Tuple:
+    """AOT job for one ``eval_stacked`` mega-batch shape."""
+    sig = model.signature
+    fn = _jitted_eval(sig[0], sig[1], model.arch.topology, sig[3],
+                      stacked=True)
+    S = jax.ShapeDtypeStruct
+    consts = tuple(S((padded,) + np.shape(np.asarray(c)),
+                     np.asarray(c).dtype) for c in model._np_consts)
+    return (sig + ("stacked", padded), fn,
+            _row_structs(model, padded) + consts)
+
+
+def bcast_compile_job(model: "JaxCostModel", padded: int) -> Tuple:
+    """AOT job for one broadcast (per-task ``model(genomes)``) shape."""
+    sig = model.signature
+    S = jax.ShapeDtypeStruct
+    consts = tuple(S(np.shape(np.asarray(c)), np.asarray(c).dtype)
+                   for c in model._np_consts)
+    return (sig + ("bcast", padded), model._fn,
+            _row_structs(model, padded) + consts)
+
+
+def _draw_structs(T: int, k: int, n_children: int, genes_per: int) -> Dict:
+    S = jax.ShapeDtypeStruct
+    return dict(ab=S((T, k, n_children, 2), np.int32),
+                cuts=S((T, k, n_children), np.int32),
+                active=S((T, k, n_children), np.bool_),
+                gene=S((T, k, n_children, genes_per), np.int32),
+                vals=S((T, k, n_children, genes_per), np.int32))
+
+
+def _seg_consts_structs(model: "JaxCostModel", T: int) -> Tuple:
+    S = jax.ShapeDtypeStruct
+    return tuple(S((T,) + np.shape(np.asarray(c)), np.asarray(c).dtype)
+                 for c in model._np_consts)
+
+
+def scan_compile_job(model: "JaxCostModel", B: int, k: int,
+                     n_parents: int, n_elite: int, genes_per: int,
+                     T: int, restart: int = 0) -> Tuple:
+    """AOT job for one ``run_segments`` ES-scan shape (``T`` same-shape
+    tasks of ``B`` genomes advanced ``k`` generations)."""
+    sig = model.signature
+    fn = _scan_fn(sig[0], sig[1], model.arch.topology, sig[3],
+                  n_parents, n_elite, genes_per, restart)
+    lay = _padded_layout(model)
+    n_children = B - n_elite
+    S = jax.ShapeDtypeStruct
+    draws = _draw_structs(T, k, n_children, genes_per)
+    if restart:
+        draws["fresh"] = S((T, k, n_children, lay.Lp), np.int32)
+        draws["best0"] = S((T, 1), np.float32)
+        draws["since0"] = S((T, 1), np.int32)
+    tag = f"scan:p{n_parents}e{n_elite}g{genes_per}" + (
+        f"r{restart}" if restart else "")
+    args = (S((T, B, lay.Lp), np.int32), S((T, B), np.float32),
+            S((T, lay.Lp), np.int32), S((T, lay.Lp), np.bool_),
+            S((T, lay.Lp), np.int32), draws,
+            _seg_consts_structs(model, T))
+    return sig + (tag, T, B, k, n_children), fn, args
+
+
+def direct_scan_compile_job(model: "JaxCostModel", B: int, k: int,
+                            n_parents: int, n_elite: int, genes_per: int,
+                            T: int, direct_len: int,
+                            n_perm_codes: int) -> Tuple:
+    """AOT job for one ``standard_es`` direct-scan shape.  ``direct_len``
+    and ``n_perm_codes`` come from the task's ``DirectValueSpec``."""
+    sig = model.signature
+    fn = _direct_scan_fn(sig[0], sig[1], model.arch.topology, sig[3],
+                         n_parents, n_elite, genes_per)
+    n_children = B - n_elite
+    S = jax.ShapeDtypeStruct
+    args = (S((T, B, direct_len), np.int32), S((T, B), np.float32),
+            S((T, n_perm_codes), np.int32), S((T, model.d), np.float32),
+            _draw_structs(T, k, n_children, genes_per),
+            _seg_consts_structs(model, T))
+    return (sig + (f"dscan:p{n_parents}e{n_elite}g{genes_per}",
+                   T, B, k, n_children), fn, args)

@@ -226,6 +226,27 @@ def _load_measured_policies() -> None:
         pass
 
 
+#: per-backend default for ``MultiSearch(device_rounds=None)``.  CPU stays
+#: at 1 — measured in the PR 6 baseline: folded scans win on host syncs
+#: but XLA:CPU's scan program loses wall-clock to the per-round path, so
+#: folding is opt-in there.  Accelerator backends amortize the scan
+#: compile over k dispatch-free generations; 4 (gpu) / 8 (tpu) follow the
+#: ROADMAP sizing note (larger k = fewer host syncs but longer-horizon
+#: stale budgets, so segments overshoot budget boundaries by up to k-1
+#: generations of padding work).
+_DEFAULT_DEVICE_ROUNDS = {"cpu": 1, "gpu": 4, "tpu": 8}
+
+
+def default_device_rounds(backend: Optional[str] = None) -> int:
+    """The fleet ``device_rounds`` default for a JAX backend (the running
+    ``jax.default_backend()`` when not given).  Unknown backends fall
+    back to 1 — the always-correct per-round path."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return _DEFAULT_DEVICE_ROUNDS.get(backend, 1)
+
+
 @dataclasses.dataclass
 class SearchTask:
     """One (method, workload, platform) search in a :class:`MultiSearch`
@@ -307,13 +328,36 @@ class MultiSearch:
     generations as ONE ``lax.scan`` program (``jax_cost.run_segments``,
     same-signature same-shape segments stacked and, with ``mesh``,
     sharded across devices), and the host syncs only once per segment for
-    ``_Budget`` accounting and history.  Methods without a device path
-    (PSO/MCTS/PPO/DQN, ``standard_es``, ``random_mapper``) keep the
-    per-round path transparently, and mixed fleets interleave both.
+    ``_Budget`` accounting and history.  ``standard_es`` folds too — its
+    direct-to-canonical translation runs in-scan (``kind="direct"``
+    segments) — as does ``stagnation_restart > 0`` (a re-init branch on
+    the carried best-so-far).  Methods without a device path
+    (PSO/MCTS/PPO/DQN, ``random_mapper``) keep the per-round path
+    transparently, and mixed fleets interleave both.
+    ``device_rounds=None`` (the default) resolves per backend via
+    :func:`default_device_rounds` (CPU=1); ``stats`` record the resolved
+    value and its provenance (``device_rounds_source``).
     ``device_execute=False`` forces the host-loop reference path: the
     driver answers each segment with ``None`` and the generator replays
     the identical operator plan per-round on the host (bit-identical
     trajectories; see COMPAT.md "Device-resident round protocol").
+
+    With ``pipeline=True`` (default) the round loop is software-
+    pipelined: segment results come back deferred and are resolved one
+    round late by the request generators, and stacked mega-batches are
+    dispatched for ALL signature groups before any is finalized — JAX
+    async dispatch overlaps the host's numpy conversions with device
+    execution.  ``pipeline=False`` is the escape hatch and is
+    bit-identical by construction (same dispatches, same registration
+    order, merely blocking earlier); ``stats["host_blocked_s"]`` records
+    the host time actually spent blocked on conversions either way.
+
+    With ``compile_ahead=True`` (default) the fleet's round-1 dispatch
+    shapes (plus each topology's committed pad-watermark shapes and the
+    segment scan programs) are predicted from the task list and AOT-
+    compiled on a background thread while the host runs the HSHI/LHS
+    prologue; ``stats["compile_ahead_hits"/"compile_ahead_misses"]``
+    report registry coverage next to ``jax_cost.compilation_count()``.
 
     After :meth:`run`, ``stats`` holds the weighted round count, host
     sync count, device-dispatch count, and the aligned and natural
@@ -325,8 +369,9 @@ class MultiSearch:
     def __init__(self, tasks: Iterable, align_signatures: bool = True,
                  stack_batches: bool = False,
                  pad_policies: Optional[Dict[str, PadPolicy]] = None,
-                 device_rounds: int = 1, mesh=None,
-                 device_execute: bool = True):
+                 device_rounds: Optional[int] = None, mesh=None,
+                 device_execute: bool = True, pipeline: bool = True,
+                 compile_ahead: bool = True):
         norm: List[SearchTask] = []
         for t in tasks:
             if isinstance(t, SearchTask):
@@ -341,11 +386,22 @@ class MultiSearch:
         self.align_signatures = align_signatures
         self.stack_batches = stack_batches
         self.pad_policies = dict(pad_policies or {})
-        if device_rounds < 1:
-            raise ValueError("device_rounds must be >= 1")
-        self.device_rounds = int(device_rounds)
+        if device_rounds is None:
+            # per-backend default (CPU=1: documented at
+            # _DEFAULT_DEVICE_ROUNDS); stats record value + provenance
+            import jax
+            backend = jax.default_backend()
+            self.device_rounds = default_device_rounds(backend)
+            self.device_rounds_source = f"default:{backend}"
+        else:
+            if device_rounds < 1:
+                raise ValueError("device_rounds must be >= 1")
+            self.device_rounds = int(device_rounds)
+            self.device_rounds_source = "explicit"
         self.mesh = mesh
         self.device_execute = bool(device_execute)
+        self.pipeline = bool(pipeline)
+        self.compile_ahead = bool(compile_ahead)
         self.final_names: List[str] = self._resolve_names(norm)
         self.stats: Dict = {}
 
@@ -372,6 +428,90 @@ class MultiSearch:
             taken.add(f"{n}#{k}")
             names.append(f"{n}#{k}")
         return names
+
+    def _compile_ahead_jobs(self, infos: List[Tuple]) -> List[Tuple]:
+        """The AOT (key, jit_fn, arg_structs) jobs predicted from the
+        fleet's tasks: round-1 eval shapes (stacked mega-batch per
+        signature group, or per-task broadcast), the registered
+        pad-watermark shapes of each topology (the steady-state
+        mega-batch sizes a committed baseline measured), and the scan /
+        direct-scan programs of segment-foldable tasks.  Predictions are
+        conservative: a signature group whose round-1 rows cannot all be
+        predicted contributes NO job (its family stays unclaimed, so jit
+        fallbacks there never count as compile-ahead misses)."""
+        from .baselines import round1_rows, segment_plan
+        # the worker compiles in list order and a racing dispatch WAITS
+        # for its queued key, so order jobs by when the fleet needs
+        # them: round-1 shapes first, segment scans next (needed right
+        # after the prologue), steady-state watermark extras last
+        jobs: List[Tuple] = []
+        late: List[Tuple] = []
+        seen: set = set()
+
+        def add(job: Tuple, when: List[Tuple] = jobs) -> None:
+            if job[0] not in seen:
+                seen.add(job[0])
+                when.append(job)
+
+        def watermarks(topology_fingerprint: str) -> List[int]:
+            try:
+                from repro.configs.archs import measured_watermark_values
+            except ImportError:         # pragma: no cover - jax-less
+                return []
+            return measured_watermark_values(topology_fingerprint)
+
+        rows: List[Optional[int]] = []
+        for task, kw, spec, ev in infos:
+            try:
+                rows.append(round1_rows(task.method, spec, task.budget,
+                                        task.seed, **kw))
+            except (TypeError, ValueError):
+                rows.append(None)
+        if self.stack_batches:
+            by_sig: Dict[Tuple, List[int]] = {}
+            for i, (task, kw, spec, ev) in enumerate(infos):
+                by_sig.setdefault(ev.signature, []).append(i)
+            for sig in sorted(by_sig):
+                idx = by_sig[sig]
+                model = infos[idx[0]][3]
+                if all(rows[i] is not None for i in idx):
+                    total = sum(rows[i] for i in idx)
+                    add(jax_cost.stacked_compile_job(
+                        model, jax_cost._pad_batch(total)))
+                    for v in watermarks(sig[2]):
+                        add(jax_cost.stacked_compile_job(model, int(v)),
+                            when=late)
+        else:
+            for (task, kw, spec, ev), r in zip(infos, rows):
+                if r is not None:
+                    add(jax_cost.bcast_compile_job(
+                        ev, jax_cost._pad_batch(r)))
+        if self.device_execute:
+            seg_groups: Dict[Tuple, List[Tuple]] = {}
+            for task, kw, spec, ev in infos:
+                plan = segment_plan(task.method, spec, task.budget,
+                                    task.seed, **kw)
+                if plan is not None:
+                    key = ev.signature + tuple(sorted(plan.items()))
+                    seg_groups.setdefault(key, []).append(
+                        (plan, spec, ev))
+            for key in sorted(seg_groups, key=repr):
+                grp = seg_groups[key]
+                plan, spec, ev = grp[0]
+                T = len(grp)
+                if plan["kind"] == "direct":
+                    from .direct_encoding import DirectValueSpec
+                    dspec = DirectValueSpec(spec)
+                    add(jax_cost.direct_scan_compile_job(
+                        ev, plan["B"], plan["rounds"], plan["n_parents"],
+                        plan["n_elite"], plan["genes_per"], T,
+                        dspec.length, dspec.n_perm_codes))
+                else:
+                    add(jax_cost.scan_compile_job(
+                        ev, plan["B"], plan["rounds"], plan["n_parents"],
+                        plan["n_elite"], plan["genes_per"], T,
+                        restart=plan["restart"]))
+        return jobs + late
 
     @staticmethod
     def _advance(st: _TaskState, out: Dict) -> bool:
@@ -402,6 +542,7 @@ class MultiSearch:
                     t.workload.structured_density
 
         states: List[_TaskState] = []
+        infos: List[Tuple] = []
         for task, natural, name in zip(self.tasks, naturals,
                                        self.final_names):
             plat = _platform(task.platform)
@@ -417,11 +558,23 @@ class MultiSearch:
                 # scan-foldable engines fold k generations per segment;
                 # an explicit per-task device_rounds wins over the fleet's
                 kw.setdefault("device_rounds", self.device_rounds)
+            infos.append((task, dict(kw), spec, ev))
             gen, tracker = make_requests(task.method, spec, plat,
                                          task.budget, task.seed, **kw)
             states.append(_TaskState(name=name, gen=gen, tracker=tracker,
                                      ev=ev, natural=natural,
                                      method=task.method))
+
+        ca_hits0, ca_misses0 = jax_cost.compile_ahead_counts()
+        blocked0 = jax_cost.host_blocked_s()
+        if self.compile_ahead:
+            # AOT-compile the predicted round-1 + watermark + scan shapes
+            # on a background thread NOW — the compile spike overlaps the
+            # host-side HSHI/LHS/calibration prologue instead of
+            # serializing with the first dispatch of each shape
+            jobs = self._compile_ahead_jobs(infos)
+            if jobs:
+                jax_cost.compile_ahead(jobs)
 
         # group same-signature tasks so they share warm compilations (and,
         # when stacking, one mega-batch); stable within a signature
@@ -479,9 +632,15 @@ class MultiSearch:
                 for key in sorted(seg_groups):
                     grp = seg_groups[key]
                     iter_weight = max(iter_weight, grp[0].req.rounds)
+                    # with pipeline=True the SegmentResults come back
+                    # unresolved (defer): the generators stash them, yield
+                    # the NEXT segment from the device-resident carry, and
+                    # only then resolve round N — the blocking conversion
+                    # overlaps round N+1's device execution (COMPAT.md
+                    # "Pipelined dispatch contract")
                     segres = jax_cost.run_segments(
                         [s.ev for s in grp], [s.req for s in grp],
-                        mesh=self.mesh)
+                        mesh=self.mesh, defer=self.pipeline)
                     for st, res in zip(grp, segres):
                         if self._advance(st, res):
                             pending.append(st)
@@ -502,13 +661,25 @@ class MultiSearch:
                              List[_TaskState]] = {}
                 for st in plain:
                     groups.setdefault(st.signature, []).append(st)
+                # two-phase round: FIRST enqueue every signature group's
+                # mega-batch (with pipeline=True the dispatches return
+                # StackedPending handles, so all groups' device work is
+                # in flight together), THEN finalize + advance in the
+                # same sorted order — round N's host-blocking conversion
+                # of group i overlaps groups i+1..n computing.  The
+                # watermark bookkeeping is value-independent (row counts
+                # are known at dispatch), so it stays in dispatch order
+                # and pipeline on/off cannot change any padded shape.
+                dispatched: List[Tuple[List[_TaskState], object]] = []
                 for sig in sorted(groups):
                     grp = groups[sig]
                     pol = self._pad_policy(sig[2])
                     hwm = pad_hwm.get(sig, 0)
                     outs = jax_cost.eval_stacked(
                         [s.ev for s in grp], [s.req for s in grp],
-                        pad_floor=hwm, mesh=self.mesh)
+                        pad_floor=hwm, mesh=self.mesh,
+                        defer=self.pipeline)
+                    dispatched.append((grp, outs))
                     target = jax_cost._pad_batch(
                         sum(len(s.req) for s in grp))
                     hist = pad_recent.setdefault(sig, [])
@@ -525,6 +696,9 @@ class MultiSearch:
                         pad_hwm[sig] = max(t for t, _ in hist)
                         hist.clear()
                     wm_hist.setdefault(sig, []).append(pad_hwm[sig])
+                for grp, outs in dispatched:
+                    if isinstance(outs, jax_cost.StackedPending):
+                        outs = outs.finalize()
                     for st, out in zip(grp, outs):
                         if self._advance(st, out):
                             pending.append(st)
@@ -535,6 +709,10 @@ class MultiSearch:
             alive = pending
             rounds += iter_weight
             host_syncs += 1
+
+        # compile-ahead jobs still queued were predicted for dispatches
+        # that will never come — stop burning cores on them
+        jax_cost.compile_ahead_quiesce()
 
         results: Dict[str, SearchResult] = {}
         for st in states:
@@ -557,11 +735,18 @@ class MultiSearch:
         # cover k generations with ONE host sync
         hspr = (seg_syncs / seg_rounds) if seg_rounds else \
             (host_syncs / rounds if rounds else 1.0)
+        ca_hits, ca_misses = jax_cost.compile_ahead_counts()
         self.stats = dict(
             rounds=rounds,
             host_syncs=host_syncs,
             host_syncs_per_round=hspr,
             device_rounds=self.device_rounds,
+            device_rounds_source=self.device_rounds_source,
+            pipeline=self.pipeline,
+            compile_ahead=self.compile_ahead,
+            compile_ahead_hits=ca_hits - ca_hits0,
+            compile_ahead_misses=ca_misses - ca_misses0,
+            host_blocked_s=jax_cost.host_blocked_s() - blocked0,
             devices=jax_cost._mesh_ndev(self.mesh),
             dispatches=jax_cost.dispatch_count() - dispatch0,
             signatures=sorted({s.signature for s in states}),
@@ -581,7 +766,8 @@ def run_sweep(workloads: Sequence[Workload],
               platform: PlatformLike = "cloud",
               budget: int = 20_000, seed: int = 0,
               align_signatures: bool = True, stack_batches: bool = False,
-              device_rounds: int = 1, mesh=None,
+              device_rounds: Optional[int] = None, mesh=None,
+              pipeline: bool = True, compile_ahead: bool = True,
               **es_kw) -> Dict[str, SearchResult]:
     """Convenience wrapper: one concurrent SparseMap search per workload
     (e.g. the paper's Table III list) on a shared platform."""
@@ -589,7 +775,8 @@ def run_sweep(workloads: Sequence[Workload],
         [SearchTask(wl, platform, budget=budget, seed=seed,
                     method_kw=dict(es_kw)) for wl in workloads],
         align_signatures=align_signatures, stack_batches=stack_batches,
-        device_rounds=device_rounds, mesh=mesh)
+        device_rounds=device_rounds, mesh=mesh, pipeline=pipeline,
+        compile_ahead=compile_ahead)
     return ms.run()
 
 
@@ -601,8 +788,9 @@ def run_method_sweep(methods: Sequence[str],
                      stack_batches: bool = True,
                      method_kw: Optional[Dict[str, Dict]] = None,
                      stats_out: Optional[Dict] = None,
-                     device_rounds: int = 1, mesh=None,
-                     device_execute: bool = True
+                     device_rounds: Optional[int] = None, mesh=None,
+                     device_execute: bool = True, pipeline: bool = True,
+                     compile_ahead: bool = True
                      ) -> Dict[str, Dict[str, SearchResult]]:
     """The full fig17-style grid — every method on every workload — as ONE
     concurrent :class:`MultiSearch` fleet, mega-batched per signature by
@@ -625,7 +813,8 @@ def run_method_sweep(methods: Sequence[str],
     ms = MultiSearch(tasks, align_signatures=align_signatures,
                      stack_batches=stack_batches,
                      device_rounds=device_rounds, mesh=mesh,
-                     device_execute=device_execute)
+                     device_execute=device_execute, pipeline=pipeline,
+                     compile_ahead=compile_ahead)
     flat = ms.run()
     grid: Dict[str, Dict[str, SearchResult]] = {m: {} for m in methods}
     i = 0

@@ -149,6 +149,27 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
     # pipelining acceptance (warn-only, it is a timing measure): the
     # pipelined device fleet should spend strictly less host-blocked
     # wall-clock than its unpipelined twin in the SAME run
+    # contract analysis: a violation recorded in the sweep is a hard
+    # failure regardless of budget — `python -m repro.analysis` should
+    # have caught it pre-merge, the sweep record carries it as artifact
+    # provenance
+    cur_an = current.get("analysis")
+    if cur_an is not None and cur_an.get("violations", 0) > 0:
+        failures.append(
+            f"analysis: {cur_an['violations']} contract violation(s) "
+            f"recorded in the sweep (run `python -m repro.analysis`)")
+    # canonical kernel-family jaxpr hashes: drift is warn-only
+    base_h = baseline.get("jaxpr_hashes") or {}
+    cur_h = current.get("jaxpr_hashes") or {}
+    for fam in sorted(set(base_h) & set(cur_h)):
+        if base_h[fam] != cur_h[fam]:
+            warnings.append(
+                f"jaxpr hash drift for kernel family {fam}: "
+                f"{base_h[fam]} -> {cur_h[fam]} (warn-only; expected "
+                f"only when a PR intentionally changes the kernel)")
+    for fam in sorted(set(base_h) - set(cur_h)):
+        warnings.append(f"kernel family {fam} disappeared from the "
+                        f"jaxpr_hashes record")
     pipe = cur_archs.get("cloud_device_k4")
     nopipe = cur_archs.get("cloud_device_k4_unpipelined")
     if pipe is not None and nopipe is not None and \

@@ -129,6 +129,25 @@ def bench_sweep_json(budget: int, out_path: str = SWEEP_JSON) -> dict:
               device_rounds=4, mesh=make_search_mesh(),
               pipeline=False, compile_ahead=False)
 
+    # contract-analysis provenance: lint wall-time + per-rule violation
+    # counts, and the canonical jaxpr hash of every registered kernel
+    # family (compare_sweep hard-fails recorded violations and surfaces
+    # hash drift warn-only — an intentional kernel change moves hashes,
+    # silent drift in an unrelated PR deserves a review look)
+    from repro.analysis import run_report
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    roots = [p for p in (os.path.join(root, d)
+                         for d in ("src", "benchmarks", "examples"))
+             if os.path.isdir(p)]
+    rep = run_report(roots=roots, include_jaxpr=True, include_scan=False)
+    record["analysis"] = dict(
+        lint_seconds=rep["lint"]["seconds"],
+        jaxpr_seconds=rep["jaxpr"]["seconds"],
+        rule_counts=rep["lint"]["rule_counts"],
+        violations=(len(rep["lint"]["violations"])
+                    + len(rep["jaxpr"]["findings"])))
+    record["jaxpr_hashes"] = rep["jaxpr"]["hashes"]
+
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     return record

@@ -1,0 +1,80 @@
+"""Static-analysis subsystem: machine-checks for the repo's three load-
+bearing contracts (COMPAT.md).
+
+Layer 1 — AST contract lint (:mod:`.lint`, :mod:`.rules`): rules R1-R4
+walk Python source, R5 reflects over the live plugin registries.
+
+Layer 2 — jaxpr audit (:mod:`.jaxpr_audit`): traces every registered
+kernel family and asserts no host callbacks, no float64, no transfers
+in scan bodies, and one-compilation-per-family.
+
+Run both as a gate with ``python -m repro.analysis`` (exit code 1 on
+any violation).  Suppress a single lint line with
+``# repro: noqa-contract(R2)`` — suppressions carry the rule id and are
+reviewable in the diff.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from .lint import (Rule, Violation, default_rules, iter_py_files,
+                   lint_file, lint_paths, lint_source)
+
+__all__ = [
+    "Rule", "Violation", "default_rules", "iter_py_files", "lint_file",
+    "lint_paths", "lint_source", "run_report",
+]
+
+#: source roots the gate sweeps, relative to the repo root
+DEFAULT_ROOTS = ("src", "benchmarks", "examples")
+
+
+def run_report(roots: Optional[List[str]] = None,
+               include_jaxpr: bool = True,
+               include_scan: bool = True) -> Dict:
+    """Run both analysis layers and return a JSON-ready report:
+    ``{"lint": {...}, "jaxpr": {...}, "ok": bool}``.  Shared by the
+    ``python -m repro.analysis`` gate and ``benchmarks/run.py`` (which
+    records the timings and rule counts into ``BENCH_sweep.json``)."""
+    import os
+
+    from .rules import ALL_RULES
+    from .rules.r5_registry import check_registries
+
+    if roots is None:
+        roots = [r for r in DEFAULT_ROOTS if os.path.isdir(r)]
+
+    t0 = time.perf_counter()
+    violations = lint_paths(roots)
+    violations += check_registries()
+    lint_s = time.perf_counter() - t0
+
+    rule_counts = {r.rule_id: 0 for r in ALL_RULES}
+    rule_counts["R5"] = 0
+    for v in violations:
+        rule_counts[v.rule] = rule_counts.get(v.rule, 0) + 1
+
+    report: Dict = {
+        "lint": {
+            "roots": list(roots),
+            "violations": [str(v) for v in violations],
+            "rule_counts": rule_counts,
+            "seconds": round(lint_s, 3),
+        },
+    }
+
+    jaxpr_viol: List[Violation] = []
+    if include_jaxpr:
+        from .jaxpr_audit import audit_families
+        t1 = time.perf_counter()
+        jaxpr_viol, hashes = audit_families(include_scan=include_scan)
+        report["jaxpr"] = {
+            "findings": [str(v) for v in jaxpr_viol],
+            "hashes": hashes,
+            "families": len(hashes),
+            "seconds": round(time.perf_counter() - t1, 3),
+        }
+
+    report["ok"] = not violations and not jaxpr_viol
+    return report

@@ -1,0 +1,57 @@
+"""``python -m repro.analysis`` — the contract gate.
+
+Runs the AST contract lint (rules R1-R5) over the source roots and the
+jaxpr audit over every registered kernel family, prints each violation
+as ``path:line: [RULE] message``, and exits non-zero if anything fired.
+There is deliberately no ``--fix``: every violation is either a real
+contract breach (fix the code) or a reviewed exception (annotate the
+line with ``# repro: noqa-contract(RULE)``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import DEFAULT_ROOTS, run_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="SparseMap contract linter + jaxpr auditor")
+    ap.add_argument("roots", nargs="*", default=None,
+                    help=f"source roots to lint (default: "
+                         f"{' '.join(DEFAULT_ROOTS)}, existing only)")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="lint layer only (no kernel tracing; fast)")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="jaxpr-audit the row kernels but skip the ES "
+                         "scan programs (quicker trace)")
+    args = ap.parse_args(argv)
+
+    report = run_report(roots=args.roots or None,
+                        include_jaxpr=not args.skip_jaxpr,
+                        include_scan=not args.no_scan)
+
+    for line in report["lint"]["violations"]:
+        print(line)
+    jx = report.get("jaxpr")
+    if jx:
+        for line in jx["findings"]:
+            print(line)
+
+    n_lint = len(report["lint"]["violations"])
+    n_jax = len(jx["findings"]) if jx else 0
+    counts = ", ".join(f"{k}={v}" for k, v in
+                       sorted(report["lint"]["rule_counts"].items()))
+    print(f"analysis: lint {n_lint} violation(s) [{counts}] in "
+          f"{report['lint']['seconds']}s", file=sys.stderr)
+    if jx:
+        print(f"analysis: jaxpr {n_jax} finding(s) across "
+              f"{jx['families']} kernel families in {jx['seconds']}s",
+              file=sys.stderr)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""The repo-contract rule set.  ``ALL_RULES`` lists the AST rules the
+lint engine runs per file; R5 (registry conformance) is runtime
+reflection — see :func:`repro.analysis.rules.r5_registry.check_registries`.
+"""
+from .r1_traced_bake import TracedBakeRule
+from .r2_rng import RngDeterminismRule
+from .r3_deferred_sync import DeferredSyncRule
+from .r4_counter_lock import CounterLockRule
+from .r5_registry import check_registries
+
+ALL_RULES = [TracedBakeRule, RngDeterminismRule, DeferredSyncRule,
+             CounterLockRule]
+
+__all__ = ["ALL_RULES", "TracedBakeRule", "RngDeterminismRule",
+           "DeferredSyncRule", "CounterLockRule", "check_registries"]

@@ -1,0 +1,130 @@
+"""R1 — no host coercion of traced values inside kernel-builder code.
+
+The structural-vs-traced contract (COMPAT.md, jax_cost module
+docstring): arch/density *numbers* ride in traced arguments
+(``ArchSpec.param_vector`` -> ``plat``, density ``param_row`` rows ->
+``dens_params``, the workload constants), so one XLA compilation serves
+a whole same-structure family.  ``float()``/``int()``/``.item()``/
+``np.asarray`` applied to a traced value inside a kernel bakes the
+number into the program — either a ConcretizationTypeError at trace
+time or, worse, a silent per-arch recompile when the value happens to
+be concrete (a closure constant).  This rule flags those coercions
+inside kernel scopes of ``jax_cost.py`` / ``arch.py`` / ``density.py``.
+
+A *kernel scope* is any function whose parameter list includes one of
+the traced-argument sentinels (``plat``, ``dens_params``, ``consts``,
+``draws``, ``pr`` — the names the kernel builders thread traced values
+through), plus every function nested inside one.  Within a scope the
+traced set seeds from all parameters and propagates through
+assignments to a fixpoint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..lint import Rule, Violation, assign_target_names, dotted_name, names_in
+
+#: parameter names that mark a function as kernel code (traced inputs)
+KERNEL_PARAMS = {"plat", "dens_params", "consts", "draws", "pr"}
+
+#: bare-callable coercions that concretize a traced value
+COERCE_CALLS = {"float", "int", "bool", "complex"}
+#: dotted coercions that materialize a traced array on the host
+COERCE_DOTTED = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+#: method calls that concretize
+COERCE_METHODS = {"item", "tolist"}
+
+FILES = ("repro/core/jax_cost.py", "repro/core/arch.py",
+         "repro/core/density.py")
+
+
+def _func_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    params = [p.arg for p in
+              getattr(a, "posonlyargs", []) + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+class TracedBakeRule(Rule):
+    rule_id = "R1"
+    title = "no float()/int()/.item()/np.asarray on traced kernel values"
+
+    def applies(self, path: str) -> bool:
+        return any(path.endswith(f) for f in FILES)
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not set(_func_params(node)) & KERNEL_PARAMS:
+                continue
+            out.extend(self._check_kernel(node, path))
+        # a kernel root nested in another kernel root is visited twice;
+        # dedupe by location
+        seen = set()
+        uniq = []
+        for v in out:
+            k = (v.line, v.message)
+            if k not in seen:
+                seen.add(k)
+                uniq.append(v)
+        return uniq
+
+    def _check_kernel(self, fn: ast.AST, path: str) -> List[Violation]:
+        # traced set: every parameter of the kernel function and of any
+        # function nested inside it (closures over traced values), then
+        # assignment propagation to a fixpoint
+        traced: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                traced.update(_func_params(node))
+        assigns = [n for n in ast.walk(fn)
+                   if isinstance(n, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign))]
+        for _ in range(8):          # fixpoint; depth is tiny in practice
+            grew = False
+            for a in assigns:
+                if a.value is None:
+                    continue
+                if names_in(a.value) & traced:
+                    tgts = (assign_target_names(a.targets[0])
+                            if isinstance(a, ast.Assign)
+                            else assign_target_names(a.target))
+                    if not tgts <= traced:
+                        traced |= tgts
+                        grew = True
+            if not grew:
+                break
+
+        out: List[Violation] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            coerce = None
+            target = None
+            d = dotted_name(node.func)
+            if d in COERCE_CALLS or d in COERCE_DOTTED:
+                if node.args:
+                    coerce, target = d, node.args[0]
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in COERCE_METHODS:
+                coerce, target = f".{node.func.attr}()", node.func.value
+            if coerce is None or target is None:
+                continue
+            hit = names_in(target) & traced
+            if hit:
+                out.append(Violation(
+                    self.rule_id, path, node.lineno,
+                    f"{coerce} applied to traced value "
+                    f"({', '.join(sorted(hit))}) inside kernel code "
+                    f"bakes a number into the XLA program — keep it in "
+                    f"the traced param vector (COMPAT.md "
+                    f"structural-vs-traced contract)"))
+        return out

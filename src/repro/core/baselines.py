@@ -640,6 +640,45 @@ def round1_rows(method: str, spec: GenomeSpec, budget: int, seed: int,
     return None
 
 
+def steady_rows(method: str, spec: GenomeSpec, budget: int, seed: int,
+                **kw) -> Optional[Tuple[int, ...]]:
+    """Candidate per-round batch sizes ``method`` submits AFTER round 1
+    — the decayed steady-state shapes the pad-watermark eventually
+    settles on.  ``()`` means the task exhausts its budget in round 1
+    and contributes nothing to later mega-batches; ``None`` means the
+    steady shape is not predictable (the signature group then gets no
+    steady-state job).  ES methods return (init-pop, children-per-gen):
+    the post-calibration population round and the elitist per-generation
+    child batch — the two shapes every later round is built from."""
+    r1 = round1_rows(method, spec, budget, seed, **kw)
+    if r1 is None:
+        return None
+    if method in ("sparsemap", "pfce_es", "sage_like"):
+        # the ES generators always seed a population and run generations
+        # once started, even when calibration consumed the paper budget
+        cfg = _es_cfg_for(method, budget, seed, kw)
+        n_elite = max(1, int(cfg.pop_size * cfg.elite_frac))
+        return (cfg.pop_size, cfg.pop_size - n_elite)
+    if method == "standard_es":
+        return None     # translatable-subset row counts are data-dependent
+    remaining = budget - r1
+    if remaining <= 0:
+        return ()
+    if method == "random_mapper":
+        return (min(512, remaining),)
+    if method == "pso":
+        return (int(kw.get("n_particles", 50)),)
+    if method == "mcts":
+        return (min(int(kw.get("rollout_batch", 16)), remaining),)
+    if method == "tbpsa":
+        return (min(int(kw.get("llambda", 48)), remaining),)
+    if method == "ppo":
+        return (min(int(kw.get("batch", 64)), remaining),)
+    if method == "dqn":
+        return (min(int(kw.get("batch", 32)), remaining),)
+    return None
+
+
 def segment_plan(method: str, spec: GenomeSpec, budget: int, seed: int,
                  **kw) -> Optional[Dict]:
     """Predicted :func:`es_ops.segment_shape_key` fields for a segmented

@@ -27,6 +27,12 @@ yield when ``ESConfig.device_rounds > 1``, and :class:`PaddedLayout`,
 the genome-column padding that lets same-signature workloads with
 different prime counts share one compiled scan program (pad columns are
 numerically inert: value 0, upper bound 1).
+
+This module is the ONE sanctioned home for raw RNG in ``repro.core``:
+contract rule R2 (``python -m repro.analysis``, COMPAT.md
+"Machine-checked contracts") forbids ``np.random.*`` / stdlib
+``random`` everywhere else in the core so that every draw reaches the
+kernels as a pre-planned array.
 """
 from __future__ import annotations
 

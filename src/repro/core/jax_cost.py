@@ -1112,10 +1112,11 @@ def _sharded_scan_fn(d: int, n_pad: int, topo: Topology, dens_key: str,
         ax = mesh.axis_names[0]
         fn = jax.jit(shard_map(vfn, mesh=mesh, in_specs=(P(ax),) * 7,
                                out_specs=P(ax)))
-        _SHARD_FNS[key] = fn
-        _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
-                  f"scan:p{n_parents}e{n_elite}g{genes_per}"
-                  f"@{_mesh_ndev(mesh)}")] = fn
+        with _LOCK:
+            _SHARD_FNS[key] = fn
+            _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
+                      f"scan:p{n_parents}e{n_elite}g{genes_per}"
+                      f"@{_mesh_ndev(mesh)}")] = fn
     return fn
 
 
@@ -1133,9 +1134,10 @@ def _sharded_stacked_fn(d: int, n_pad: int, topo: Topology,
         ax = mesh.axis_names[0]
         fn = jax.jit(shard_map(vfn, mesh=mesh, in_specs=(P(ax),) * 13,
                                out_specs=P(ax)))
-        _SHARD_FNS[key] = fn
-        _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
-                  f"stacked@{_mesh_ndev(mesh)}")] = fn
+        with _LOCK:
+            _SHARD_FNS[key] = fn
+            _JIT_FNS[(d, n_pad, topo.fingerprint, dens_key,
+                      f"stacked@{_mesh_ndev(mesh)}")] = fn
     return fn
 
 

@@ -439,7 +439,7 @@ class MultiSearch:
         conservative: a signature group whose round-1 rows cannot all be
         predicted contributes NO job (its family stays unclaimed, so jit
         fallbacks there never count as compile-ahead misses)."""
-        from .baselines import round1_rows, segment_plan
+        from .baselines import round1_rows, segment_plan, steady_rows
         # the worker compiles in list order and a racing dispatch WAITS
         # for its queued key, so order jobs by when the fleet needs
         # them: round-1 shapes first, segment scans next (needed right
@@ -478,6 +478,27 @@ class MultiSearch:
                     total = sum(rows[i] for i in idx)
                     add(jax_cost.stacked_compile_job(
                         model, jax_cost._pad_batch(total)))
+                    # decayed steady-state shapes: once round-1 shapes
+                    # (calibration / first chunks) age out of the pad
+                    # watermark, the mega-batch settles on the sum of
+                    # the survivors' per-round batches
+                    steads = []
+                    for i in idx:
+                        task, kw = infos[i][0], infos[i][1]
+                        try:
+                            steads.append(steady_rows(
+                                task.method, infos[i][2], task.budget,
+                                task.seed, **kw))
+                        except (TypeError, ValueError):
+                            steads.append(None)
+                    if all(s is not None for s in steads):
+                        alive = [s for s in steads if s]
+                        for tot in sorted({sum(s[0] for s in alive),
+                                           sum(s[-1] for s in alive)}):
+                            if tot > 0:
+                                add(jax_cost.stacked_compile_job(
+                                    model, jax_cost._pad_batch(tot)),
+                                    when=late)
                     for v in watermarks(sig[2]):
                         add(jax_cost.stacked_compile_job(model, int(v)),
                             when=late)
@@ -523,7 +544,12 @@ class MultiSearch:
             st.extras = stop.value or {}
             return False
 
-    def run(self) -> Dict[str, SearchResult]:
+    def _task_infos(self) -> List[Tuple]:
+        """One signature-aligned (task, method_kw, spec, evaluator)
+        tuple per task — the prediction inputs
+        :meth:`_compile_ahead_jobs` consumes.  Builds evaluators but
+        starts no request generator, so tests and tooling can inspect
+        the fleet's predicted AOT jobs without running a round."""
         naturals = [(t.workload.ndims,
                      _bucket(max(len(t.workload.prime_factors), 1)))
                     for t in self.tasks]
@@ -541,10 +567,8 @@ class MultiSearch:
                 structured_for[d] = structured_for.get(d, False) or \
                     t.workload.structured_density
 
-        states: List[_TaskState] = []
         infos: List[Tuple] = []
-        for task, natural, name in zip(self.tasks, naturals,
-                                       self.final_names):
+        for task, natural in zip(self.tasks, naturals):
             plat = _platform(task.platform)
             n_pad = pad_for.get(natural[0]) if self.align_signatures \
                 else None
@@ -558,12 +582,22 @@ class MultiSearch:
                 # scan-foldable engines fold k generations per segment;
                 # an explicit per-task device_rounds wins over the fleet's
                 kw.setdefault("device_rounds", self.device_rounds)
-            infos.append((task, dict(kw), spec, ev))
-            gen, tracker = make_requests(task.method, spec, plat,
+            infos.append((task, kw, spec, ev))
+        return infos
+
+    def run(self) -> Dict[str, SearchResult]:
+        infos = self._task_infos()
+        states: List[_TaskState] = []
+        for (task, kw, spec, ev), name in zip(infos, self.final_names):
+            gen, tracker = make_requests(task.method, spec,
+                                         _platform(task.platform),
                                          task.budget, task.seed, **kw)
-            states.append(_TaskState(name=name, gen=gen, tracker=tracker,
-                                     ev=ev, natural=natural,
-                                     method=task.method))
+            states.append(_TaskState(
+                name=name, gen=gen, tracker=tracker, ev=ev,
+                natural=(task.workload.ndims,
+                         _bucket(max(len(task.workload.prime_factors),
+                                     1))),
+                method=task.method))
 
         ca_hits0, ca_misses0 = jax_cost.compile_ahead_counts()
         blocked0 = jax_cost.host_blocked_s()

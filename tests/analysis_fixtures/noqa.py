@@ -1,0 +1,11 @@
+# Suppression fixture: the violating line carries a reviewed
+# noqa-contract annotation naming the rule it waives.
+import numpy as np
+
+
+def jitter(n):
+    return np.random.rand(n)  # repro: noqa-contract(R2)
+
+
+def still_bad(n):
+    return np.random.rand(n)  # a second, unsuppressed violation

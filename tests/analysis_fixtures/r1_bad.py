@@ -1,0 +1,16 @@
+# R1 fixture — VIOLATING: host coercions of traced kernel values.
+import numpy as np
+
+
+def eval_one(genes, plat, dens_params):
+    e_mac = float(plat[3])            # bakes a traced number
+    row = np.asarray(dens_params)     # materializes a traced row
+    scale = plat * 2.0
+    k = int(scale[0])                 # coercion of a propagated value
+    return genes * e_mac + row.sum() + k
+
+
+def nested_builder(plat):
+    def inner(x):
+        return x * plat.item()        # method coercion in a kernel scope
+    return inner

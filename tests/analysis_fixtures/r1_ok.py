@@ -1,0 +1,15 @@
+# R1 fixture — CONFORMING: traced values stay traced; host math only on
+# structural (non-traced) quantities.
+WORD_BYTES = 2.0
+
+
+def eval_one(genes, plat, dens_params):
+    e_mac = plat[3]
+    occ = dens_params[0]
+    return genes * e_mac + occ
+
+
+def builder(topo):
+    wb = float(WORD_BYTES)            # builder-level, not a kernel scope
+    n = int(len(topo))
+    return wb, n

@@ -1,0 +1,11 @@
+# R2 fixture — VIOLATING: global-state / unseeded RNG.
+import random
+
+import numpy as np
+
+
+def draw(n):
+    vals = np.random.rand(n)          # module-global numpy RNG
+    gen = np.random.default_rng()     # unseeded generator
+    x = random.random()               # stdlib global RNG
+    return vals, gen, x

@@ -1,0 +1,9 @@
+# R2 fixture — CONFORMING: explicitly seeded generators only.
+import numpy as np
+
+
+def draw(n, seed):
+    rng = np.random.default_rng(seed)
+    ss = np.random.SeedSequence([seed, n])
+    child = np.random.Generator(np.random.PCG64(seed + 1))
+    return rng.random(n), ss, child

@@ -1,0 +1,11 @@
+# R3 fixture — VIOLATING: eager host sync on deferred dispatch handles.
+import numpy as np
+
+
+def dispatch(models, segs, rows):
+    res = run_segments(models, segs, defer=True)   # noqa: F821
+    ys = np.asarray(res)                # materializes in-flight work
+    handle = eval_stacked(models, rows, defer=True)  # noqa: F821
+    handle.block_until_ready()          # blocks the dispatch path
+    val = float(res)
+    return ys, val

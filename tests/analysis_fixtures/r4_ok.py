@@ -1,0 +1,18 @@
+# R4 fixture — CONFORMING: every mutation under the lock.
+import threading
+
+_LOCK = threading.RLock()
+_DISPATCHES = 0
+_JIT_FNS = {}
+
+
+def record(key, fn):
+    global _DISPATCHES
+    with _LOCK:
+        _DISPATCHES += 1
+        _JIT_FNS[key] = fn
+
+
+def snapshot():
+    with _LOCK:
+        return dict(_JIT_FNS), _DISPATCHES   # reads are fine anywhere

@@ -80,9 +80,10 @@ def main(argv=None):
         # at fixed seeds, one device dispatch per signature per round
         t0 = time.time()
         stats = {}
-        grid = search.run_method_sweep(methods, workloads, plat,
-                                       budget=args.budget, seed=0,
-                                       stats_out=stats)
+        grid = search.run_method_sweep(
+            methods, workloads, plat, budget=args.budget, seed=0,
+            stats_out=stats,
+            config=search.FleetConfig(stack_batches=True))
         for wl in workloads:
             row = {m: grid[m][wl.name].best_edp for m in methods}
             ours = row["sparsemap"]

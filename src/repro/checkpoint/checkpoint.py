@@ -82,6 +82,47 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def save_flat(directory: str, step: int, arrays: dict,
+              extra_meta: Optional[dict] = None,
+              keep_last: int = 3) -> str:
+    """Write a flat ``{key: np.ndarray}`` checkpoint — same staging-dir +
+    atomic-rename + prune machinery as :func:`save`, but restorable
+    WITHOUT a shape-matched target tree (:func:`load_flat`).  The sweep
+    server uses this: fleet state (populations, rng blobs, histories) is
+    variable-shape across rounds and across restarts, so a structural
+    template cannot exist before the read.  ``extra_meta`` lands in
+    ``meta.json`` under ``"extra"`` (JSON-able values only)."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    staging = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-",
+                               dir=directory)
+    keys = sorted(arrays)
+    meta = {"step": step, "flat": True, "keys": keys,
+            "extra": extra_meta or {}, "time": time.time()}
+    for i, k in enumerate(keys):
+        np.save(os.path.join(staging, f"leaf_{i:05d}.npy"),
+                np.asarray(arrays[k]))
+    with open(os.path.join(staging, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    os.rename(staging, final)           # atomic commit
+    _prune(directory, keep_last)
+    return final
+
+
+def load_flat(directory: str, step: int) -> tuple:
+    """Read a :func:`save_flat` checkpoint: ``(arrays, extra_meta)``."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if not meta.get("flat"):
+        raise ValueError(f"{path} is a tree checkpoint; use restore()")
+    arrays = {k: np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+              for i, k in enumerate(meta["keys"])}
+    return arrays, meta.get("extra", {})
+
+
 def restore(directory: str, step: int, target_tree: Any,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``target_tree``; if ``shardings``

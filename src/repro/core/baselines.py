@@ -526,28 +526,60 @@ def pfce_es(spec: GenomeSpec, batch_eval, budget: int, seed: int,
 # -------- request-generator factories (the MultiSearch entry points)
 
 
+def _pop_runtime_kw(kw: Dict) -> Tuple:
+    """Split the process-local runtime extras out of a factory's kwargs
+    (``SearchTask.runtime_kw``, merged in by MultiSearch): warm-start
+    rows, a resume-state dict, and a live state-capture sink.  Popped
+    here so they never reach ESConfig."""
+    return (kw.pop("warm_seeds", None), kw.pop("resume_state", None),
+            kw.pop("state_out", None))
+
+
+def _with_warm_seeds(seeds: Optional[np.ndarray], warm,
+                     length: int) -> Optional[np.ndarray]:
+    """Stack library warm-start rows AHEAD of the engineer-default
+    seeds: warm rows are prior search winners for a similar query, the
+    strongest prior available, so they must survive the
+    ``pop[:len(seeds)]`` injection even when the population is tiny."""
+    if warm is None or len(warm) == 0:
+        return seeds
+    warm = np.asarray(warm, dtype=np.int64).reshape(-1, length)
+    return warm if seeds is None else np.concatenate([warm, seeds])
+
+
 def _factory_sparsemap(spec: GenomeSpec, platform, budget: int, seed: int,
                        **kw) -> Tuple[Requests, _Budget]:
+    warm, resume, state_out = _pop_runtime_kw(kw)
     cfg, seeds = sparsemap_setup(spec, platform, budget, seed, **kw)
     tracker = _Budget(cfg.budget)
-    return evolve_requests(spec, cfg, tracker, seeds=seeds), tracker
+    return evolve_requests(spec, cfg, tracker,
+                           seeds=_with_warm_seeds(seeds, warm,
+                                                  spec.length),
+                           resume=resume, state_out=state_out), tracker
 
 
 def _factory_pfce_es(spec: GenomeSpec, platform, budget: int, seed: int,
                      **kw) -> Tuple[Requests, _Budget]:
+    warm, resume, state_out = _pop_runtime_kw(kw)
     cfg = ESConfig(budget=budget, seed=seed, use_hshi=False,
                    use_custom_ops=False, **kw)
     tracker = _Budget(cfg.budget)
-    return evolve_requests(spec, cfg, tracker), tracker
+    return evolve_requests(spec, cfg, tracker,
+                           seeds=_with_warm_seeds(None, warm,
+                                                  spec.length),
+                           resume=resume, state_out=state_out), tracker
 
 
 def _factory_sage_like(spec: GenomeSpec, platform, budget: int, seed: int,
                        **kw) -> Tuple[Requests, _Budget]:
+    warm, resume, state_out = _pop_runtime_kw(kw)
     cfg, fixed, genome0 = _sage_like_setup(spec, platform, budget, seed,
                                            **kw)
     tracker = _Budget(cfg.budget)
     return evolve_requests(spec, cfg, tracker, fixed_genes=fixed,
-                           seeds=genome0[None, :]), tracker
+                           seeds=_with_warm_seeds(genome0[None, :], warm,
+                                                  spec.length),
+                           resume=resume, state_out=state_out), tracker
 
 
 def _gen_factory(gen_fn: Callable) -> Callable:
@@ -561,6 +593,15 @@ def _gen_factory(gen_fn: Callable) -> Callable:
 def _factory_standard_es(spec: GenomeSpec, platform, budget: int,
                          seed: int, **kw) -> Tuple[Requests, _Budget]:
     from .direct_encoding import direct_requests
+    warm, resume, state_out = _pop_runtime_kw(kw)
+    if warm is not None or resume is not None or state_out is not None:
+        # direct-encoding genomes live in a different space than the
+        # canonical rows the warm-start library stores, and the direct
+        # generator has no generation-boundary capture — refuse rather
+        # than silently drop the caller's durability expectation
+        raise ValueError(
+            "standard_es supports neither warm_seeds nor checkpoint "
+            "resume (direct encoding; see baselines.RESUMABLE_METHODS)")
     tracker = _Budget(budget)
     return direct_requests(spec, tracker, seed, platform=platform,
                            **kw), tracker
@@ -579,6 +620,14 @@ def _factory_standard_es(spec: GenomeSpec, platform, budget: int,
 SEGMENT_METHODS = frozenset({"sparsemap", "pfce_es", "sage_like",
                              "standard_es"})
 
+#: methods whose factories accept library ``warm_seeds`` rows (canonical
+#: genome space) and the ``resume_state``/``state_out`` checkpoint hooks
+#: (``evolve_requests`` family).  The sweep server gates warm-start
+#: injection and checkpointing on this set; other methods run fine but
+#: restart from scratch after a crash.
+WARM_START_METHODS = frozenset({"sparsemap", "pfce_es", "sage_like"})
+RESUMABLE_METHODS = WARM_START_METHODS
+
 
 # ------------------- compile-ahead shape predictors (search.MultiSearch)
 
@@ -587,6 +636,8 @@ def _es_cfg_for(method: str, budget: int, seed: int, kw: Dict) -> ESConfig:
     """The ESConfig the method's factory would build — the factories'
     default arithmetic, re-expressed for shape prediction."""
     params = dict(kw)
+    for k in ("warm_seeds", "resume_state", "state_out"):
+        params.pop(k, None)       # runtime extras never reach ESConfig
     if method == "sparsemap":
         params.setdefault("pop_size", int(min(100, max(24, budget // 20))))
     elif method == "sage_like":

@@ -236,6 +236,31 @@ def family_code(family: str) -> int:
     return _FAMILIES[family][0]
 
 
+def density_to_dict(d: DensityLike) -> Dict:
+    """Wire form of a density description: the registered family name
+    plus the model's dataclass fields (a plain float normalizes to
+    :class:`Uniform` first).  Only registered families serialize — an
+    unregistered custom model has no code the receiving side could
+    rebuild a kernel row from."""
+    m = as_density(d)
+    if m.family not in _FAMILIES or _FAMILIES[m.family][1] is not type(m):
+        raise ValueError(
+            f"density model {type(m).__name__!r} (family {m.family!r}) is "
+            f"not registered; registered families: {sorted(_FAMILIES)}")
+    return {"family": m.family, "fields": dataclasses.asdict(m)}
+
+
+def density_from_dict(d: Dict) -> DensityModel:
+    """Inverse of :func:`density_to_dict`.  Unknown families raise
+    ``ValueError`` naming the registered ones (a server surfaces this to
+    the client instead of dying)."""
+    fam = d["family"]
+    if fam not in _FAMILIES:
+        raise ValueError(f"unknown density family {fam!r}; registered "
+                         f"families: {sorted(_FAMILIES)}")
+    return _FAMILIES[fam][1](**d.get("fields", {}))
+
+
 def registered_families() -> Tuple[str, ...]:
     """Registered family names in code order."""
     return tuple(_FAMILIES)

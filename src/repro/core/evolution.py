@@ -332,7 +332,9 @@ def calib_plan(length: int, cfg: ESConfig) -> tuple:
 def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
                     sens: Optional[SensitivityResult] = None,
                     fixed_genes: Optional[Dict[int, int]] = None,
-                    seeds: Optional[np.ndarray] = None) -> Requests:
+                    seeds: Optional[np.ndarray] = None,
+                    resume: Optional[Dict] = None,
+                    state_out: Optional[Dict] = None) -> Requests:
     """The ES as a request generator: ``yield``s every genome batch that
     needs evaluating and is ``send``-ed the evaluator's output dict.
 
@@ -340,6 +342,23 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
     ``search.MultiSearch`` (many concurrent searches round-robined over
     shared jitted evaluators) are built on.  Returns the extras dict via
     ``StopIteration.value``; all bookkeeping lives in ``tracker``.
+
+    Checkpoint/resume (the sweep server's durability contract): pass a
+    dict as ``state_out`` and the generator refreshes
+    ``state_out["resume"]`` at the TOP of every main-loop generation —
+    *before* that generation's rng draws — so a checkpoint taken while
+    the generator is suspended at ``yield kids`` re-draws the in-flight
+    generation identically on restore.  Passing such a captured dict
+    back as ``resume=`` (with ``resume["tracker"]["hist"]`` filled in —
+    the capture records only ``hist_len`` to keep the per-generation
+    cost O(pop), see :func:`snapshot_tracker_hist`) skips calibration /
+    init entirely and restores rng, population, and tracker bit-exactly:
+    the resumed trajectory equals the uninterrupted one at fixed seeds.
+    No ``state_out["resume"]`` exists until the first main-loop
+    generation (the HSHI/calibration prologue is cheap to replay from
+    scratch).  Resume requires ``device_rounds == 1`` — pipelined scan
+    segments keep populations device-resident and are not cleanly
+    checkpointable at a generation boundary.
     """
     rng = np.random.default_rng(cfg.seed)
 
@@ -349,38 +368,65 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
                 g[..., k] = v
         return g
 
-    # ---- sensitivity calibration (needed by HSHI + custom operators) ----
-    # The paper keeps init+calibration under ~10% of total search time; we
-    # shrink the per-gene sampling to respect that at small CI budgets.
-    if (cfg.use_hshi or cfg.use_custom_ops) and sens is None:
-        n_ctx, n_smp = calib_plan(spec.length, cfg)
-        probes, gene_idx, sampled_vals = build_probes(
-            spec, rng, n_contexts=n_ctx, n_samples=n_smp)
-        out = yield probes
-        sens = score_probes(spec, probes, gene_idx, sampled_vals, out, rng,
-                            n_contexts=n_ctx, n_samples=n_smp)
-        tracker.evals += sens.evals_used        # calibration counts
-        tracker.hist.extend([tracker.best] * sens.evals_used)
-
-    # ---- initialization ----
-    if cfg.use_hshi and sens is not None:
-        n_cubes = cfg.n_cubes or cfg.pop_size
-        cube_budget = min(cfg.cube_budget,
-                          max(2, int(0.15 * cfg.budget) // max(n_cubes, 1)))
-        pop = yield from _hshi_requests(spec, sens, rng, cfg.pop_size,
-                                        n_cubes, cube_budget, tracker)
+    if resume is not None:
+        if cfg.device_rounds > 1:
+            raise ValueError(
+                "resume requires device_rounds == 1: scan segments keep "
+                "populations device-resident with no generation-boundary "
+                "checkpoint (COMPAT.md 'Sweep server protocol')")
+        rng.bit_generator.state = resume["rng_state"]
+        sens = resume["sens"]
+        pop = np.asarray(resume["pop"], dtype=np.int64).copy()
+        edp = np.asarray(resume["edp"], dtype=np.float64).copy()
+        gen = int(resume["gen"])
+        since_improve = int(resume["since_improve"])
+        last_best = float(resume["last_best"])
+        total_gens = int(resume["total_gens"])
+        t = resume["tracker"]
+        tracker.evals = int(t["evals"])
+        tracker.valid = int(t["valid"])
+        tracker.best = float(t["best"])
+        tracker.best_genome = None if t.get("best_genome") is None \
+            else np.asarray(t["best_genome"]).copy()
+        tracker.hist = list(t["hist"])
     else:
-        pop = lhs_init(spec, rng, cfg.pop_size)
-    if seeds is not None and len(seeds):
-        pop[: len(seeds)] = seeds[: len(pop)]
-    pop = apply_fixed(pop)
-    out = yield pop
-    edp = tracker.register(pop, out)
+        # -- sensitivity calibration (needed by HSHI + custom operators)
+        # The paper keeps init+calibration under ~10% of total search
+        # time; we shrink the per-gene sampling to respect that at small
+        # CI budgets.
+        if (cfg.use_hshi or cfg.use_custom_ops) and sens is None:
+            n_ctx, n_smp = calib_plan(spec.length, cfg)
+            probes, gene_idx, sampled_vals = build_probes(
+                spec, rng, n_contexts=n_ctx, n_samples=n_smp)
+            out = yield probes
+            sens = score_probes(spec, probes, gene_idx, sampled_vals,
+                                out, rng, n_contexts=n_ctx, n_samples=n_smp)
+            tracker.evals += sens.evals_used        # calibration counts
+            tracker.hist.extend([tracker.best] * sens.evals_used)
+
+        # ---- initialization ----
+        if cfg.use_hshi and sens is not None:
+            n_cubes = cfg.n_cubes or cfg.pop_size
+            cube_budget = min(
+                cfg.cube_budget,
+                max(2, int(0.15 * cfg.budget) // max(n_cubes, 1)))
+            pop = yield from _hshi_requests(spec, sens, rng, cfg.pop_size,
+                                            n_cubes, cube_budget, tracker)
+        else:
+            pop = lhs_init(spec, rng, cfg.pop_size)
+        if seeds is not None and len(seeds):
+            pop[: len(seeds)] = seeds[: len(pop)]
+        pop = apply_fixed(pop)
+        out = yield pop
+        edp = tracker.register(pop, out)
+        gen = 0
+        since_improve = 0
+        last_best = tracker.best
+        total_gens = max(1, (cfg.budget - tracker.evals) // cfg.pop_size)
 
     op_sens = sens if cfg.use_custom_ops else None
     n_parents = max(2, int(cfg.pop_size * cfg.parent_frac))
     n_elite = max(1, int(cfg.pop_size * cfg.elite_frac))
-    total_gens = max(1, (cfg.budget - tracker.evals) // cfg.pop_size)
 
     if cfg.device_rounds > 1:
         if cfg.stagnation_restart:
@@ -394,10 +440,22 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
         extras["sensitivity"] = None if sens is None else sens.scores
         return extras
 
-    gen = 0
-    since_improve = 0
-    last_best = tracker.best
     while not tracker.exhausted:
+        if state_out is not None:
+            # pre-draw capture: restoring this state replays the
+            # CURRENT generation's draws identically (the suspended
+            # ``yield kids`` batch is re-derived, never stored)
+            state_out["resume"] = dict(
+                rng_state=rng.bit_generator.state,
+                pop=pop.copy(), edp=edp.copy(), gen=gen,
+                since_improve=since_improve, last_best=last_best,
+                total_gens=total_gens, sens=sens,
+                tracker=dict(
+                    evals=tracker.evals, valid=tracker.valid,
+                    best=tracker.best,
+                    best_genome=None if tracker.best_genome is None
+                    else tracker.best_genome.copy(),
+                    hist_len=len(tracker.hist)))
         order = np.argsort(edp)
         parents = pop[order[:n_parents]]
         elites = pop[order[:n_elite]].copy()
@@ -432,6 +490,20 @@ def evolve_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,
 
     return dict(generations=gen,
                 sensitivity=None if sens is None else sens.scores)
+
+
+def snapshot_tracker_hist(tracker: _Budget, captured: Dict) -> Dict:
+    """Complete a ``state_out["resume"]`` capture into a self-contained
+    resume dict.  The per-generation capture records only ``hist_len``
+    (copying the full best-so-far history every generation would be
+    O(budget) per round); this copies the matching history prefix out of
+    the still-live tracker — call it at checkpoint-save time, before the
+    process can die."""
+    out = dict(captured)
+    t = dict(captured["tracker"])
+    t["hist"] = list(tracker.hist[: t.pop("hist_len")])
+    out["tracker"] = t
+    return out
 
 
 def _segment_requests(spec: GenomeSpec, cfg: ESConfig, tracker: _Budget,

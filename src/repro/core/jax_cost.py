@@ -316,7 +316,10 @@ def compile_ahead(jobs: Sequence[Tuple[Tuple, object, Tuple]],
                 with _LOCK:
                     _AOT_PENDING.pop(key, None)
 
-    th = threading.Thread(target=work, name="compile-ahead")
+    # daemon=False EXPLICITLY: daemon-ness is inherited from the creating
+    # thread, and the sweep server runs fleets on a daemon worker — the
+    # non-daemon guarantee above must not silently vanish there
+    th = threading.Thread(target=work, name="compile-ahead", daemon=False)
     th.start()
     if wait:
         th.join()

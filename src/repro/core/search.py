@@ -31,6 +31,8 @@ signature instead of one per task:
 from __future__ import annotations
 
 import dataclasses
+import json
+import warnings
 from collections import Counter
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
@@ -45,7 +47,7 @@ from .cost_model import CostReport, Design, evaluate
 from .encoding import GenomeSpec
 from .evolution import SearchResult, _Budget
 from .jax_cost import JaxCostModel, _bucket
-from .workload import Workload
+from .workload import Workload, workload_from_dict, workload_to_dict
 
 #: anything that names hardware: a Platform/arch name, a Platform, or an
 #: ArchSpec (see repro.core.arch.as_arch)
@@ -247,12 +249,113 @@ def default_device_rounds(backend: Optional[str] = None) -> int:
     return _DEFAULT_DEVICE_ROUNDS.get(backend, 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """The fleet runtime configuration — every knob
+    :class:`MultiSearch` accepts, in one validated, frozen, serializable
+    object (``MultiSearch(tasks, FleetConfig(...))``).  This replaces the
+    eight accreted ``MultiSearch.__init__`` kwargs (still accepted as
+    deprecated aliases) and doubles as the sweep server's wire schema:
+    ``to_json()``/``from_json()`` round-trip everything except ``mesh``,
+    which is a process-local ``jax.sharding.Mesh`` and must be rebuilt on
+    the serving side.
+
+    ``device_rounds=None`` defers to the per-backend default
+    (:func:`default_device_rounds`); :meth:`resolved_device_rounds`
+    resolves it in exactly one place and reports the provenance string
+    the fleet ``stats`` record."""
+
+    align_signatures: bool = True
+    stack_batches: bool = False
+    pad_policies: Dict[str, PadPolicy] = \
+        dataclasses.field(default_factory=dict)
+    device_rounds: Optional[int] = None
+    mesh: object = None
+    device_execute: bool = True
+    pipeline: bool = True
+    compile_ahead: bool = True
+
+    def __post_init__(self):
+        for flag in ("align_signatures", "stack_batches",
+                     "device_execute", "pipeline", "compile_ahead"):
+            object.__setattr__(self, flag, bool(getattr(self, flag)))
+        if self.device_rounds is not None:
+            if int(self.device_rounds) < 1:
+                raise ValueError("device_rounds must be >= 1")
+            object.__setattr__(self, "device_rounds",
+                               int(self.device_rounds))
+        pols = {}
+        for fp, pol in (self.pad_policies or {}).items():
+            if isinstance(pol, dict):
+                pol = PadPolicy(**pol)
+            if not isinstance(pol, PadPolicy):
+                raise TypeError(f"pad_policies[{fp!r}] must be a "
+                                f"PadPolicy or dict, got {type(pol)}")
+            pols[str(fp)] = pol
+        object.__setattr__(self, "pad_policies", pols)
+
+    def resolved_device_rounds(self) -> Tuple[int, str]:
+        """``(value, provenance)``: the explicit value, or the
+        per-backend default (CPU=1, documented at
+        ``_DEFAULT_DEVICE_ROUNDS``) tagged ``"default:<backend>"``."""
+        if self.device_rounds is None:
+            import jax
+            backend = jax.default_backend()
+            return default_device_rounds(backend), f"default:{backend}"
+        return self.device_rounds, "explicit"
+
+    def to_json_dict(self) -> Dict:
+        if self.mesh is not None:
+            raise ValueError(
+                "FleetConfig.mesh is process-local (a jax Mesh) and "
+                "cannot be serialized; rebuild the mesh on the serving "
+                "side and attach it there")
+        return dict(
+            version=1,
+            align_signatures=self.align_signatures,
+            stack_batches=self.stack_batches,
+            pad_policies={fp: dataclasses.asdict(pol)
+                          for fp, pol in sorted(self.pad_policies.items())},
+            device_rounds=self.device_rounds,
+            device_execute=self.device_execute,
+            pipeline=self.pipeline,
+            compile_ahead=self.compile_ahead)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data: Union[str, Dict]) -> "FleetConfig":
+        d = dict(json.loads(data) if isinstance(data, str) else data)
+        version = d.pop("version", 1)
+        if version != 1:
+            raise ValueError(f"unknown FleetConfig schema version "
+                             f"{version!r}")
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown FleetConfig fields: "
+                             f"{sorted(unknown)}")
+        return cls(**d)
+
+
+#: sentinel distinguishing "kwarg not passed" from any real value in the
+#: deprecated MultiSearch keyword aliases
+_UNSET = object()
+
+
 @dataclasses.dataclass
 class SearchTask:
     """One (method, workload, platform) search in a :class:`MultiSearch`
     fleet.  ``method`` must have a request generator
     (``baselines.REQUEST_METHODS``); ``method_kw`` is forwarded to its
-    factory (``es_kw`` is the pre-method-agnostic alias and is merged in).
+    factory.  ``es_kw`` is the deprecated pre-method-agnostic alias —
+    still merged (``method_kw`` wins on conflicts) but it warns.
+
+    ``runtime_kw`` carries process-local factory extras the wire schema
+    must not see — warm-start ``seeds`` rows, ``resume_state`` /
+    ``state_out`` checkpoint hooks (the sweep server's durability path).
+    It is excluded from ``to_json()`` and from the compile-ahead
+    predictors.
     """
     workload: Workload
     platform: PlatformLike = "cloud"
@@ -262,6 +365,8 @@ class SearchTask:
     method: str = "sparsemap"
     method_kw: Dict = dataclasses.field(default_factory=dict)
     es_kw: Dict = dataclasses.field(default_factory=dict)
+    runtime_kw: Dict = dataclasses.field(default_factory=dict,
+                                         repr=False, compare=False)
 
     def __post_init__(self):
         if self.method not in REQUEST_METHODS:
@@ -269,6 +374,10 @@ class SearchTask:
                 f"method {self.method!r} has no request generator; "
                 f"have {sorted(REQUEST_METHODS)}")
         if self.es_kw:
+            warnings.warn(
+                "SearchTask.es_kw is deprecated; pass method_kw=... "
+                "(merge semantics preserved: method_kw wins)",
+                DeprecationWarning, stacklevel=3)
             self.method_kw = {**self.es_kw, **self.method_kw}
 
     def resolved_name(self) -> str:
@@ -277,6 +386,47 @@ class SearchTask:
         base = f"{self.workload.name}@{_platform(self.platform).name}"
         return base if self.method == "sparsemap" else \
             f"{self.method}:{base}"
+
+    def to_json_dict(self) -> Dict:
+        """JSON-able wire form: the workload by its ``cache_key`` fields
+        (density models via registered family names), the platform by
+        registry name, and the method's factory kwargs.  ``runtime_kw``
+        (process-local) and ``es_kw`` (already merged) are excluded —
+        a server query is exactly this dict plus a FleetConfig
+        fragment."""
+        return dict(
+            version=1,
+            workload=workload_to_dict(self.workload),
+            platform=_platform(self.platform).name,
+            budget=int(self.budget),
+            seed=int(self.seed),
+            name=self.name,
+            method=self.method,
+            method_kw=dict(self.method_kw))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data: Union[str, Dict]) -> "SearchTask":
+        d = dict(json.loads(data) if isinstance(data, str) else data)
+        version = d.pop("version", 1)
+        if version != 1:
+            raise ValueError(f"unknown SearchTask schema version "
+                             f"{version!r}")
+        unknown = set(d) - {"workload", "platform", "budget", "seed",
+                            "name", "method", "method_kw"}
+        if unknown:
+            raise ValueError(f"unknown SearchTask fields: "
+                             f"{sorted(unknown)}")
+        return cls(
+            workload=workload_from_dict(d["workload"]),
+            platform=d.get("platform", "cloud"),
+            budget=int(d.get("budget", 20_000)),
+            seed=int(d.get("seed", 0)),
+            name=d.get("name"),
+            method=d.get("method", "sparsemap"),
+            method_kw=dict(d.get("method_kw") or {}))
 
 
 @dataclasses.dataclass
@@ -366,44 +516,62 @@ class MultiSearch:
     ...), so no two tasks ever silently share a results key.
     """
 
-    def __init__(self, tasks: Iterable, align_signatures: bool = True,
-                 stack_batches: bool = False,
-                 pad_policies: Optional[Dict[str, PadPolicy]] = None,
-                 device_rounds: Optional[int] = None, mesh=None,
-                 device_execute: bool = True, pipeline: bool = True,
-                 compile_ahead: bool = True):
+    def __init__(self, tasks: Iterable,
+                 config: Optional[FleetConfig] = None, *,
+                 align_signatures=_UNSET, stack_batches=_UNSET,
+                 pad_policies=_UNSET, device_rounds=_UNSET, mesh=_UNSET,
+                 device_execute=_UNSET, pipeline=_UNSET,
+                 compile_ahead=_UNSET):
         norm: List[SearchTask] = []
         for t in tasks:
-            if isinstance(t, SearchTask):
-                norm.append(t)
-            elif isinstance(t, Workload):
-                norm.append(SearchTask(t))
-            else:
-                norm.append(SearchTask(*t))
+            norm.append(self._as_task(t))
         if not norm:
             raise ValueError("MultiSearch needs at least one task")
+        legacy = {k: v for k, v in dict(
+            align_signatures=align_signatures,
+            stack_batches=stack_batches, pad_policies=pad_policies,
+            device_rounds=device_rounds, mesh=mesh,
+            device_execute=device_execute, pipeline=pipeline,
+            compile_ahead=compile_ahead).items() if v is not _UNSET}
+        if legacy:
+            if config is not None:
+                raise ValueError(
+                    f"pass config=FleetConfig(...) OR the legacy "
+                    f"kwargs, not both (got config and "
+                    f"{sorted(legacy)})")
+            warnings.warn(
+                f"MultiSearch({', '.join(sorted(legacy))}=...) keyword "
+                f"configuration is deprecated; pass "
+                f"config=FleetConfig(...)", DeprecationWarning,
+                stacklevel=2)
+            if legacy.get("pad_policies") is None:
+                legacy["pad_policies"] = {}
+            config = FleetConfig(**legacy)
+        if config is None:
+            config = FleetConfig()
         self.tasks = norm
-        self.align_signatures = align_signatures
-        self.stack_batches = stack_batches
-        self.pad_policies = dict(pad_policies or {})
-        if device_rounds is None:
-            # per-backend default (CPU=1: documented at
-            # _DEFAULT_DEVICE_ROUNDS); stats record value + provenance
-            import jax
-            backend = jax.default_backend()
-            self.device_rounds = default_device_rounds(backend)
-            self.device_rounds_source = f"default:{backend}"
-        else:
-            if device_rounds < 1:
-                raise ValueError("device_rounds must be >= 1")
-            self.device_rounds = int(device_rounds)
-            self.device_rounds_source = "explicit"
-        self.mesh = mesh
-        self.device_execute = bool(device_execute)
-        self.pipeline = bool(pipeline)
-        self.compile_ahead = bool(compile_ahead)
+        self.config = config
+        # resolved views (one resolution point: FleetConfig)
+        self.align_signatures = config.align_signatures
+        self.stack_batches = config.stack_batches
+        self.pad_policies = dict(config.pad_policies)
+        self.device_rounds, self.device_rounds_source = \
+            config.resolved_device_rounds()
+        self.mesh = config.mesh
+        self.device_execute = config.device_execute
+        self.pipeline = config.pipeline
+        self.compile_ahead = config.compile_ahead
         self.final_names: List[str] = self._resolve_names(norm)
         self.stats: Dict = {}
+        self._started = False
+
+    @staticmethod
+    def _as_task(t) -> SearchTask:
+        if isinstance(t, SearchTask):
+            return t
+        if isinstance(t, Workload):
+            return SearchTask(t)
+        return SearchTask(*t)
 
     def _pad_policy(self, topology_fingerprint: str) -> PadPolicy:
         if topology_fingerprint in self.pad_policies:
@@ -566,6 +734,11 @@ class MultiSearch:
                 pad_for[d] = max(pad_for.get(d, 0), bucket)
                 structured_for[d] = structured_for.get(d, False) or \
                     t.workload.structured_density
+        # kept for mid-run admission: a task admitted later aligns UP to
+        # the group's current bucket/density mode (never re-padding the
+        # already-compiled incumbents)
+        self._pad_for = pad_for
+        self._structured_for = structured_for
 
         infos: List[Tuple] = []
         for task, natural in zip(self.tasks, naturals):
@@ -585,13 +758,22 @@ class MultiSearch:
             infos.append((task, kw, spec, ev))
         return infos
 
-    def run(self) -> Dict[str, SearchResult]:
+    def start(self) -> None:
+        """Build evaluators, queue compile-ahead jobs, and prime every
+        task's request generator — the fleet is then live and
+        :meth:`step` advances it one driver iteration at a time.
+        Idempotent; :meth:`run` is ``start(); while step(): pass;
+        finish()`` and is bit-identical to the pre-incremental driver."""
+        if self._started:
+            return
+        self._started = True
         infos = self._task_infos()
         states: List[_TaskState] = []
         for (task, kw, spec, ev), name in zip(infos, self.final_names):
             gen, tracker = make_requests(task.method, spec,
                                          _platform(task.platform),
-                                         task.budget, task.seed, **kw)
+                                         task.budget, task.seed,
+                                         **{**kw, **task.runtime_kw})
             states.append(_TaskState(
                 name=name, gen=gen, tracker=tracker, ev=ev,
                 natural=(task.workload.ndims,
@@ -599,8 +781,8 @@ class MultiSearch:
                                      1))),
                 method=task.method))
 
-        ca_hits0, ca_misses0 = jax_cost.compile_ahead_counts()
-        blocked0 = jax_cost.host_blocked_s()
+        self._ca0 = jax_cost.compile_ahead_counts()
+        self._blocked0 = jax_cost.host_blocked_s()
         if self.compile_ahead:
             # AOT-compile the predicted round-1 + watermark + scan shapes
             # on a background thread NOW — the compile spike overlaps the
@@ -613,166 +795,264 @@ class MultiSearch:
         # group same-signature tasks so they share warm compilations (and,
         # when stacking, one mega-batch); stable within a signature
         states.sort(key=lambda s: s.signature)
-
-        alive: List[_TaskState] = []
+        self._states = states
+        self._alive: List[_TaskState] = []
+        self._done: List[str] = []
         for st in states:
             try:
                 st.req = next(st.gen)
-                alive.append(st)
+                self._alive.append(st)
             except StopIteration as stop:
                 st.extras = stop.value or {}
+                self._done.append(st.name)
+        self._pad_hwm: Dict[Tuple[int, int, str], int] = {}
+        self._pad_recent: Dict[Tuple[int, int, str],
+                               List[Tuple[int, int]]] = {}
+        self._wm_hist: Dict[Tuple[int, int, str], List[int]] = {}
+        self._rounds = 0     # weighted generation clock (k per segment)
+        self._host_syncs = 0   # driver loop iterations (host roundtrips)
+        self._seg_syncs = 0    # iterations that device-advanced segments
+        self._seg_rounds = 0   # generation rounds covered by those
+        self._dispatch0 = jax_cost.dispatch_count()
 
-        # Adaptive per-signature mega-batch shape: the pad floor grows to
-        # the largest padded round immediately (shrinking fleets keep
-        # hitting the warm shape), and decays to the recent maximum after
-        # ``decay_rounds`` consecutive rounds needing at most
-        # ``decay_ratio`` of the current shape — one extra XLA trace
-        # instead of paying mostly-padding kernel compute every round
-        # after a one-off spike (e.g. round-1 calibration probes +
-        # random_mapper's 512-row chunks).  The grow/decay constants are
-        # a per-TOPOLOGY :class:`PadPolicy` (each topology compiles its
-        # own kernel family, so the retrace trade-off is measured per
-        # topology); the per-round watermark trajectory lands in
-        # ``stats["pad_watermarks"]`` for cross-PR tracking.
-        pad_hwm: Dict[Tuple[int, int, str], int] = {}
-        # (target, weight) observations; weight = search rounds the fleet
-        # clock advanced at that observation, so quiet-round decay scales
-        # with device-segment length (one host observation per k rounds
-        # must count as k quiet rounds, not 1 — otherwise a post-spike
-        # watermark never decays under segmented fleets)
-        pad_recent: Dict[Tuple[int, int, str],
-                         List[Tuple[int, int]]] = {}
-        wm_hist: Dict[Tuple[int, int, str], List[int]] = {}
-        rounds = 0          # weighted generation clock (k per segment)
-        host_syncs = 0      # driver loop iterations (host round-trips)
-        seg_syncs = 0       # iterations that device-advanced a segment
-        seg_rounds = 0      # generation rounds covered by those
-        dispatch0 = jax_cost.dispatch_count()
-        while alive:
-            pending: List[_TaskState] = []
-            seg_states = [st for st in alive
-                          if isinstance(st.req, DeviceSegment)]
-            plain = [st for st in alive
-                     if not isinstance(st.req, DeviceSegment)]
-            # one iteration advances segmented tasks by k generations and
-            # per-round tasks by 1; the fleet's round clock moves by the
-            # largest stride taken this iteration
-            iter_weight = 0
-            if seg_states and self.device_execute:
-                seg_groups: Dict[Tuple, List[_TaskState]] = {}
-                for st in seg_states:
-                    key = st.signature + es_ops.segment_shape_key(st.req)
-                    seg_groups.setdefault(key, []).append(st)
-                for key in sorted(seg_groups):
-                    grp = seg_groups[key]
-                    iter_weight = max(iter_weight, grp[0].req.rounds)
-                    # with pipeline=True the SegmentResults come back
-                    # unresolved (defer): the generators stash them, yield
-                    # the NEXT segment from the device-resident carry, and
-                    # only then resolve round N — the blocking conversion
-                    # overlaps round N+1's device execution (COMPAT.md
-                    # "Pipelined dispatch contract")
-                    segres = jax_cost.run_segments(
-                        [s.ev for s in grp], [s.req for s in grp],
-                        mesh=self.mesh, defer=self.pipeline)
-                    for st, res in zip(grp, segres):
-                        if self._advance(st, res):
-                            pending.append(st)
-            elif seg_states:
-                # host-loop reference path: the generator replays the
-                # identical pre-drawn plan per-round (its next yield is a
-                # plain batch, so the task rejoins the per-round path)
-                for st in seg_states:
-                    if self._advance(st, None):
+    def admit(self, task, name: Optional[str] = None) -> str:
+        """Admit one more task into the RUNNING fleet (the sweep
+        server's entry point: one more user query costs rows in an
+        already-dispatched mega-batch, not a new fleet).  The newcomer
+        aligns UP to its signature group's current prime bucket and
+        density mode — incumbents are never re-padded, so their warm
+        compilations survive — and joins the group's mega-batch on the
+        next :meth:`step`.  Returns the resolved (collision-suffixed)
+        task name.  Compile-ahead prediction covers only the starting
+        fleet; an admitted task with a novel signature jit-compiles on
+        first dispatch."""
+        task = self._as_task(task)
+        self.start()
+        wl = task.workload
+        d = wl.ndims
+        bucket = _bucket(max(len(wl.prime_factors), 1))
+        n_pad = None
+        structured = False
+        if self.align_signatures:
+            self._pad_for[d] = max(self._pad_for.get(d, 0), bucket)
+            self._structured_for[d] = \
+                self._structured_for.get(d, False) or \
+                wl.structured_density
+            n_pad = self._pad_for[d]
+            structured = self._structured_for[d]
+            if n_pad == bucket:
+                n_pad = None
+        plat = _platform(task.platform)
+        spec, ev = get_evaluator(wl, plat, n_pad=n_pad,
+                                 structured=structured)
+        kw = dict(task.method_kw)
+        if self.device_rounds > 1 and task.method in SEGMENT_METHODS:
+            kw.setdefault("device_rounds", self.device_rounds)
+        base = name or task.resolved_name()
+        resolved, k = base, 0
+        while resolved in self.final_names:
+            resolved = f"{base}#{k}"
+            k += 1
+        gen, tracker = make_requests(task.method, spec, plat,
+                                     task.budget, task.seed,
+                                     **{**kw, **task.runtime_kw})
+        st = _TaskState(name=resolved, gen=gen, tracker=tracker, ev=ev,
+                        natural=(d, bucket), method=task.method)
+        self.tasks.append(task)
+        self.final_names.append(resolved)
+        self._states.append(st)
+        try:
+            st.req = next(st.gen)
+            self._alive.append(st)
+        except StopIteration as stop:
+            st.extras = stop.value or {}
+            self._done.append(st.name)
+        return resolved
+
+    @property
+    def done(self) -> bool:
+        """True once every task (initial + admitted) has retired."""
+        return self._started and not self._alive
+
+    def pop_done(self) -> List[Tuple[str, SearchResult]]:
+        """Drain the retirement queue: ``(name, result)`` for every task
+        that finished since the last call (the server streams these to
+        their clients and feeds the warm-start library)."""
+        out = [(n, self.result_of(n)) for n in self._done]
+        self._done = []
+        return out
+
+    def result_of(self, name: str) -> SearchResult:
+        """The (possibly in-flight) result of one task by resolved
+        name — retired tasks get their final result, live tasks a
+        best-so-far snapshot."""
+        for st in self._states:
+            if st.name == name:
+                return self._result_for(st)
+        raise KeyError(f"no task named {name!r}; have "
+                       f"{self.final_names}")
+
+    def step(self) -> bool:
+        """One driver iteration: advance segmented tasks by k
+        generations and per-round tasks by 1 (mega-batched per
+        signature).  Retired tasks land in the :meth:`pop_done` queue.
+        Returns True while any task is still alive.
+
+        The pad floor (mega-batch watermark) grows to the largest padded
+        round immediately (shrinking fleets keep hitting the warm
+        shape), and decays to the recent maximum after ``decay_rounds``
+        consecutive rounds each needing at most ``decay_ratio`` of the
+        current shape — one extra XLA trace instead of paying
+        mostly-padding kernel compute every round after a one-off spike
+        (e.g. round-1 calibration probes + random_mapper's 512-row
+        chunks).  The grow/decay constants are a per-TOPOLOGY
+        :class:`PadPolicy`; the per-round watermark trajectory lands in
+        ``stats["pad_watermarks"]`` for cross-PR tracking.  The
+        ``pad_recent`` observations are (target, weight) pairs; weight =
+        search rounds the fleet clock advanced at that observation, so
+        quiet-round decay scales with device-segment length (one host
+        observation per k rounds must count as k quiet rounds, not 1 —
+        otherwise a post-spike watermark never decays under segmented
+        fleets)."""
+        self.start()
+        alive = self._alive
+        if not alive:
+            return False
+        pad_hwm = self._pad_hwm
+        pad_recent = self._pad_recent
+        wm_hist = self._wm_hist
+        pending: List[_TaskState] = []
+        seg_states = [st for st in alive
+                      if isinstance(st.req, DeviceSegment)]
+        plain = [st for st in alive
+                 if not isinstance(st.req, DeviceSegment)]
+        # one iteration advances segmented tasks by k generations and
+        # per-round tasks by 1; the fleet's round clock moves by the
+        # largest stride taken this iteration
+        iter_weight = 0
+        if seg_states and self.device_execute:
+            seg_groups: Dict[Tuple, List[_TaskState]] = {}
+            for st in seg_states:
+                key = st.signature + es_ops.segment_shape_key(st.req)
+                seg_groups.setdefault(key, []).append(st)
+            for key in sorted(seg_groups):
+                grp = seg_groups[key]
+                iter_weight = max(iter_weight, grp[0].req.rounds)
+                # with pipeline=True the SegmentResults come back
+                # unresolved (defer): the generators stash them, yield
+                # the NEXT segment from the device-resident carry, and
+                # only then resolve round N — the blocking conversion
+                # overlaps round N+1's device execution (COMPAT.md
+                # "Pipelined dispatch contract")
+                segres = jax_cost.run_segments(
+                    [s.ev for s in grp], [s.req for s in grp],
+                    mesh=self.mesh, defer=self.pipeline)
+                for st, res in zip(grp, segres):
+                    if self._advance(st, res):
                         pending.append(st)
-            if seg_states and self.device_execute:
-                seg_syncs += 1
-                seg_rounds += iter_weight
-            if plain:
-                iter_weight = max(iter_weight, 1)
-            if self.stack_batches:
-                groups: Dict[Tuple[int, int, str],
-                             List[_TaskState]] = {}
-                for st in plain:
-                    groups.setdefault(st.signature, []).append(st)
-                # two-phase round: FIRST enqueue every signature group's
-                # mega-batch (with pipeline=True the dispatches return
-                # StackedPending handles, so all groups' device work is
-                # in flight together), THEN finalize + advance in the
-                # same sorted order — round N's host-blocking conversion
-                # of group i overlaps groups i+1..n computing.  The
-                # watermark bookkeeping is value-independent (row counts
-                # are known at dispatch), so it stays in dispatch order
-                # and pipeline on/off cannot change any padded shape.
-                dispatched: List[Tuple[List[_TaskState], object]] = []
-                for sig in sorted(groups):
-                    grp = groups[sig]
-                    pol = self._pad_policy(sig[2])
-                    hwm = pad_hwm.get(sig, 0)
-                    outs = jax_cost.eval_stacked(
-                        [s.ev for s in grp], [s.req for s in grp],
-                        pad_floor=hwm, mesh=self.mesh,
-                        defer=self.pipeline)
-                    dispatched.append((grp, outs))
-                    target = jax_cost._pad_batch(
-                        sum(len(s.req) for s in grp))
-                    hist = pad_recent.setdefault(sig, [])
-                    hist.append((target, max(iter_weight, 1)))
-                    wtot = sum(w for _, w in hist)
-                    while hist and wtot - hist[0][1] >= pol.decay_rounds:
-                        wtot -= hist.pop(0)[1]
-                    if target > hwm:
-                        pad_hwm[sig] = target
-                        hist.clear()
-                    elif wtot >= pol.decay_rounds and \
-                            all(t <= hwm * pol.decay_ratio
-                                for t, _ in hist):
-                        pad_hwm[sig] = max(t for t, _ in hist)
-                        hist.clear()
-                    wm_hist.setdefault(sig, []).append(pad_hwm[sig])
-                for grp, outs in dispatched:
-                    if isinstance(outs, jax_cost.StackedPending):
-                        outs = outs.finalize()
-                    for st, out in zip(grp, outs):
-                        if self._advance(st, out):
-                            pending.append(st)
-            else:
-                for st in plain:
-                    if self._advance(st, st.ev(st.req)):
+        elif seg_states:
+            # host-loop reference path: the generator replays the
+            # identical pre-drawn plan per-round (its next yield is a
+            # plain batch, so the task rejoins the per-round path)
+            for st in seg_states:
+                if self._advance(st, None):
+                    pending.append(st)
+        if seg_states and self.device_execute:
+            self._seg_syncs += 1
+            self._seg_rounds += iter_weight
+        if plain:
+            iter_weight = max(iter_weight, 1)
+        if self.stack_batches:
+            groups: Dict[Tuple[int, int, str],
+                         List[_TaskState]] = {}
+            for st in plain:
+                groups.setdefault(st.signature, []).append(st)
+            # two-phase round: FIRST enqueue every signature group's
+            # mega-batch (with pipeline=True the dispatches return
+            # StackedPending handles, so all groups' device work is
+            # in flight together), THEN finalize + advance in the
+            # same sorted order — round N's host-blocking conversion
+            # of group i overlaps groups i+1..n computing.  The
+            # watermark bookkeeping is value-independent (row counts
+            # are known at dispatch), so it stays in dispatch order
+            # and pipeline on/off cannot change any padded shape.
+            dispatched: List[Tuple[List[_TaskState], object]] = []
+            for sig in sorted(groups):
+                grp = groups[sig]
+                pol = self._pad_policy(sig[2])
+                hwm = pad_hwm.get(sig, 0)
+                outs = jax_cost.eval_stacked(
+                    [s.ev for s in grp], [s.req for s in grp],
+                    pad_floor=hwm, mesh=self.mesh,
+                    defer=self.pipeline)
+                dispatched.append((grp, outs))
+                target = jax_cost._pad_batch(
+                    sum(len(s.req) for s in grp))
+                hist = pad_recent.setdefault(sig, [])
+                hist.append((target, max(iter_weight, 1)))
+                wtot = sum(w for _, w in hist)
+                while hist and wtot - hist[0][1] >= pol.decay_rounds:
+                    wtot -= hist.pop(0)[1]
+                if target > hwm:
+                    pad_hwm[sig] = target
+                    hist.clear()
+                elif wtot >= pol.decay_rounds and \
+                        all(t <= hwm * pol.decay_ratio
+                            for t, _ in hist):
+                    pad_hwm[sig] = max(t for t, _ in hist)
+                    hist.clear()
+                wm_hist.setdefault(sig, []).append(pad_hwm[sig])
+            for grp, outs in dispatched:
+                if isinstance(outs, jax_cost.StackedPending):
+                    outs = outs.finalize()
+                for st, out in zip(grp, outs):
+                    if self._advance(st, out):
                         pending.append(st)
-            alive = pending
-            rounds += iter_weight
-            host_syncs += 1
+        else:
+            for st in plain:
+                if self._advance(st, st.ev(st.req)):
+                    pending.append(st)
+        live = {id(st) for st in pending}
+        for st in alive:
+            if id(st) not in live:
+                self._done.append(st.name)
+        self._alive = pending
+        self._rounds += iter_weight
+        self._host_syncs += 1
+        return bool(self._alive)
 
-        # compile-ahead jobs still queued were predicted for dispatches
-        # that will never come — stop burning cores on them
-        jax_cost.compile_ahead_quiesce()
+    @staticmethod
+    def _result_for(st: _TaskState) -> SearchResult:
+        extras = dict(st.extras or {})
+        extras["signature"] = st.signature
+        extras["natural_signature"] = st.natural
+        extras.setdefault("method", st.method)
+        extras.setdefault("arch", st.ev.arch)
+        return SearchResult(
+            best_edp=st.tracker.best,
+            best_genome=st.tracker.best_genome,
+            history=np.asarray(st.tracker.hist),
+            evals=st.tracker.evals,
+            valid_evals=st.tracker.valid,
+            extras=extras)
 
-        results: Dict[str, SearchResult] = {}
-        for st in states:
-            extras = dict(st.extras or {})
-            extras["signature"] = st.signature
-            extras["natural_signature"] = st.natural
-            extras.setdefault("method", st.method)
-            extras.setdefault("arch", st.ev.arch)
-            results[st.name] = SearchResult(
-                best_edp=st.tracker.best,
-                best_genome=st.tracker.best_genome,
-                history=np.asarray(st.tracker.hist),
-                evals=st.tracker.evals,
-                valid_evals=st.tracker.valid,
-                extras=extras)
+    def stats_snapshot(self) -> Dict:
+        """The fleet stats as of now — same shape as the final
+        ``stats``, computable mid-run (the server's ``stats`` op)."""
+        self.start()
         # host_syncs_per_round: 1.0 for per-round fleets; for segmented
         # fleets the steady-state metric is over the segment phase (the
         # HSHI/calibration prologue is inherently host-driven, so the
         # whole-run ratio can never reach 1/k) — seg iterations each
         # cover k generations with ONE host sync
-        hspr = (seg_syncs / seg_rounds) if seg_rounds else \
-            (host_syncs / rounds if rounds else 1.0)
+        hspr = (self._seg_syncs / self._seg_rounds) if self._seg_rounds \
+            else (self._host_syncs / self._rounds if self._rounds
+                  else 1.0)
         ca_hits, ca_misses = jax_cost.compile_ahead_counts()
-        self.stats = dict(
-            rounds=rounds,
-            host_syncs=host_syncs,
+        ca_hits0, ca_misses0 = self._ca0
+        return dict(
+            rounds=self._rounds,
+            host_syncs=self._host_syncs,
             host_syncs_per_round=hspr,
             device_rounds=self.device_rounds,
             device_rounds_source=self.device_rounds_source,
@@ -780,20 +1060,35 @@ class MultiSearch:
             compile_ahead=self.compile_ahead,
             compile_ahead_hits=ca_hits - ca_hits0,
             compile_ahead_misses=ca_misses - ca_misses0,
-            host_blocked_s=jax_cost.host_blocked_s() - blocked0,
+            host_blocked_s=jax_cost.host_blocked_s() - self._blocked0,
             devices=jax_cost._mesh_ndev(self.mesh),
-            dispatches=jax_cost.dispatch_count() - dispatch0,
-            signatures=sorted({s.signature for s in states}),
-            natural_signatures=sorted({s.natural for s in states}),
+            dispatches=jax_cost.dispatch_count() - self._dispatch0,
+            signatures=sorted({s.signature for s in self._states}),
+            natural_signatures=sorted({s.natural
+                                       for s in self._states}),
             # per-signature mega-batch watermark trajectory + the policy
             # that produced it, keyed "d{ndims}_p{bucket}_{topology}"
             pad_watermarks={
                 f"d{sig[0]}_p{sig[1]}_{sig[2]}": hist
-                for sig, hist in wm_hist.items()},
+                for sig, hist in self._wm_hist.items()},
             pad_policies={
                 sig[2]: dataclasses.asdict(self._pad_policy(sig[2]))
-                for sig in wm_hist})
-        return results
+                for sig in self._wm_hist})
+
+    def finish(self) -> Dict[str, SearchResult]:
+        """Stop background compile-ahead work, freeze ``stats``, and
+        return every task's result keyed by resolved name."""
+        # compile-ahead jobs still queued were predicted for dispatches
+        # that will never come — stop burning cores on them
+        jax_cost.compile_ahead_quiesce()
+        self.stats = self.stats_snapshot()
+        return {st.name: self._result_for(st) for st in self._states}
+
+    def run(self) -> Dict[str, SearchResult]:
+        self.start()
+        while self.step():
+            pass
+        return self.finish()
 
 
 def run_sweep(workloads: Sequence[Workload],
@@ -802,15 +1097,21 @@ def run_sweep(workloads: Sequence[Workload],
               align_signatures: bool = True, stack_batches: bool = False,
               device_rounds: Optional[int] = None, mesh=None,
               pipeline: bool = True, compile_ahead: bool = True,
+              config: Optional[FleetConfig] = None,
               **es_kw) -> Dict[str, SearchResult]:
     """Convenience wrapper: one concurrent SparseMap search per workload
-    (e.g. the paper's Table III list) on a shared platform."""
+    (e.g. the paper's Table III list) on a shared platform.  An explicit
+    ``config`` wins over the individual fleet kwargs (which predate
+    :class:`FleetConfig` and remain for convenience)."""
+    if config is None:
+        config = FleetConfig(
+            align_signatures=align_signatures,
+            stack_batches=stack_batches, device_rounds=device_rounds,
+            mesh=mesh, pipeline=pipeline, compile_ahead=compile_ahead)
     ms = MultiSearch(
         [SearchTask(wl, platform, budget=budget, seed=seed,
                     method_kw=dict(es_kw)) for wl in workloads],
-        align_signatures=align_signatures, stack_batches=stack_batches,
-        device_rounds=device_rounds, mesh=mesh, pipeline=pipeline,
-        compile_ahead=compile_ahead)
+        config)
     return ms.run()
 
 
@@ -824,7 +1125,8 @@ def run_method_sweep(methods: Sequence[str],
                      stats_out: Optional[Dict] = None,
                      device_rounds: Optional[int] = None, mesh=None,
                      device_execute: bool = True, pipeline: bool = True,
-                     compile_ahead: bool = True
+                     compile_ahead: bool = True,
+                     config: Optional[FleetConfig] = None
                      ) -> Dict[str, Dict[str, SearchResult]]:
     """The full fig17-style grid — every method on every workload — as ONE
     concurrent :class:`MultiSearch` fleet, mega-batched per signature by
@@ -844,11 +1146,13 @@ def run_method_sweep(methods: Sequence[str],
     tasks = [SearchTask(wl, platform, budget=budget, seed=seed, method=m,
                         method_kw=dict(method_kw.get(m, {})))
              for m in methods for wl in workloads]
-    ms = MultiSearch(tasks, align_signatures=align_signatures,
-                     stack_batches=stack_batches,
-                     device_rounds=device_rounds, mesh=mesh,
-                     device_execute=device_execute, pipeline=pipeline,
-                     compile_ahead=compile_ahead)
+    if config is None:
+        config = FleetConfig(
+            align_signatures=align_signatures,
+            stack_batches=stack_batches, device_rounds=device_rounds,
+            mesh=mesh, device_execute=device_execute,
+            pipeline=pipeline, compile_ahead=compile_ahead)
+    ms = MultiSearch(tasks, config)
     flat = ms.run()
     grid: Dict[str, Dict[str, SearchResult]] = {m: {} for m in methods}
     i = 0

@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-from .density import DensityLike, DensityModel, Uniform, as_density
+from .density import (DensityLike, DensityModel, Uniform, as_density,
+                      density_from_dict, density_to_dict)
 
 WORD_BYTES = 2  # 16-bit operands throughout (paper uses 16-bit, DSTC 12nm)
 
@@ -102,7 +103,8 @@ class Workload:
         garbage-collected."""
         return (self.name, self.dim_order,
                 tuple(sorted(self.dim_sizes.items())),
-                self.tensors,
+                tuple((t.name, t.dims, t.density_model, t.is_output)
+                      for t in self.tensors),
                 tuple(sorted(self.orig_dim_sizes.items())))
 
     @property
@@ -175,6 +177,45 @@ class Workload:
         (selects the structured JAX kernel variant)."""
         return any(t.density_model.family != "uniform"
                    for t in self.tensors)
+
+
+def workload_to_dict(wl: Workload) -> Dict:
+    """JSON-able wire form of a workload — exactly the
+    :meth:`Workload.cache_key` fields, with density models serialized by
+    registered family (:func:`~repro.core.density.density_to_dict`).
+    Round-trips through :func:`workload_from_dict` to a content-equal
+    workload (same ``cache_key()``), so a deserialized server query
+    shares the sender's evaluator cache entry and warm-start library
+    key."""
+    return {
+        "name": wl.name,
+        "dim_order": list(wl.dim_order),
+        "dim_sizes": {d: int(v) for d, v in wl.dim_sizes.items()},
+        "orig_dim_sizes": {d: int(v)
+                           for d, v in wl.orig_dim_sizes.items()},
+        "tensors": [
+            {"name": t.name, "dims": list(t.dims),
+             "density": density_to_dict(t.density),
+             "is_output": bool(t.is_output)} for t in wl.tensors],
+    }
+
+
+def workload_from_dict(d: Dict) -> Workload:
+    """Inverse of :func:`workload_to_dict`."""
+    tensors = tuple(
+        TensorSpec(name=t["name"], dims=tuple(t["dims"]),
+                   density=density_from_dict(t["density"]),
+                   is_output=bool(t.get("is_output", False)))
+        for t in d["tensors"])
+    if len(tensors) != 3:
+        raise ValueError(f"workload needs exactly 3 tensors, "
+                         f"got {len(tensors)}")
+    return Workload(
+        name=d["name"], dim_order=tuple(d["dim_order"]),
+        dim_sizes={k: int(v) for k, v in d["dim_sizes"].items()},
+        tensors=tensors,  # type: ignore[arg-type]
+        orig_dim_sizes={k: int(v)
+                        for k, v in d.get("orig_dim_sizes", {}).items()})
 
 
 def spmm(name: str, m: int, k: int, n: int,

@@ -1,22 +1,71 @@
-"""Batched serving driver: prefill + decode loop with KV cache.
+"""Serving entry point: decode-serving and sweep-serving behind one CLI.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+Two modes, dispatched on the first argument:
 
-Runs greedy decoding over a batch of synthetic prompts; reports tokens/s
-and validates the cache path end to end (prefill via teacher-forced
-forward, then token-by-token decode_step).
+* ``decode`` — the batched LLM serving driver: prefill + greedy decode
+  loop with KV cache over synthetic prompts; reports tokens/s and
+  validates the cache path end to end.
+
+      PYTHONPATH=src python -m repro.launch.serve decode \
+          --arch gemma3-12b --smoke --batch 4 --prompt-len 64 --gen 32
+
+* ``sweep`` — the persistent sweep server
+  (:mod:`repro.launch.sweep_serve`): accepts streaming (workload, arch,
+  density, method, budget) queries over a local socket, coalesces
+  same-signature queries into shared mega-batch rounds, streams
+  best-so-far results, checkpoints populations and survives crashes.
+
+      PYTHONPATH=src python -m repro.launch.serve sweep \
+          --port 7333 --checkpoint-dir /tmp/sweeps
+
+Bare legacy flags (no mode word) keep selecting decode — existing
+scripts and tests predate the sweep mode.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
 
+MODES = ("decode", "sweep")
+
+_USAGE = """\
+usage: python -m repro.launch.serve <mode> [mode options]
+
+modes:
+  decode   batched LLM serving driver (prefill + greedy decode loop);
+           options: --arch --smoke --batch --prompt-len --gen
+  sweep    persistent accelerator-search sweep server (query coalescing,
+           checkpointed populations, crash recovery); options: --host
+           --port --checkpoint-dir --checkpoint-every --max-restarts
+           --no-warm-start --device-rounds --no-stack
+
+`<mode> --help` shows that mode's full options.  Legacy invocations with
+bare flags (no mode word) run decode.
+"""
+
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] in MODES:
+        if argv[0] == "sweep":
+            from . import sweep_serve
+            return sweep_serve.main(argv[1:])
+        return decode_main(argv[1:])
+    if argv[:1] in (["-h"], ["--help"]):
+        print(_USAGE)
+        return 0
+    return decode_main(argv)        # legacy: bare flags mean decode
+
+
+def decode_main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve decode",
+        description="Batched serving driver: prefill + greedy decode "
+                    "loop with KV cache over synthetic prompts; reports "
+                    "tokens/s.")
     ap.add_argument("--arch", default="gemma3-12b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -135,3 +135,43 @@ class Supervisor:
 
     def _default_restore(self, step: int, state: Any) -> Any:
         return ckpt_lib.restore(self.ckpt_dir, step, state)
+
+    def run_loop(self, make_state: Callable[[Optional[int]], Any],
+                 step_fn: Callable[[Any, int], bool],
+                 save_fn: Callable[[Any, int], None]) -> Tuple[Any, Dict]:
+        """The :meth:`run` shape generalized for open-ended supervised
+        loops whose state is NOT a fixed-shape jax tree — the sweep
+        server's fleet, for example, whose populations/histories change
+        shape every round and which finishes by its own predicate rather
+        than a step count.
+
+        ``make_state(step)`` builds (or rebuilds) the loop state — from
+        scratch when ``step`` is None, else from that checkpoint;
+        ``step_fn(state, step) -> done`` advances one step;
+        ``save_fn(state, step)`` checkpoints (called every
+        ``ckpt_every`` steps and once at completion).  On exception the
+        state is REBUILT via ``make_state(latest_step)`` — bounded by
+        ``max_restarts`` like :meth:`run`."""
+        state = make_state(ckpt_lib.latest_step(self.ckpt_dir))
+        s = 0
+        while True:
+            try:
+                t0 = time.time()
+                done = step_fn(state, s)
+                self.monitor.observe(s, time.time() - t0)
+                if done or (s + 1) % self.ckpt_every == 0:
+                    save_fn(state, s)
+                if done:
+                    break
+                s += 1
+            except Exception as e:  # noqa: BLE001 — supervised retry
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"giving up after {self.max_restarts} restarts"
+                    ) from e
+                state = make_state(ckpt_lib.latest_step(self.ckpt_dir))
+        report = dict(restarts=self.restarts,
+                      straggler_rate=self.monitor.straggler_rate,
+                      mean_step_s=self.monitor.ewma_s)
+        return state, report
